@@ -1,0 +1,80 @@
+"""Shared benchmark scaffolding: scenario, workloads, critic, CSV output.
+
+Scale: REPRO_FULL=1 runs the paper-scale request counts (Table I: 20k at
+ρ=1.0, 15k/25k at 0.75/1.25); the default is a 4× reduced load with the
+same operating points so `python -m benchmarks.run` finishes on one CPU.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import pickle
+import time
+from typing import Dict, Optional
+
+from repro.core import HAFPlacement, make_agent, train_critic
+from repro.core.critic import Critic
+from repro.core.datagen import harvest
+from repro.sim import (Simulator, WorkloadConfig, generate_workload,
+                       paper_scenario)
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ARTIFACTS = ROOT / "artifacts"
+FULL = os.environ.get("REPRO_FULL", "0") == "1"
+
+# paper request counts (Table I / §IV-3); default = /4 for CPU runtime
+REQUESTS = {0.75: 15000, 1.0: 20000, 1.25: 25000} if FULL else \
+           {0.75: 3750, 1.0: 5000, 1.25: 6250}
+
+_scenario = None
+
+
+def scenario() -> Dict:
+    global _scenario
+    if _scenario is None:
+        _scenario = paper_scenario()
+    return _scenario
+
+
+def workload(rho: float, seed: int = 0):
+    wcfg = WorkloadConfig(rho=rho, n_ai_requests=REQUESTS[rho], seed=seed)
+    return generate_workload(wcfg, scenario()["work_models"])[0]
+
+
+def get_critic(retrain: bool = False) -> Critic:
+    """The frozen critic artifact (trained offline once, reused everywhere)."""
+    path = ARTIFACTS / "critic.json"
+    if path.exists() and not retrain:
+        return Critic.load(str(path))
+    print("# training critic (offline phase: exploration + counterfactual "
+          "probes + supervised regression)...", flush=True)
+    samples = harvest(scenario(), verbose=False)
+    with open(ARTIFACTS / "critic_samples.pkl", "wb") as f:
+        pickle.dump(samples, f)
+    critic = train_critic(samples, epochs=2000, seed=0)
+    critic.save(str(path))
+    return critic
+
+
+def simulator() -> Simulator:
+    return Simulator(scenario(), epoch_interval=5.0)
+
+
+def run_method(name: str, placement, allocation, requests,
+               rr_dispatch: bool = False) -> Dict[str, float]:
+    t0 = time.time()
+    res = simulator().run(requests, placement, allocation,
+                          rr_dispatch=rr_dispatch)
+    s = res.summary()
+    s["wall_s"] = time.time() - t0
+    s["method"] = name
+    return s
+
+
+def csv_row(table: str, s: Dict) -> str:
+    return (f"{table},{s['method']},overall={s['overall']:.4f},"
+            f"ran={s['ran']:.4f},ai={s['ai']:.4f},"
+            f"large={s['large_ai']:.4f},small={s['small_ai']:.4f},"
+            f"mig={s['mig_large']}/{s['mig_total']},"
+            f"wall_s={s['wall_s']:.1f}")

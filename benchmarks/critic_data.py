@@ -1,0 +1,29 @@
+"""Critic offline-training benchmark: data harvest + supervised regression
+(§III-B).  Produces the frozen artifacts used by tests/benchmarks/serving.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+
+from benchmarks import common
+from repro.core.critic import train_critic
+from repro.core.datagen import harvest
+
+
+def main(retrain: bool = True) -> None:
+    t0 = time.time()
+    samples = harvest(common.scenario(), verbose=False)
+    t_h = time.time() - t0
+    with open(common.ARTIFACTS / "critic_samples.pkl", "wb") as f:
+        pickle.dump(samples, f)
+    t0 = time.time()
+    critic = train_critic(samples, epochs=2000, seed=0)
+    t_t = time.time() - t0
+    critic.save(str(common.ARTIFACTS / "critic.json"))
+    print(f"critic,harvest,n_samples={len(samples)},wall_s={t_h:.1f}")
+    print(f"critic,train,epochs=2000,wall_s={t_t:.1f}")
+
+
+if __name__ == "__main__":
+    main()

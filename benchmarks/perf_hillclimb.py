@@ -1,0 +1,124 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → compare.
+
+Each iteration re-lowers one (arch × cell) on the single-pod mesh with one
+change (sharding rules / remat policy / attention chunking) and records the
+delta of the three roofline terms + per-device memory.  Results append to
+``artifacts/perf_hillclimb.json``; EXPERIMENTS.md §Perf narrates them.
+
+Run AFTER the single-pod sweep (compiles contend for the one CPU core):
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb [--only cellA]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import pathlib
+import time
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+OUT = ARTIFACTS / "perf_hillclimb.json"
+
+
+def row(tag, rec):
+    r = rec["roofline"]
+    mem = rec.get("memory", {}).get("total_per_device", 0) / 2 ** 30
+    return {
+        "tag": tag, "arch": rec["arch"], "cell": rec["cell"],
+        "t_compute": r["t_compute"], "t_memory": r["t_memory"],
+        "t_collective": r["t_collective"], "bottleneck": r["bottleneck"],
+        "mem_gib": mem, "flops": r["flops"], "hbm_bytes": r["hbm_bytes"],
+        "coll_bytes": r["coll_bytes"], "compile_s": rec["compile_s"],
+    }
+
+
+def report(tag, base, new):
+    def pct(a, b):
+        return f"{(b - a) / a * 100:+.1f}%" if a else "n/a"
+    print(f"[{tag}] t_mem {base['t_memory']*1e3:.1f}->"
+          f"{new['t_memory']*1e3:.1f}ms ({pct(base['t_memory'], new['t_memory'])})  "
+          f"t_coll {base['t_collective']*1e3:.1f}->"
+          f"{new['t_collective']*1e3:.1f}ms "
+          f"({pct(base['t_collective'], new['t_collective'])})  "
+          f"t_comp {base['t_compute']*1e3:.1f}->"
+          f"{new['t_compute']*1e3:.1f}ms  "
+          f"mem/dev {base['mem_gib']:.1f}->{new['mem_gib']:.1f}GiB",
+          flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES
+    from repro.launch.dryrun import get_rules, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    results = []
+    if OUT.exists():
+        results = json.loads(OUT.read_text())
+    done = {r["tag"] for r in results}
+
+    def run(tag, arch, cell, **kw):
+        if args.only and not tag.startswith(args.only):
+            return None
+        if tag in done:
+            return next(r for r in results if r["tag"] == tag)
+        t0 = time.time()
+        rec = lower_cell(arch, SHAPES[cell], mesh, **kw)
+        r = row(tag, rec)
+        results.append(r)
+        OUT.write_text(json.dumps(results, indent=1))
+        print(f"  ({tag}: compiled in {time.time()-t0:.0f}s)", flush=True)
+        return r
+
+    # ---- Cell A: stablelm-12b decode_32k — kv_heads=8 can't shard on
+    # model=16 => cache replicated, 75 GiB/dev (OVER-HBM).  Hypothesis:
+    # flash-decoding layout (shard cache seq over "model") cuts cache bytes
+    # and HBM traffic ~16x at the cost of a logsumexp-combine collective.
+    a0 = run("cellA-baseline", "stablelm-12b", "decode_32k")
+    a1 = run("cellA-seqshard", "stablelm-12b", "decode_32k",
+             rules=get_rules("decode-seq-shard"))
+    if a0 and a1:
+        report("cellA stablelm decode_32k: seq-shard", a0, a1)
+
+    # ---- Cell B: phi3-medium-14b decode_32k — the paper-representative
+    # cell (the large-AI serving class of the HAF scenario); kv=10 also
+    # non-divisible.  Same hypothesis as A (validates transfer).
+    b0 = run("cellB-baseline", "phi3-medium-14b", "decode_32k")
+    b1 = run("cellB-seqshard", "phi3-medium-14b", "decode_32k",
+             rules=get_rules("decode-seq-shard"))
+    if b0 and b1:
+        report("cellB phi3 decode_32k: seq-shard", b0, b1)
+
+    # ---- Cell C: qwen2-0.5b train_4k — worst roofline fraction among the
+    # train cells; memory-bound with a big collective term.
+    c0 = run("cellC-baseline", "qwen2-0.5b", "train_4k")
+    # C1: block-causal q-chunking at 4k (scores materialize at 2048x4096
+    # blocks instead of the full 4096^2 mask -> ~45% fewer score bytes)
+    c1 = run("cellC-chunked-attn", "qwen2-0.5b", "train_4k",
+             cfg_overrides={"attn_chunk_threshold": 4096,
+                            "attn_chunk_q": 1024})
+    if c0 and c1:
+        report("cellC qwen2 train_4k: chunked attention", c0, c1)
+    # C2: remat=none — memory-bound cell; dropping recompute removes the
+    # second read of every saved matmul input at the cost of residency
+    c2 = run("cellC-remat-none", "qwen2-0.5b", "train_4k", remat="none")
+    if c0 and c2:
+        report("cellC qwen2 train_4k: remat none", c0, c2)
+    # C3: tiny model => FSDP all-gathers cost more than they save; replicate
+    # params (no d_model sharding), keep TP on vocab/ffn + DP on batch
+    from repro.distributed.sharding import DEFAULT_RULES
+    from repro.distributed.sharding import ShardingRules
+    no_fsdp = dict(DEFAULT_RULES)
+    no_fsdp["d_model"] = None
+    c3 = run("cellC-no-fsdp", "qwen2-0.5b", "train_4k",
+             rules=ShardingRules(tuple(no_fsdp.items())))
+    if c0 and c3:
+        report("cellC qwen2 train_4k: replicate-params (no FSDP)", c0, c3)
+
+
+if __name__ == "__main__":
+    main()

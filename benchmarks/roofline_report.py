@@ -1,0 +1,95 @@
+"""Roofline report (deliverable g): renders the dry-run JSON artifacts into
+the §Roofline table — per (arch × cell × mesh): the three terms in seconds,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs utilization, and the memory
+fit against TPU v5e HBM.
+
+Also nominates the three §Perf hillclimb cells: worst roofline fraction,
+most collective-bound, and the paper-representative serving cell.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from benchmarks import common
+
+HBM_PER_CHIP = 16 * 2 ** 30      # TPU v5e
+
+
+def load(mesh: str) -> List[Dict]:
+    path = common.ARTIFACTS / f"dryrun_{mesh}.json"
+    if not path.exists():
+        return []
+    return json.loads(path.read_text())
+
+
+def render(mesh: str) -> None:
+    recs = load(mesh)
+    if not recs:
+        print(f"roofline,{mesh},NO-ARTIFACT (run repro.launch.dryrun)")
+        return
+    ok = [r for r in recs if "error" not in r]
+    bad = [r for r in recs if "error" in r]
+    print(f"# roofline mesh={mesh}: {len(ok)} cells ok, {len(bad)} failed")
+    from repro.configs import get_config
+    from repro.launch.hlo_analysis import PEAK_FLOPS, analytic_model_flops
+    for r in sorted(ok, key=lambda r: (r["arch"], r["cell"])):
+        roof = dict(r["roofline"])
+        # recompute useful-FLOPs metrics with the attention-aware cost model
+        mf = analytic_model_flops(get_config(r["arch"]), r["kind"],
+                                  r["seq_len"], r["global_batch"]) \
+            / r["n_devices"]
+        bound_t = max(roof["t_compute"], roof["t_memory"],
+                      roof["t_collective"])
+        roof["roofline_fraction"] = (mf / PEAK_FLOPS) / bound_t \
+            if bound_t else 0.0
+        roof["flops_utilization"] = mf / roof["flops"] if roof["flops"] \
+            else 0.0
+        mem = r.get("memory", {}).get("total_per_device", 0)
+        fits = "fits" if mem <= HBM_PER_CHIP else "OVER-HBM"
+        unrolled = r.get("unrolled", True)
+        frac = (f"{roof['roofline_fraction']:.3f}" if unrolled
+                else "NA(scan)")     # scan bodies are costed once: pass/fail
+        util = (f"{roof['flops_utilization']:.3f}" if unrolled
+                else "NA(scan)")
+        print(f"roofline,{mesh},{r['arch']},{r['cell']},"
+              f"t_comp_s={roof['t_compute']:.4e},"
+              f"t_mem_s={roof['t_memory']:.4e},"
+              f"t_coll_s={roof['t_collective']:.4e},"
+              f"bound={roof['bottleneck']},"
+              f"frac={frac},util={util},"
+              f"mem_GiB={mem / 2**30:.2f},{fits}")
+    for r in bad:
+        print(f"roofline,{mesh},{r['arch']},{r['cell']},ERROR,{r['error']}")
+
+
+def hillclimb_candidates() -> Optional[List[Dict]]:
+    recs = [r for r in load("single")
+            if "error" not in r and r.get("unrolled", True)]
+    if not recs:
+        return None
+    worst = min(recs, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(recs, key=lambda r: r["roofline"]["t_collective"]
+               / max(max(r["roofline"]["t_compute"],
+                         r["roofline"]["t_memory"]), 1e-12))
+    # paper-representative: the serving decode of the large-AI service class
+    rep = next((r for r in recs if r["arch"] == "phi3-medium-14b"
+                and r["cell"] == "decode_32k"), recs[0])
+    out = [("worst-fraction", worst), ("most-collective-bound", coll),
+           ("paper-representative", rep)]
+    for tag, r in out:
+        print(f"hillclimb,{tag},{r['arch']},{r['cell']},"
+              f"bound={r['roofline']['bottleneck']},"
+              f"frac={r['roofline']['roofline_fraction']:.3f}")
+    return [r for _, r in out]
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        render(mesh)
+    hillclimb_candidates()
+
+
+if __name__ == "__main__":
+    main()

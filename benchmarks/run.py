@@ -1,0 +1,45 @@
+"""Benchmark aggregator — one section per paper table/figure + the roofline
+report.  Prints CSV lines (``table,method,metric=...``).
+
+  PYTHONPATH=src python -m benchmarks.run             # reduced-scale (CPU)
+  REPRO_FULL=1 PYTHONPATH=src python -m benchmarks.run  # paper-scale counts
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=(None, "table2", "table3", "fig2", "roofline",
+                             "alloc"))
+    args = ap.parse_args()
+    t0 = time.time()
+
+    from benchmarks import common
+    print(f"# scenario: 6 nodes, requests={common.REQUESTS} "
+          f"(REPRO_FULL={'1' if common.FULL else '0'})", flush=True)
+
+    if args.only in (None, "alloc"):
+        from benchmarks import alloc_microbench
+        alloc_microbench.main()
+    if args.only in (None, "table3"):
+        from benchmarks import table3_baselines
+        table3_baselines.main()
+    if args.only in (None, "table2"):
+        from benchmarks import table2_critic_ablation
+        table2_critic_ablation.main()
+    if args.only in (None, "fig2"):
+        from benchmarks import fig2_load_sweep
+        fig2_load_sweep.main()
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline_report
+        roofline_report.main()
+
+    print(f"# total wall time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

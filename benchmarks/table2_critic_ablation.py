@@ -1,0 +1,34 @@
+"""Table II: critic ablation across the five (stand-in) LLM agents at ρ=1.0.
+
+HAF(+Critic) vs HAF-NoCritic per agent; reports overall SLO and migration
+counts (large/total) — the critic's migration-gating effect.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import HAFPlacement, make_agent
+from repro.core.agent import AGENT_ZOO
+from repro.sim.engine import DeadlineAwareAllocation
+
+
+def main(rho: float = 1.0) -> list:
+    reqs = common.workload(rho)
+    critic = common.get_critic()
+    rows = []
+    for agent_name in AGENT_ZOO:
+        pair = {}
+        for with_critic in (True, False):
+            tag = f"{agent_name}{'+critic' if with_critic else '-nocritic'}"
+            pol = HAFPlacement(make_agent(agent_name),
+                               critic=critic if with_critic else None)
+            s = common.run_method(tag, pol, DeadlineAwareAllocation(), reqs)
+            pair["crit" if with_critic else "nc"] = s
+            rows.append(s)
+            print(common.csv_row("table2", s), flush=True)
+        gain = pair["crit"]["overall"] - pair["nc"]["overall"]
+        print(f"table2,{agent_name},critic_gain={gain:+.4f}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

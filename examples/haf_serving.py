@@ -1,0 +1,57 @@
+"""End-to-end HAF serving run (the paper's headline experiment, reduced).
+
+Runs the 6-node AI-RAN cluster at ρ=1.0 under (i) static placement and
+(ii) the full HAF stack, printing the Table-III-style comparison and the
+committed migration log.
+
+Run:  PYTHONPATH=src python examples/haf_serving.py [--requests 3000]
+"""
+import argparse
+
+from repro.core import HAFPlacement, make_agent
+from repro.core.critic import Critic, train_critic
+from repro.core.datagen import harvest
+from repro.sim import (Simulator, WorkloadConfig, generate_workload,
+                       paper_scenario)
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+import pathlib
+
+CRITIC = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / \
+    "critic.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=3000)
+    ap.add_argument("--rho", type=float, default=1.0)
+    args = ap.parse_args()
+
+    sc = paper_scenario()
+    reqs, info = generate_workload(
+        WorkloadConfig(rho=args.rho, n_ai_requests=args.requests, seed=0),
+        sc["work_models"])
+    print(f"workload: {len(reqs)} requests over {info['horizon']:.0f}s "
+          f"(λ_ai={info['lambda_ai']:.1f}/s)")
+    sim = Simulator(sc, epoch_interval=5.0)
+
+    static = sim.run(reqs, StaticPlacement(), DeadlineAwareAllocation())
+    print("\nstatic placement:", static.summary())
+
+    if CRITIC.exists():
+        critic = Critic.load(str(CRITIC))
+    else:
+        print("training critic (one-time offline phase)...")
+        critic = train_critic(harvest(sc))
+        critic.save(str(CRITIC))
+
+    haf = sim.run(reqs, HAFPlacement(make_agent("qwen3-32b-sim"),
+                                     critic=critic),
+                  DeadlineAwareAllocation())
+    print("\nHAF:", haf.summary())
+    print("\nmigration log:")
+    for t, a in haf.migrations:
+        print(f"  t={t:7.1f}s  {a.describe(sc['instances'], sc['nodes'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""The paper's contribution: HAF — hierarchical agentic resource sharing.
+
+  allocator      closed-form deadline-aware GPU/CPU allocation (Eq. 13–19)
+  allocator_np   NumPy twin for the simulator's event loop
+  placement      candidate migration generation M_k (§III-A)
+  prompts        the structured LLM prompt (§III-A)
+  agent          π_LLM interface + deterministic stand-ins (Eq. 8)
+  critic         predictive critic r̂_θ + offline training (§III-B)
+  controller     the two-layer HAF controller (Eq. 11–12)
+  baselines      HAF-Static / Round-Robin / Lyapunov / Game-Theory / CAORA
+"""
+from repro.core.allocator import (AllocResult, allocate_cluster,
+                                  allocate_node, solve_resource)
+from repro.core.agent import (AGENT_ZOO, Agent, ExternalLLMAgent,
+                              HeuristicAgent, make_agent)
+from repro.core.controller import HAFPlacement, RandomPlacement
+from repro.core.critic import Critic, train_critic, epoch_records_to_samples
+from repro.core.placement import candidate_actions, action_id
+
+__all__ = [
+    "AllocResult", "allocate_cluster", "allocate_node", "solve_resource",
+    "AGENT_ZOO", "Agent", "ExternalLLMAgent", "HeuristicAgent", "make_agent",
+    "HAFPlacement", "RandomPlacement", "Critic", "train_critic",
+    "epoch_records_to_samples", "candidate_actions", "action_id",
+]

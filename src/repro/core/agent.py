@@ -1,0 +1,176 @@
+"""LLM placement agents π_LLM (paper §III-A, Eq. 8).
+
+``ExternalLLMAgent`` drives any real LLM through ``callable(prompt) -> str``
+with the structured prompt of :mod:`repro.core.prompts` — this is the
+deployment path.  The container is offline, so experiments use deterministic
+**agent stand-ins** that emulate the paper's five open-source agents as
+policy-quality variants (scoring depth / noise / priority distortions).
+Table-II-style ablations therefore compare stand-ins, clearly labelled in
+EXPERIMENTS.md; the critic mechanism itself (the paper's claim) is exercised
+unchanged.
+
+The stand-in scoring mirrors the prompt's ordered priorities: P1 protect RAN
+floors, P2 relieve AI contention toward headroom, P3 charge the R_s outage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import prompts
+from repro.core.placement import action_id
+from repro.sim.snapshot import EpochSnapshot
+from repro.sim.types import InstanceCategory, MigrationAction
+
+
+class Agent:
+    name: str = "agent"
+
+    def shortlist(self, snap: EpochSnapshot,
+                  candidates: Sequence[Optional[MigrationAction]],
+                  K: int = 3) -> List[Optional[MigrationAction]]:
+        raise NotImplementedError
+
+
+class ExternalLLMAgent(Agent):
+    """Adapter for a real LLM: prompt in, validated ordered shortlist out."""
+
+    def __init__(self, complete: Callable[[str], str], name: str = "llm"):
+        self.complete = complete
+        self.name = name
+        self.last_prompt: Optional[str] = None
+        self.last_response: Optional[str] = None
+
+    def shortlist(self, snap, candidates, K=3):
+        prompt = prompts.build_prompt(snap, candidates, K)
+        self.last_prompt = prompt
+        text = self.complete(prompt)
+        self.last_response = text
+        out = prompts.parse_response(text, candidates, K)
+        return out or [None]
+
+
+# --------------------------------------------------------------------------- #
+# deterministic stand-ins
+# --------------------------------------------------------------------------- #
+def _service_demand_gpu_s(snap: EpochSnapshot, sid: int) -> float:
+    """Backlog of instance sid in seconds of its node's full GPU."""
+    n = snap.node_of(sid)
+    return float(snap.psi_g[sid]) / max(snap.nodes[n].gpu_flops, 1.0)
+
+
+def _node_pressure(snap: EpochSnapshot, n: int,
+                   exclude: int = -1) -> float:
+    """GPU backlog-seconds queued on node n (contended > 1)."""
+    psi = sum(float(snap.psi_g[s]) for s in range(snap.S)
+              if snap.placement[s] == n and s != exclude)
+    return psi / max(snap.nodes[n].gpu_flops, 1.0)
+
+
+@dataclasses.dataclass
+class StandInProfile:
+    """Quality knobs that differentiate the emulated agents."""
+    noise: float = 0.0            # score jitter (ranking errors)
+    ran_weight: float = 1.0       # P1 fidelity
+    outage_weight: float = 1.0    # P3 fidelity (0 => ignores R_s)
+    eagerness: float = 0.0        # constant bonus for migrating at all
+    threshold: float = 0.25       # min score to propose a migration at all
+
+
+class HeuristicAgent(Agent):
+    """Deterministic stand-in scoring candidates by the P1–P3 priorities."""
+
+    def __init__(self, name: str = "heuristic",
+                 profile: StandInProfile = StandInProfile(), seed: int = 0):
+        self.name = name
+        self.profile = profile
+        self.seed = seed
+
+    # -- the P1-P3 value model ------------------------------------------- #
+    def _score(self, snap: EpochSnapshot,
+               a: Optional[MigrationAction]) -> float:
+        if a is None:
+            return 0.0
+        p = self.profile
+        inst = snap.instances[a.sid]
+        src_n, dst_n = snap.nodes[a.src], snap.nodes[a.dst]
+        psi_s = float(snap.psi_g[a.sid])
+
+        # P2 (GPU): contention differential the service experiences, gated
+        # by its own demand (a tiny DU gains nothing from fleeing a hot
+        # node; a backlogged large-AI gains everything).  Pressure combines
+        # standing backlog with allocated utilization (streams that drain
+        # fast leave no backlog but still occupy the node), and moving to a
+        # smaller node slows the service's own backlog down.
+        src_others = (_node_pressure(snap, a.src, exclude=a.sid)
+                      + 0.5 * float(snap.gpu_util[a.src]))
+        dst_others = (_node_pressure(snap, a.dst, exclude=a.sid)
+                      + 0.5 * float(snap.gpu_util[a.dst]))
+        own_slowdown = psi_s / dst_n.gpu_flops - psi_s / src_n.gpu_flops
+        scale_g = math.tanh(psi_s / src_n.gpu_flops)
+        relief = scale_g * (src_others - dst_others - own_slowdown)
+
+        # P2 (CPU): same shape for CPU-bound instances (CU-UP)
+        psi_c = float(snap.psi_c[a.sid])
+        scale_c = math.tanh(psi_c / src_n.cpu_cores)
+        cpu_relief = scale_c * (float(snap.cpu_util[a.src])
+                                - float(snap.cpu_util[a.dst])
+                                - (psi_c / dst_n.cpu_cores
+                                   - psi_c / src_n.cpu_cores))
+
+        # P1: RAN protection — penalize moving load onto RAN-floored nodes;
+        # moving an AI service *off* a RAN-floored node relieves contention
+        # for that node's DU/CU-UP (RAN instances gain nothing by fleeing —
+        # their floors travel with them).
+        ran_risk = (snap.ran_floor_g[a.dst] + snap.ran_floor_c[a.dst])
+        ran_relief = 0.0
+        if not inst.category.is_ran:
+            ran_relief = (snap.ran_floor_g[a.src] + snap.ran_floor_c[a.src])
+        p1 = p.ran_weight * (0.3 * ran_relief - 1.0 * ran_risk)
+
+        # P3: reconfiguration cost — R_s scaled by how much traffic the
+        # service sees (arrival pressure) and its current urgency
+        rate = snap.arrival_rate.get(inst.arch, 0.0)
+        outage = p.outage_weight * inst.reconfig_s * (0.05 + 0.02 * rate)
+
+        return relief + cpu_relief + p1 - outage + p.eagerness
+
+    def _jitter(self, snap: EpochSnapshot, a, scale: float) -> float:
+        if scale <= 0:
+            return 0.0
+        key = f"{self.name}:{self.seed}:{snap.epoch}:{action_id(a)}"
+        h = int(hashlib.sha256(key.encode()).hexdigest()[:8], 16)
+        return (h / 0xFFFFFFFF - 0.5) * 2 * scale
+
+    def shortlist(self, snap, candidates, K=3):
+        scored = [(self._score(snap, a) + self._jitter(snap, a,
+                                                       self.profile.noise), a)
+                  for a in candidates if a is not None]
+        scored.sort(key=lambda x: -x[0])
+        # propose migrations only above the confidence threshold; always keep
+        # the no-migration option in the list (mirrors LLM hedging)
+        top = [a for sc, a in scored[:K - 1] if sc > self.profile.threshold]
+        top.append(None)
+        return top
+
+
+# The five emulated open-source agents from Table II, as quality variants.
+AGENT_ZOO = {
+    "qwen3-32b-sim": StandInProfile(noise=0.10),
+    "gpt-oss-20b-sim": StandInProfile(noise=0.15),
+    "qwen2.5-72b-sim": StandInProfile(noise=0.35, ran_weight=0.7),
+    "deepseek-r1-70b-sim": StandInProfile(noise=0.25, outage_weight=0.1,
+                                          eagerness=0.2, threshold=0.1),
+    "gpt-oss-120b-sim": StandInProfile(noise=0.20, ran_weight=0.3,
+                                       outage_weight=0.4, threshold=0.15),
+}
+
+
+def make_agent(name: str, seed: int = 0) -> Agent:
+    if name not in AGENT_ZOO:
+        raise KeyError(f"unknown stand-in {name!r}; known: {list(AGENT_ZOO)}")
+    return HeuristicAgent(name=name, profile=AGENT_ZOO[name], seed=seed)

@@ -1,0 +1,121 @@
+"""HAF two-layer controller (paper §III): agentic placement + critic gating.
+
+The placement layer runs at epochs: candidate generation M_k (Eq. §III-A),
+agent shortlist A_k = π_LLM(s, M_k) (Eq. 8), critic selection
+j* = argmax r̄(r̂_θ(s, a)) (Eq. 11), commit Π(y, a^{(j*)}) (Eq. 12).
+The allocation layer is the closed-form deadline-aware solve (§III-C),
+wired in by the simulator through :class:`DeadlineAwareAllocation`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.agent import Agent
+from repro.core.critic import Critic
+from repro.core.placement import candidate_actions
+from repro.sim.snapshot import EpochSnapshot
+from repro.sim.types import MigrationAction
+
+
+class HAFPlacement:
+    """The paper's placement layer. ``critic=None`` gives HAF-NoCritic."""
+
+    def __init__(self, agent: Agent, critic: Optional[Critic] = None,
+                 K: int = 3, min_score_margin: float = 0.005):
+        self.agent = agent
+        self.critic = critic
+        self.K = K
+        self.min_score_margin = min_score_margin
+        self.name = f"HAF({agent.name}{'+critic' if critic else ''})"
+        self.last_shortlist: List[Optional[MigrationAction]] = []
+        self.last_scores = None
+
+    def decide(self, snap: EpochSnapshot) -> Optional[MigrationAction]:
+        m_k = candidate_actions(snap)
+        shortlist = self.agent.shortlist(snap, m_k, self.K)
+        self.last_shortlist = [a for a in shortlist if a is not None]
+
+        if self.critic is None:
+            # HAF-NoCritic: trust the agent's top-ranked candidate
+            return shortlist[0] if shortlist else None
+
+        # critic scores the shortlist *plus* the no-migration action, so a
+        # migration must beat staying put — this is the migration gating the
+        # paper credits for the reduced migration counts (Table II).
+        options = list(shortlist)
+        if None not in options:
+            options.append(None)
+        choice, scores = self.critic.select(snap, options)
+        self.last_scores = scores
+        if choice is None:
+            return None
+        # optional hysteresis: require a margin over no-migration
+        none_idx = options.index(None)
+        chosen_idx = options.index(choice)
+        if scores[chosen_idx] < scores[none_idx] + self.min_score_margin:
+            return None
+        return choice
+
+
+class ScriptedPlacement:
+    """Commit scripted actions at given epochs (critic data + tests).
+
+    ``script``: {epoch: (instance_name, dst_node) | None}.  The action is
+    resolved against the live candidate set; infeasible entries are skipped.
+    """
+
+    def __init__(self, script):
+        self.script = dict(script)
+        self.name = "scripted"
+        self.last_shortlist: List[Optional[MigrationAction]] = []
+
+    def decide(self, snap: EpochSnapshot) -> Optional[MigrationAction]:
+        self.last_shortlist = []
+        want = self.script.get(snap.epoch)
+        if want is None:
+            return None
+        name, dst = want
+        for a in candidate_actions(snap):
+            if a is None:
+                continue
+            if snap.instances[a.sid].name == name and a.dst == dst:
+                return a
+        return None
+
+
+class RandomPlacement:
+    """Exploration policy used to harvest critic training data.
+
+    ``cooldown`` spaces migrations at least that many epochs apart so the
+    multi-interval outcome label of each action is not contaminated by the
+    next exploratory action; ``category_bias`` over-samples the decisive
+    (expensive) action types so the critic sees their outcomes.
+    """
+
+    def __init__(self, seed: int = 0, migrate_prob: float = 0.6,
+                 cooldown: int = 4, large_bias: float = 4.0):
+        import numpy as np
+        self.rng = np.random.default_rng(seed)
+        self.migrate_prob = migrate_prob
+        self.cooldown = cooldown
+        self.large_bias = large_bias
+        self._last_mig_epoch = -10**9
+        self.name = "random-explore"
+        self.last_shortlist: List[Optional[MigrationAction]] = []
+
+    def decide(self, snap: EpochSnapshot) -> Optional[MigrationAction]:
+        import numpy as np
+        self.last_shortlist = []
+        if snap.epoch - self._last_mig_epoch < self.cooldown:
+            return None
+        m_k = candidate_actions(snap)
+        migrations = [a for a in m_k if a is not None]
+        if not migrations or self.rng.random() > self.migrate_prob:
+            return None
+        w = np.array([
+            self.large_bias
+            if snap.instances[a.sid].category.value == "LARGE_AI" else 1.0
+            for a in migrations])
+        a = migrations[self.rng.choice(len(migrations), p=w / w.sum())]
+        self._last_mig_epoch = snap.epoch
+        return a

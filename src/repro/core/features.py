@@ -1,0 +1,91 @@
+"""State–action feature map φ(s_{t_k}, a) for the predictive critic (Eq. 9).
+
+Fixed-size, scale-normalized features so one critic generalizes across load
+levels.  Everything is derived from the :class:`EpochSnapshot` — the critic
+sees exactly what the agent's prompt describes, no simulator internals.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.sim.snapshot import EpochSnapshot
+from repro.sim.types import InstanceCategory, MigrationAction
+
+FEATURE_DIM = 40
+
+_CAT_IDX = {InstanceCategory.DU: 0, InstanceCategory.CUUP: 1,
+            InstanceCategory.LARGE_AI: 2, InstanceCategory.SMALL_AI: 3}
+
+
+def _log1p_scale(x: float, scale: float) -> float:
+    return math.log1p(max(x, 0.0) / scale)
+
+
+def _node_block(snap: EpochSnapshot, n: int) -> list:
+    node = snap.nodes[n]
+    on_node = [s for s in range(snap.S) if snap.placement[s] == n]
+    psi_node = float(sum(snap.psi_g[s] for s in on_node))
+    return [
+        float(snap.gpu_util[n]),
+        float(snap.cpu_util[n]),
+        float(snap.ran_floor_g[n]),
+        float(snap.ran_floor_c[n]),
+        float(snap.vram_headroom[n] / max(node.vram_bytes, 1.0)),
+        _log1p_scale(psi_node / max(node.gpu_flops, 1.0), 1.0),  # backlog-sec
+        len(on_node) / max(snap.S, 1),
+    ]
+
+
+def featurize(snap: EpochSnapshot,
+              action: Optional[MigrationAction]) -> np.ndarray:
+    """φ(s, a) → float32 [FEATURE_DIM]."""
+    f: list = []
+
+    # ---- global state (9) ------------------------------------------------ #
+    f += [float(np.mean(snap.gpu_util)), float(np.max(snap.gpu_util)),
+          float(np.mean(snap.cpu_util)), float(np.max(snap.cpu_util))]
+    total_g = float(sum(n.gpu_flops for n in snap.nodes))
+    f.append(_log1p_scale(float(np.sum(snap.psi_g)) / total_g, 1.0))
+    f.append(_log1p_scale(float(np.sum(snap.omega)), 100.0))
+    f += [snap.recent_fulfill.get("LARGE_AI", 1.0),
+          snap.recent_fulfill.get("SMALL_AI", 1.0),
+          snap.recent_fulfill.get("RAN", 1.0)]
+
+    if action is None:
+        f += [0.0] * 10                       # action block: no migration
+        f += [0.0] * 7 + [0.0] * 7            # src/dst blocks zeroed
+        f += [0.0] * 4
+    else:
+        inst = snap.instances[action.sid]
+        cat = np.zeros(4)
+        cat[_CAT_IDX[inst.category]] = 1.0
+        q_s = float(snap.psi_g[action.sid])
+        src_n, dst_n = snap.nodes[action.src], snap.nodes[action.dst]
+        # ---- action block (10) ------------------------------------------ #
+        f += [1.0, *cat.tolist(),
+              _log1p_scale(inst.reconfig_s, 1.0),              # R_s
+              _log1p_scale(inst.weight_bytes, 1e9),            # M_s
+              _log1p_scale(float(snap.kv_held[action.sid]), 1e9),
+              _log1p_scale(float(snap.queue_len[action.sid]), 10.0),
+              _log1p_scale(q_s / max(dst_n.gpu_flops, 1.0), 1.0)]
+        # ---- source / destination node blocks (7 + 7) -------------------- #
+        f += _node_block(snap, action.src)
+        f += _node_block(snap, action.dst)
+        # ---- derived interaction terms (4) -------------------------------- #
+        f += [
+            float(snap.gpu_util[action.src] - snap.gpu_util[action.dst]),
+            float(snap.cpu_util[action.src] - snap.cpu_util[action.dst]),
+            _log1p_scale(q_s / max(src_n.gpu_flops, 1.0), 1.0)
+            - _log1p_scale(q_s / max(dst_n.gpu_flops, 1.0), 1.0),
+            # outage cost proxy: R_s × service arrival pressure
+            _log1p_scale(inst.reconfig_s
+                         * snap.arrival_rate.get(inst.arch, 0.0), 1.0),
+        ]
+
+    # pad/trim to FEATURE_DIM
+    if len(f) < FEATURE_DIM:
+        f += [0.0] * (FEATURE_DIM - len(f))
+    return np.asarray(f[:FEATURE_DIM], np.float32)

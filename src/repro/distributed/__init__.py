@@ -1,0 +1,18 @@
+"""Distribution substrate: sharding rules, checkpointing, compression,
+failure handling — the large-scale-runnability layer (deliverable: design
+for 1000+ nodes; the dry-run proves the 512-chip configuration)."""
+from repro.distributed.sharding import (ShardingRules, DEFAULT_RULES,
+                                        spec_for, params_shardings,
+                                        batch_sharding, tree_shardings)
+from repro.distributed.checkpoint import (save_checkpoint, restore_checkpoint,
+                                          latest_step)
+from repro.distributed.compression import (compress_int8, decompress_int8,
+                                           CompressionState,
+                                           compressed_gradients)
+
+__all__ = [
+    "ShardingRules", "DEFAULT_RULES", "spec_for", "params_shardings",
+    "batch_sharding", "tree_shardings", "save_checkpoint",
+    "restore_checkpoint", "latest_step", "compress_int8", "decompress_int8",
+    "CompressionState", "compressed_gradients",
+]

@@ -1,0 +1,152 @@
+"""Logical-axis → mesh-axis sharding rules (FSDP + TP, MaxText-style).
+
+Every ParamDef carries logical axis names; the rules below map them onto
+the production mesh axes ("pod", "data", "model").  Parameters shard
+FSDP-style on "data" along d_model and tensor-parallel on "model" along
+heads / ffn / experts / vocab; "pod" is pure data parallelism.  Where a
+dimension is not divisible by its mesh axis (qwen2's 14 heads on model=16,
+mamba2's 24 SSD heads), the rule falls back to replication for that dim —
+recorded per-tensor by ``spec_report``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+# logical axis -> preferred mesh axis (None = replicate)
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "experts": "model",       # expert parallelism shares the TP axis
+    "d_inner": "model",
+    "ssm_heads": "model",
+    "d_model": "data",        # FSDP: shard the residual dim over data
+    "batch": ("pod", "data"),
+    "kv_seq": None,           # decode KV-cache seq; "model" = flash-decoding
+    "layers": None,           # scan dim — never sharded
+    "shared_blocks": None,
+    "groups": None,
+}
+
+# §Perf variant: flash-decoding layout — decode caches shard the sequence
+# dim over "model" (each chip holds S/16 of every head's cache and computes
+# partial attention; XLA inserts the logsumexp-combine collectives).  Wins
+# whenever kv_heads can't use the model axis (MLA: no heads; GQA with
+# kv_heads % 16 != 0: phi3's 10, stablelm's 8).
+DECODE_SEQ_SHARD = dict(DEFAULT_RULES)
+DECODE_SEQ_SHARD["kv_seq"] = "model"
+DECODE_SEQ_SHARD["kv_heads"] = None        # seq owns the model axis
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, Any], ...] = tuple(DEFAULT_RULES.items())
+
+    def lookup(self, name: Optional[str]):
+        if name is None:
+            return None
+        return dict(self.rules).get(name, None)
+
+    def replace(self, **kw) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return ShardingRules(tuple(d.items()))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh, rules: ShardingRules = ShardingRules()) -> P:
+    """PartitionSpec for one tensor, replicating non-divisible dims.
+
+    Each mesh axis is used at most once per tensor (XLA requirement).
+    """
+    used: set = set()
+    out: List[Any] = []
+    for dim, name in zip(shape, axes):
+        mesh_axis = rules.lookup(name)
+        flat = tuple(a for a in (mesh_axis if isinstance(mesh_axis, tuple)
+                                 else (mesh_axis,) if mesh_axis else ())
+                     if a in mesh.shape)        # drop axes absent from mesh
+        mesh_axis = (flat if len(flat) > 1 else flat[0] if flat else None)
+        ok = (mesh_axis is not None
+              and not any(a in used for a in flat)
+              and dim % _axis_size(mesh, mesh_axis) == 0)
+        if ok:
+            out.append(mesh_axis)
+            used.update(flat)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(defs_axes: Tree, defs_shapes: Tree, mesh: Mesh,
+                   rules: ShardingRules = ShardingRules()) -> Tree:
+    """Map (axes tree, shape tree) -> NamedSharding tree."""
+    def one(axes, spec):
+        return NamedSharding(mesh, spec_for(tuple(spec.shape), axes, mesh,
+                                            rules))
+    return jax.tree.map(one, defs_axes, defs_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def params_shardings(model, mesh: Mesh,
+                     rules: ShardingRules = ShardingRules()) -> Tree:
+    """NamedSharding tree for a repro.models Model's parameters."""
+    return tree_shardings(model.param_axes(), model.param_specs(), mesh,
+                          rules)
+
+
+def cache_shardings(model, mesh: Mesh, batch: int, seq: int,
+                    rules: ShardingRules = ShardingRules()) -> Tree:
+    return tree_shardings(model.cache_axes(batch, seq),
+                          model.cache_specs(batch, seq), mesh, rules)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2,
+                   rules: ShardingRules = ShardingRules()) -> NamedSharding:
+    """Input batches shard the leading (batch) dim over pod×data."""
+    axis = rules.lookup("batch")
+    flat = [a for a in (axis if isinstance(axis, tuple) else (axis,))
+            if a in mesh.shape]
+    spec = P(tuple(flat) if len(flat) > 1 else (flat[0] if flat else None),
+             *([None] * (ndim - 1)))
+    return NamedSharding(mesh, spec)
+
+
+def spec_report(model, mesh: Mesh,
+                rules: ShardingRules = ShardingRules()) -> List[str]:
+    """Human-readable list of tensors that fell back to replication."""
+    lines = []
+    axes = model.param_axes()
+    specs = model.param_specs()
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_s = jax.tree.leaves(specs)
+    paths = jax.tree.flatten_with_path(
+        specs)[0]
+    for (path, spec), ax in zip(paths, flat_a):
+        p = spec_for(tuple(spec.shape), ax, mesh, rules)
+        want = [rules.lookup(a) for a in ax]
+        got = list(p) + [None] * (len(ax) - len(p))
+        for i, (w, g) in enumerate(zip(want, got)):
+            if w is not None and g is None:
+                lines.append(
+                    f"{jax.tree_util.keystr(path)} dim{i} ({ax[i]}={spec.shape[i]})"
+                    f" replicated (not divisible by {w})")
+    return lines

@@ -1,0 +1,118 @@
+"""Blockwise online-softmax causal GQA attention (FlashAttention for TPU).
+
+HBM→VMEM tiling: the grid is (batch·heads, q_blocks, k_blocks) with the
+k dimension sequential ("arbitrary"), carrying the running max / denominator
+/ fp32 accumulator across k iterations in VMEM scratch.  Block shapes are
+MXU-aligned (128-multiples where the sequence allows; the head dim is the
+lane dimension).  GQA is handled in the k/v index maps — repeated KV heads
+are never materialized in HBM or VMEM.
+
+Fully-masked upper-triangle blocks are skipped with ``pl.when`` (zero MXU
+work, though the grid slot still exists; see EXPERIMENTS.md §Perf for the
+fused-causal-grid follow-up).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  n_k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                 # [bk, d]
+        v = v_ref[0].astype(jnp.float32)                 # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)                   # [bq, 1]
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the diagonal (fully masked)
+        pl.when(ki * block_k <= qi * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q [BH, S, d]; k, v [BKV, S, d] with BH = B·H, BKV = B·KV -> [BH, S, d]."""
+    BH, S, d = q.shape
+    BKV = k.shape[0]
+    assert BH % BKV == 0, (BH, BKV)
+    group = BH // BKV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q = S // block_q
+    n_k = S // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, n_k_blocks=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki: (bh // group, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki: (bh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # denominator l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

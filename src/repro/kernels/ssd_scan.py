@@ -1,0 +1,111 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+Grid: (batch·heads, chunks) with the chunk dimension sequential, carrying
+the [head_dim, d_state] SSM state across chunks in fp32 VMEM scratch.  Each
+chunk does the quadratic intra-chunk form (two MXU matmuls through the
+lower-triangular decay mask) plus the carried-state contribution — the SSD
+decomposition of arXiv:2405.21060 §6, re-tiled for VMEM:
+
+  working set per grid step (l=256, p=64, n=128, fp32):
+    x block 64 KB, B/C blocks 128 KB, decay L matrix 256 KB, state 32 KB
+  — comfortably inside the ~16 MB/core VMEM budget, MXU-aligned on (l, n).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_scr, *, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [l, p]
+    dt = dt_ref[0].astype(jnp.float32)        # [l, 1]  (kept 2D for TPU)
+    A = a_ref[0, 0]                           # scalar decay rate (this head)
+    B = b_ref[0].astype(jnp.float32)          # [l, n]
+    C = c_ref[0].astype(jnp.float32)          # [l, n]
+
+    dA = dt[:, 0] * A                         # [l] log-decay increments
+    csum = jnp.cumsum(dA)                     # [l]
+
+    # intra-chunk: Y_diag = ((C B^T) ⊙ L) (dt ⊙ x) with L the segsum decay
+    diff = csum[:, None] - csum[None, :]      # [l, l] sum_{j=s+1..t}
+    l_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1)
+    Lmat = jnp.where(l_idx >= s_idx, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    xdt = x * dt                              # [l, p]
+    y = jax.lax.dot_general(scores * Lmat, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # carried-state contribution: y += exp(csum) * (C @ state^T)
+    state = state_scr[...]                    # [p, n]
+    y_off = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(csum)[:, None]
+
+    # state update: state' = exp(total) * state + Σ_t exp(total−csum_t) dt x B
+    total = csum[-1]
+    w = jnp.exp(total - csum)[:, None] * xdt  # [l, p]
+    new_state = state * jnp.exp(total) + jax.lax.dot_general(
+        w, B, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_scr[...] = new_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0] = new_state.astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bhsp(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                  C: jax.Array, *, chunk: int = 256,
+                  interpret: bool = False):
+    """x [BH, S, p]; dt [BH, S, 1]; A [BH, 1]; B, C [BH, S, n].
+
+    BH = batch·heads; group broadcasting (B/C shared across head groups) is
+    resolved by the caller's index arithmetic (see ops.ssd_scan).
+    Returns (y [BH, S, p], final_state [BH, p, n]).
+    """
+    BH, S, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, p), x.dtype),
+            jax.ShapeDtypeStruct((BH, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, state

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# 512-device multi-pod dry-run (deliverable e) + roofline capture (g).
+#
+# (The XLA_FLAGS assignment above MUST precede every other import — jax
+# locks the host device count at first initialization.)
+"""512-device multi-pod dry-run (deliverable e) + roofline capture (g).
+
+For every (architecture × shape cell × mesh) this lowers and compiles the
+real step function — train_step (fwd+bwd+AdamW), prefill, or serve_step —
+against ShapeDtypeStruct stand-ins (nothing is allocated), prints the
+memory/cost analysis, parses the post-SPMD collective traffic, and appends
+the per-cell record to ``artifacts/dryrun_<mesh>.json`` (incrementally, so
+an interrupted sweep resumes where it stopped).
+
+Run:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --mesh single
+"""
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, ShapeCell, cells_for, get_config
+from repro.distributed.sharding import (ShardingRules, params_shardings,
+                                        cache_shardings, spec_for)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import Model
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import adamw_init
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def batch_specs_shardings(model: Model, cell: ShapeCell, mesh,
+                          rules: ShardingRules):
+    """(ShapeDtypeStruct dict, NamedSharding dict) for the cell's inputs."""
+    specs = model.input_specs(cell)
+    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    size = 1
+    for a in batch_axes:
+        size *= mesh.shape[a]
+    shardings = {}
+    for k, s in specs.items():
+        if s.ndim == 0 or s.shape[0] % size != 0:
+            # batch smaller than the dp extent (long_500k B=1): replicate
+            shardings[k] = NamedSharding(mesh, P())
+        else:
+            dims = [batch_axes if len(batch_axes) > 1 else batch_axes[0]]
+            dims += [None] * (s.ndim - 1)
+            shardings[k] = NamedSharding(mesh, P(*dims))
+    return specs, shardings
+
+
+def _tree_struct_of(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if not isinstance(x, jax.ShapeDtypeStruct) else x, tree)
+
+
+def opt_specs_shardings(param_specs, p_shardings, mesh):
+    """AdamW state: m/v shard like params (fp32), step replicated."""
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    m = jax.tree.map(f32, param_specs)
+    v = jax.tree.map(f32, param_specs)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    from repro.train.optimizer import AdamWState
+    specs = AdamWState(step=step, m=m, v=v)
+    shardings = AdamWState(step=NamedSharding(mesh, P()),
+                           m=p_shardings, v=p_shardings)
+    return specs, shardings
+
+
+RULE_SETS = {
+    "default": None,   # filled below to avoid import-order issues
+    "decode-seq-shard": None,
+}
+
+
+def get_rules(name: str) -> ShardingRules:
+    from repro.distributed.sharding import DECODE_SEQ_SHARD, DEFAULT_RULES
+    if name == "decode-seq-shard":
+        return ShardingRules(tuple(DECODE_SEQ_SHARD.items()))
+    return ShardingRules(tuple(DEFAULT_RULES.items()))
+
+
+def lower_cell(arch: str, cell: ShapeCell, mesh, *,
+               rules: ShardingRules = ShardingRules(),
+               remat: str = "dots", unroll: bool = True,
+               cfg_overrides: Optional[Dict] = None) -> Dict:
+    """Lower + compile one (arch, cell, mesh); return the dry-run record.
+
+    ``unroll=True`` lowers the layer stacks fully unrolled so that XLA's
+    cost/memory analysis sees every layer (a scan body is costed once).
+    ``cfg_overrides`` lets the §Perf loop vary lowering knobs
+    (attn_chunk_threshold, dtypes, ...) without touching the registry.
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    if unroll:
+        cfg = _dc.replace(cfg, scan_unroll=10_000)
+    model = Model(cfg, impl="xla", remat=remat)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    p_specs = model.param_specs()
+    p_shardings = params_shardings(model, mesh, rules)
+    b_specs, b_shardings = batch_specs_shardings(model, cell, mesh, rules)
+
+    n_active = cfg.active_param_count()
+    model_flops = hlo_analysis.analytic_model_flops(
+        cfg, cell.kind, cell.seq_len, cell.global_batch)
+
+    with mesh:
+        if cell.kind == "train":
+            tc = TrainConfig(steps=1000)
+            step_fn = make_train_step(model, tc, compress=False)
+            o_specs, o_shardings = opt_specs_shardings(p_specs, p_shardings,
+                                                       mesh)
+            fn = jax.jit(step_fn,
+                         in_shardings=(p_shardings, o_shardings, b_shardings,
+                                       None))
+            lowered = fn.lower(p_specs, o_specs, b_specs, None)
+        elif cell.kind == "prefill":
+            fn = jax.jit(model.prefill,
+                         in_shardings=(p_shardings, b_shardings))
+            lowered = fn.lower(p_specs, b_specs)
+        else:   # decode
+            c_specs = model.cache_specs(cell.global_batch, cell.seq_len)
+            c_shardings = cache_shardings(model, mesh, cell.global_batch,
+                                          cell.seq_len, rules)
+            fn = jax.jit(model.decode_step,
+                         in_shardings=(p_shardings, c_shardings,
+                                       b_shardings))
+            lowered = fn.lower(p_specs, c_specs, b_specs)
+
+        compiled = lowered.compile()
+
+    hlo = compiled.as_text()
+    roof = hlo_analysis.analyze(compiled, hlo,
+                                model_flops=model_flops / n_dev)
+    mem = hlo_analysis.memory_stats(compiled)
+    rec = {
+        "arch": arch,
+        "cell": cell.name,
+        "kind": cell.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": n_dev,
+        "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "params": cfg.param_count(),
+        "active_params": n_active,
+        "compile_s": round(time.time() - t0, 1),
+        "remat": remat,
+        "unrolled": unroll,
+        "memory": mem,
+        "roofline": roof.to_dict(),
+    }
+    return rec
+
+
+def run_sweep(archs, mesh_mode: str, out_dir: pathlib.Path,
+              only_cell: Optional[str] = None, force: bool = False,
+              remat: str = "dots", unroll: bool = True,
+              rules: ShardingRules = ShardingRules()) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = []
+    if mesh_mode in ("single", "both"):
+        meshes.append(("single", dict(multi_pod=False)))
+    if mesh_mode in ("multi", "both"):
+        meshes.append(("multi", dict(multi_pod=True)))
+
+    for mesh_name, kw in meshes:
+        out_path = out_dir / f"dryrun_{mesh_name}.json"
+        records = {}
+        if out_path.exists():
+            records = {(r["arch"], r["cell"]): r
+                       for r in json.loads(out_path.read_text())}
+        mesh = make_production_mesh(**kw)
+        print(f"== mesh {mesh_name}: {dict(mesh.shape)} "
+              f"({mesh.size} devices) ==", flush=True)
+        for arch in archs:
+            for cell in cells_for(arch):
+                if only_cell and cell.name != only_cell:
+                    continue
+                key = (arch, cell.name)
+                if key in records and not force \
+                        and "error" not in records[key]:
+                    continue
+                try:
+                    rec = lower_cell(arch, cell, mesh, remat=remat,
+                                     unroll=unroll, rules=rules)
+                    r = rec["roofline"]
+                    hbm = rec["memory"].get("total_per_device", 0) / 2**30
+                    print(f"[{mesh_name}] {arch:24s} {cell.name:12s} "
+                          f"compile={rec['compile_s']:6.1f}s "
+                          f"mem/dev={hbm:6.2f}GiB "
+                          f"t_comp={r['t_compute']*1e3:8.2f}ms "
+                          f"t_mem={r['t_memory']*1e3:8.2f}ms "
+                          f"t_coll={r['t_collective']*1e3:8.2f}ms "
+                          f"bound={r['bottleneck']:10s} "
+                          f"frac={r['roofline_fraction']:.3f}", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "cell": cell.name,
+                           "mesh": mesh_name, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[{mesh_name}] {arch} {cell.name} FAILED: "
+                          f"{rec['error']}", flush=True)
+                records[key] = rec
+                out_path.write_text(json.dumps(
+                    list(records.values()), indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--cell", default=None, help="one cell name")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="scan lowering (fast compile; per-layer costs are "
+                         "counted once — use for pass/fail sharding proof, "
+                         "not for roofline capture)")
+    ap.add_argument("--rules", default="default",
+                    choices=tuple(RULE_SETS), help="sharding rule set")
+    args = ap.parse_args()
+    if args.arch:
+        archs = [a.strip() for a in args.arch.split(",") if a.strip()]
+    else:
+        archs = ARCH_NAMES
+    run_sweep(archs, args.mesh, pathlib.Path(args.out),
+              only_cell=args.cell, force=args.force, remat=args.remat,
+              unroll=not args.no_unroll, rules=get_rules(args.rules))
+
+
+if __name__ == "__main__":
+    main()

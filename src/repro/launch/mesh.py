@@ -1,0 +1,24 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state — the 512-device dry-run must set XLA_FLAGS before
+the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(min(model, n // data), 1)
+    return jax.make_mesh((data, model), ("data", "model"))

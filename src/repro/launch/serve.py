@@ -1,0 +1,83 @@
+"""HAF-orchestrated serving launcher (the paper's deployment shape).
+
+Runs the AI-RAN cluster with the full HAF stack — agentic placement layer
+(stand-in or external LLM via --llm-cmd), frozen critic, deadline-aware
+allocation — against an Azure-like workload, and reports class-resolved
+SLO fulfillment + migration counts.
+
+  PYTHONPATH=src python -m repro.launch.serve --rho 1.0 --requests 5000
+  PYTHONPATH=src python -m repro.launch.serve --agent deepseek-r1-70b-sim \
+      --no-critic
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+
+from repro.core import HAFPlacement, make_agent
+from repro.core.agent import ExternalLLMAgent
+from repro.core.critic import Critic, train_critic
+from repro.core.datagen import harvest
+from repro.sim import (Simulator, WorkloadConfig, generate_workload,
+                       paper_scenario)
+from repro.sim.engine import DeadlineAwareAllocation
+
+DEFAULT_CRITIC = pathlib.Path(__file__).resolve().parents[3] / \
+    "artifacts" / "critic.json"
+
+
+def get_critic(path: str, scenario) -> Critic:
+    p = pathlib.Path(path)
+    if p.exists():
+        return Critic.load(str(p))
+    print("[serve] no critic artifact — training one (offline phase)")
+    samples = harvest(scenario, verbose=True)
+    critic = train_critic(samples)
+    critic.save(str(p))
+    return critic
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rho", type=float, default=1.0)
+    ap.add_argument("--requests", type=int, default=5000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--agent", default="qwen3-32b-sim")
+    ap.add_argument("--llm-cmd", default=None,
+                    help="external LLM: shell command reading the prompt on "
+                         "stdin and writing the JSON shortlist to stdout")
+    ap.add_argument("--no-critic", action="store_true")
+    ap.add_argument("--critic-path", default=str(DEFAULT_CRITIC))
+    ap.add_argument("--epoch-interval", type=float, default=5.0)
+    args = ap.parse_args()
+
+    sc = paper_scenario()
+    wcfg = WorkloadConfig(rho=args.rho, n_ai_requests=args.requests,
+                          seed=args.seed)
+    requests, info = generate_workload(wcfg, sc["work_models"])
+    print(f"[serve] λ_ai={info['lambda_ai']:.1f}/s "
+          f"horizon={info['horizon']:.0f}s")
+
+    if args.llm_cmd:
+        def complete(prompt: str) -> str:
+            return subprocess.run(args.llm_cmd, shell=True, input=prompt,
+                                  capture_output=True, text=True,
+                                  timeout=120).stdout
+        agent = ExternalLLMAgent(complete, name=f"external({args.llm_cmd})")
+    else:
+        agent = make_agent(args.agent, seed=args.seed)
+
+    critic = None if args.no_critic else get_critic(args.critic_path, sc)
+    policy = HAFPlacement(agent, critic=critic)
+    sim = Simulator(sc, epoch_interval=args.epoch_interval)
+    res = sim.run(requests, policy, DeadlineAwareAllocation())
+    s = res.summary()
+    print(json.dumps(s, indent=2))
+    for t, a in res.migrations:
+        print(f"  t={t:8.1f}s {a.describe(sc['instances'], sc['nodes'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Fault-tolerant training launcher.
+
+Examples (CPU container):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --preset 100m \
+      --steps 200 --checkpoint-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --preset smoke
+
+On a fleet the same entry point runs under the cluster scheduler with the
+production mesh; here it uses however many host devices exist.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataPipeline
+from repro.launch.mesh import make_debug_mesh
+from repro.models.api import Model
+from repro.train.loop import TrainConfig, train
+
+
+def preset_config(arch: str, preset: str) -> ArchConfig:
+    if preset == "full":
+        return get_config(arch)
+    if preset == "smoke":
+        return smoke_config(arch)
+    if preset == "100m":
+        cfg = get_config(arch)
+        kw = dict(name=cfg.name + "-100m", num_layers=12, d_model=768,
+                  vocab_size=32000, param_dtype="float32",
+                  compute_dtype="float32")
+        if cfg.family not in ("ssm",):
+            kw.update(num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048)
+        if cfg.moe is not None:
+            kw["moe"] = dataclasses.replace(cfg.moe, num_experts=8, top_k=2,
+                                            d_ff_expert=512,
+                                            first_dense_layers=1,
+                                            d_ff_dense=2048)
+        if cfg.mla is not None:
+            kw["mla"] = dataclasses.replace(cfg.mla, q_lora_rank=0,
+                                            kv_lora_rank=128,
+                                            qk_nope_head_dim=64,
+                                            qk_rope_head_dim=32,
+                                            v_head_dim=64)
+        return dataclasses.replace(cfg, **kw)
+    raise ValueError(preset)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--preset", default="100m",
+                    choices=("smoke", "100m", "full"))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    args = ap.parse_args()
+
+    cfg = preset_config(args.arch, args.preset)
+    model = Model(cfg, remat=args.remat)
+    print(f"[launch] {cfg.name}: {model.param_count()/1e6:.1f}M params")
+    pipeline = DataPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                            global_batch=args.global_batch)
+    tc = TrainConfig(steps=args.steps, peak_lr=args.lr,
+                     checkpoint_every=args.checkpoint_every,
+                     checkpoint_dir=args.checkpoint_dir,
+                     compress_grads=args.compress_grads)
+    hist = train(model, pipeline, tc)
+    print(f"[launch] done: loss {hist['loss'][0]:.3f} -> "
+          f"{hist['loss'][-1]:.3f} over {len(hist['loss'])} steps; "
+          f"restarts={hist['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Unified model API over all families.
+
+``Model`` exposes:
+  param_defs() / param_specs() / init(rng)    — declarative params
+  loss(params, batch)                          — train objective
+  forward(params, batch)                       — full-seq logits
+  prefill(params, batch)                       — prompt -> (logits, cache)
+  decode_step(params, cache, batch)            — one token -> (logits, cache)
+  cache_defs(batch, seq) / input_specs(cell)   — ShapeDtypeStruct stand-ins
+
+All functions are pure and jit/pjit friendly; nothing allocates at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell, get_config
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.common import (ParamDef, cross_entropy_loss, init_params,
+                                 scan_layers,
+                                 param_axes, param_count_tree, param_specs,
+                                 rms_norm, stack_defs)
+
+Tree = Any
+
+
+# --------------------------------------------------------------------------- #
+# pure-SSM LM (mamba2)
+# --------------------------------------------------------------------------- #
+def _ssm_lm_defs(cfg: ArchConfig) -> Dict[str, Tree]:
+    V, D = cfg.padded_vocab, cfg.d_model
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "d_model"), init="small_normal"),
+        "final_norm": ParamDef((D,), ("d_model",), init="ones"),
+        "layers": stack_defs(ssm.ssm_defs(cfg), cfg.num_layers),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((D, V), ("d_model", "vocab"))
+    return defs
+
+
+def _ssm_lm_logits(params, h, cfg):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+def _ssm_lm_forward(params, batch, cfg, impl="xla", remat="none"):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+
+    def body(carry, lp):
+        return carry + ssm.ssm_forward(lp, carry, cfg, impl=impl), None
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = scan_layers(body, h, params["layers"], cfg)
+    return _ssm_lm_logits(params, h, cfg)
+
+
+def _ssm_lm_prefill(params, batch, cfg, impl="xla"):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+
+    def body(carry, lp):
+        out, state = ssm.ssm_forward(lp, carry, cfg, return_state=True,
+                                     impl=impl)
+        return carry + out, state
+    h, states = scan_layers(body, h, params["layers"], cfg)
+    return _ssm_lm_logits(params, h[:, -1:, :], cfg), {"layers": states}
+
+
+def _ssm_lm_decode(params, cache, batch, cfg):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+
+    def body(carry, xs):
+        lp, lcache = xs
+        out, new_cache = ssm.ssm_decode(lp, carry, lcache, cfg)
+        return carry + out, new_cache
+    h, new_cache = scan_layers(body, h, (params["layers"], cache["layers"]), cfg)
+    return _ssm_lm_logits(params, h, cfg), {"layers": new_cache}
+
+
+def _ssm_cache_defs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    s = cfg.ssm
+    D = cfg.d_model
+    H, P, N = s.n_heads(D), s.head_dim, s.d_state
+    conv_dim = s.d_inner(D) + 2 * s.n_groups * s.d_state
+    per_layer = {
+        "ssm": ParamDef((batch, H, P, N), ("batch", "ssm_heads", None, None),
+                        init="zeros"),
+        "conv": ParamDef((batch, s.d_conv - 1, conv_dim),
+                         ("batch", None, "d_inner"), init="zeros"),
+    }
+    return {"layers": stack_defs(per_layer, cfg.num_layers)}
+
+
+# --------------------------------------------------------------------------- #
+# unified wrapper
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    impl: str = "xla"        # attention/ssd lowering: "xla" | "flash"/"pallas"
+    remat: str = "dots"      # train-time activation checkpointing policy
+
+    # ---- params ---- #
+    def param_defs(self) -> Tree:
+        f = self.cfg.family
+        if f == "ssm":
+            return _ssm_lm_defs(self.cfg)
+        if f == "hybrid":
+            return hybrid.hybrid_defs(self.cfg)
+        if f == "audio":
+            return encdec.encdec_defs(self.cfg)
+        return transformer.lm_defs(self.cfg)
+
+    def param_specs(self) -> Tree:
+        return param_specs(self.param_defs(), jnp.dtype(self.cfg.param_dtype))
+
+    def param_axes(self) -> Tree:
+        return param_axes(self.param_defs())
+
+    def init(self, rng: jax.Array) -> Tree:
+        return init_params(self.param_defs(), rng,
+                           jnp.dtype(self.cfg.param_dtype))
+
+    def param_count(self) -> int:
+        return param_count_tree(self.param_defs())
+
+    # ---- compute ---- #
+    def loss(self, params: Tree, batch: Dict) -> jax.Array:
+        f = self.cfg.family
+        if f == "ssm":
+            logits = _ssm_lm_forward(params, batch, self.cfg, self.impl,
+                                     self.remat)
+            return cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+        if f == "hybrid":
+            return hybrid.hybrid_loss(params, batch, self.cfg, impl=self.impl,
+                                      remat=self.remat)
+        if f == "audio":
+            return encdec.encdec_loss(params, batch, self.cfg, impl=self.impl,
+                                      remat=self.remat)
+        return transformer.lm_loss(params, batch, self.cfg, impl=self.impl,
+                                   remat=self.remat)
+
+    def forward(self, params: Tree, batch: Dict) -> jax.Array:
+        f = self.cfg.family
+        if f == "ssm":
+            return _ssm_lm_forward(params, batch, self.cfg, self.impl, "none")
+        if f == "hybrid":
+            return hybrid.hybrid_forward(params, batch, self.cfg,
+                                         impl=self.impl)
+        if f == "audio":
+            return encdec.encdec_forward(params, batch, self.cfg,
+                                         impl=self.impl)
+        logits, _ = transformer.lm_forward(params, batch, self.cfg,
+                                           impl=self.impl)
+        return logits
+
+    def prefill(self, params: Tree, batch: Dict) -> Tuple[jax.Array, Tree]:
+        f = self.cfg.family
+        if f == "ssm":
+            return _ssm_lm_prefill(params, batch, self.cfg, self.impl)
+        if f == "hybrid":
+            return hybrid.hybrid_prefill(params, batch, self.cfg,
+                                         impl=self.impl)
+        if f == "audio":
+            return encdec.encdec_prefill(params, batch, self.cfg,
+                                         impl=self.impl)
+        return transformer.lm_prefill(params, batch, self.cfg, impl=self.impl)
+
+    def decode_step(self, params: Tree, cache: Tree, batch: Dict
+                    ) -> Tuple[jax.Array, Tree]:
+        f = self.cfg.family
+        if f == "ssm":
+            return _ssm_lm_decode(params, cache, batch, self.cfg)
+        if f == "hybrid":
+            return hybrid.hybrid_decode_step(params, cache, batch, self.cfg)
+        if f == "audio":
+            return encdec.encdec_decode_step(params, cache, batch, self.cfg)
+        return transformer.lm_decode_step(params, cache, batch, self.cfg)
+
+    # ---- caches & inputs ---- #
+    def cache_defs(self, batch: int, seq: int) -> Tree:
+        f = self.cfg.family
+        if f == "ssm":
+            return _ssm_cache_defs(self.cfg, batch, seq)
+        if f == "hybrid":
+            return hybrid.hybrid_cache_defs(self.cfg, batch, seq)
+        if f == "audio":
+            return encdec.encdec_cache_defs(self.cfg, batch, seq)
+        return transformer.lm_cache_defs(self.cfg, batch, seq)
+
+    def cache_specs(self, batch: int, seq: int) -> Tree:
+        return param_specs(self.cache_defs(batch, seq),
+                           jnp.dtype(self.cfg.compute_dtype))
+
+    def cache_axes(self, batch: int, seq: int) -> Tree:
+        return param_axes(self.cache_defs(batch, seq))
+
+    def init_cache(self, batch: int, seq: int) -> Tree:
+        return init_params(self.cache_defs(batch, seq), jax.random.PRNGKey(0),
+                           jnp.dtype(self.cfg.compute_dtype))
+
+    def pad_cache(self, cache: Tree, max_len: int) -> Tree:
+        """Pad prefill KV tables along the sequence axis to ``max_len``.
+
+        Prefill emits tables sized to the prompt; serving needs room for the
+        generated tokens.  Recurrent (SSM/conv) states are fixed-size and
+        pass through untouched.
+        """
+        def pad_seq(tree):
+            def one(x):
+                pad = max_len - x.shape[2]
+                if pad <= 0:
+                    return x
+                widths = [(0, 0)] * x.ndim
+                widths[2] = (0, pad)
+                return jnp.pad(x, widths)
+            return jax.tree.map(one, tree)
+
+        f = self.cfg.family
+        if f == "ssm":
+            return cache
+        if f == "hybrid":
+            return {"ssm_layers": cache["ssm_layers"],
+                    "attn": pad_seq(cache["attn"])}
+        if f == "audio":
+            return {"self": pad_seq(cache["self"]), "cross": cache["cross"]}
+        return pad_seq(cache)
+
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        cd = jnp.dtype(cfg.compute_dtype)
+        if cell.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                    "pos": jax.ShapeDtypeStruct((), i32)}
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (B, cfg.encdec.encoder_frames, cfg.d_model), cd),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            P = cfg.vlm.num_patches
+            return {"patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), cd),
+                    "tokens": jax.ShapeDtypeStruct((B, S - P), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+    def make_inputs(self, cell: ShapeCell, rng: jax.Array) -> Dict[str, Any]:
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        specs = self.input_specs(cell)
+        out = {}
+        for k, sp in specs.items():
+            r, rng = jax.random.split(rng)
+            if sp.dtype == jnp.int32 and sp.shape:
+                out[k] = jax.random.randint(r, sp.shape, 0,
+                                            self.cfg.vocab_size, jnp.int32)
+            elif sp.dtype == jnp.int32:
+                out[k] = jnp.zeros((), jnp.int32)
+            else:
+                out[k] = jax.random.normal(r, sp.shape, jnp.float32).astype(
+                    sp.dtype)
+        return out
+
+
+def build_model(name_or_cfg, impl: str = "xla", remat: str = "dots") -> Model:
+    cfg = name_or_cfg if isinstance(name_or_cfg, ArchConfig) else \
+        get_config(name_or_cfg)
+    return Model(cfg, impl=impl, remat=remat)

@@ -1,0 +1,294 @@
+"""Attention: GQA (grouped-query) and MLA (multi-head latent, DeepSeek).
+
+Three lowering paths:
+  * full-seq (train / prefill)      — grouped einsum, optional q-chunked
+    block-causal loop for long sequences (static python loop => exact-causal
+    at block granularity, ~2x fewer FLOPs than full-mask at 32k),
+  * decode                          — single query position against a cache,
+  * MLA decode uses matrix absorption so the cache stays compressed
+    (kv_lora + rope dims per token), which is the architecture's point.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamDef, apply_rope, rms_norm
+
+
+# --------------------------------------------------------------------------- #
+# core scaled-dot-product attention (grouped, no kv repeat materialization)
+# --------------------------------------------------------------------------- #
+def _sdpa_block(q, k, v, *, scale, causal, q_pos, k_pos):
+    """q [B,Sq,KV,G,hd]; k/v [B,Sk,KV,hd]; positions for masking."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]            # [Sq, Sk]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+         causal: bool = True, q_offset: int = 0,
+         chunk_q: Optional[int] = None) -> jax.Array:
+    """q [B,Sq,H,hd], k/v [B,Sk,KV,hd] -> [B,Sq,H,hd].
+
+    When ``chunk_q`` is set and the sequence is causal+aligned, lowers as a
+    static loop over query blocks where block i only reads keys
+    ``[0 : (i+1)*chunk_q]`` — block-exact causal FLOPs.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    hd_v = v.shape[-1]                              # may differ from hd (MLA)
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+
+    use_chunks = (chunk_q is not None and causal and q_offset == 0 and Sq == Sk
+                  and Sq % chunk_q == 0 and Sq // chunk_q > 1)
+    if not use_chunks:
+        out = _sdpa_block(qg, k, v, scale=scale, causal=causal,
+                          q_pos=q_pos, k_pos=k_pos)
+        return out.reshape(B, Sq, H, hd_v)
+
+    n_chunks = Sq // chunk_q
+    outs = []
+    for i in range(n_chunks):                       # static loop: exact shapes
+        lo, hi = i * chunk_q, (i + 1) * chunk_q
+        out_i = _sdpa_block(
+            qg[:, lo:hi], k[:, :hi], v[:, :hi], scale=scale, causal=True,
+            q_pos=q_pos[lo:hi], k_pos=k_pos[:hi])
+        outs.append(out_i)
+    return jnp.concatenate(outs, axis=1).reshape(B, Sq, H, hd_v)
+
+
+def sdpa_decode(q, k_cache, v_cache, *, pos, scale=None):
+    """q [B,1,H,hd]; caches [B,S,KV,hd]; pos scalar int: last valid index."""
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = scale or 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
+    scores = scores * scale
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# --------------------------------------------------------------------------- #
+# GQA block
+# --------------------------------------------------------------------------- #
+def gqa_defs(cfg: ArchConfig, num_heads=None, num_kv=None) -> Dict[str, ParamDef]:
+    """Projections keep the head dim explicit ([D, H, hd], not [D, H·hd]):
+    tensor parallelism must shard whole heads — slicing a fused H·hd dim
+    splits individual heads across devices and turns every attention score
+    into a partial-sum all-reduce."""
+    D = cfg.d_model
+    H = num_heads or cfg.num_heads
+    KV = num_kv or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((D, H, hd), ("d_model", "heads", None)),
+        "wk": ParamDef((D, KV, hd), ("d_model", "kv_heads", None)),
+        "wv": ParamDef((D, KV, hd), ("d_model", "kv_heads", None)),
+        "wo": ParamDef((H, hd, D), ("heads", None, "d_model")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), ("heads", None), init="zeros")
+        defs["bk"] = ParamDef((KV, hd), ("kv_heads", None), init="zeros")
+        defs["bv"] = ParamDef((KV, hd), ("kv_heads", None), init="zeros")
+    return defs
+
+
+def _project_qkv(p, x, kv_x, cfg, H, KV, hd):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def gqa_forward(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+                positions: Optional[jax.Array] = None,
+                kv_x: Optional[jax.Array] = None,
+                causal: bool = True,
+                use_rope: bool = True,
+                num_heads=None, num_kv=None,
+                impl: str = "xla") -> Tuple[jax.Array, Dict]:
+    """Full-sequence attention. Returns (output, kv_cache_contents)."""
+    H = num_heads or cfg.num_heads
+    KV = num_kv or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(p, x, kv_src, cfg, H, KV, hd)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    chunk = cfg.attn_chunk_q if (S >= cfg.attn_chunk_threshold and causal) else None
+    if impl == "flash" and causal and kv_x is None:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True)
+    else:
+        out = sdpa(q, k, v, causal=causal, chunk_q=chunk)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def gqa_decode(p: Dict, x: jax.Array, cache: Dict, pos, cfg: ArchConfig, *,
+               num_heads=None, num_kv=None, use_rope: bool = True
+               ) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x [B,1,D]; cache {"k","v"} [B,S,KV,hd]; pos scalar."""
+    H = num_heads or cfg.num_heads
+    KV = num_kv or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, x, cfg, H, KV, hd)
+    if use_rope:
+        posb = jnp.full((x.shape[0], 1), pos)
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    out = sdpa_decode(q, k_cache, v_cache, pos=pos)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def gqa_cross_decode(p: Dict, x: jax.Array, cache: Dict, cfg: ArchConfig, *,
+                     num_heads=None, num_kv=None) -> jax.Array:
+    """Cross-attention during decode: static precomputed k/v cache."""
+    H = num_heads or cfg.num_heads
+    KV = num_kv or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    out = sdpa(q, cache["k"], cache["v"], causal=False)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek V2/V3)
+# --------------------------------------------------------------------------- #
+def mla_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    c = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qk_hd = c.qk_nope_head_dim + c.qk_rope_head_dim
+    defs: Dict[str, ParamDef] = {}
+    if c.q_lora_rank:
+        defs["wq_a"] = ParamDef((D, c.q_lora_rank), ("d_model", None))
+        defs["q_norm"] = ParamDef((c.q_lora_rank,), (None,), init="ones")
+        defs["wq_b"] = ParamDef((c.q_lora_rank, H, qk_hd),
+                                (None, "heads", None))
+    else:
+        defs["wq"] = ParamDef((D, H, qk_hd), ("d_model", "heads", None))
+    defs["wkv_a"] = ParamDef((D, c.kv_lora_rank + c.qk_rope_head_dim),
+                             ("d_model", None))
+    defs["kv_norm"] = ParamDef((c.kv_lora_rank,), (None,), init="ones")
+    defs["wkv_b"] = ParamDef(
+        (c.kv_lora_rank, H, c.qk_nope_head_dim + c.v_head_dim),
+        (None, "heads", None))
+    defs["wo"] = ParamDef((H, c.v_head_dim, D),
+                          ("heads", None, "d_model"))
+    return defs
+
+
+def _mla_q(p, x, cfg):
+    c = cfg.mla
+    H = cfg.num_heads
+    qk_hd = c.qk_nope_head_dim + c.qk_rope_head_dim
+    if c.q_lora_rank:
+        q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", q, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    return jnp.split(q, [c.qk_nope_head_dim], axis=-1)   # q_nope, q_rope
+
+
+def mla_forward(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+                positions: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Full-seq MLA (train/prefill): naive expansion of the latent kv."""
+    c = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(kv, [c.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,r]
+
+    kv_up = jnp.einsum("bsr,rhe->bshe", c_kv, p["wkv_b"])
+    k_nope, v = jnp.split(kv_up, [c.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, H, c.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    chunk = cfg.attn_chunk_q if S >= cfg.attn_chunk_threshold else None
+    # sdpa scales by 1/sqrt(q.shape[-1]) = 1/sqrt(qk_nope+qk_rope), as desired
+    out = sdpa(q, k, v, causal=True, chunk_q=chunk)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+
+
+def mla_decode(p: Dict, x: jax.Array, cache: Dict, pos, cfg: ArchConfig
+               ) -> Tuple[jax.Array, Dict]:
+    """Compressed-cache decode via matrix absorption.
+
+    cache: {"c_kv": [B,S,r], "k_rope": [B,S,rope]}  — no per-head expansion.
+    """
+    c = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, x, cfg)                    # [B,1,H,*]
+    posb = jnp.full((B, 1), pos)
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv_new, k_rope_new = jnp.split(kv, [c.kv_lora_rank], axis=-1)
+    c_kv_new = rms_norm(c_kv_new, p["kv_norm"], cfg.norm_eps)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], posb,
+                            cfg.rope_theta)[:, :, 0, :]
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    # absorb wkv_b's k-part into q: q_lat[b,h,r] = sum_d q_nope[b,h,d] W_k[r,h,d]
+    wkv_b = p["wkv_b"]                # [r, H, dk+dv]
+    w_k = wkv_b[:, :, :c.qk_nope_head_dim]                # [r, H, dk]
+    w_v = wkv_b[:, :, c.qk_nope_head_dim:]                # [r, H, dv]
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k)     # [B,1,H,r]
+
+    scale = 1.0 / math.sqrt(c.qk_nope_head_dim + c.qk_rope_head_dim)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    S = c_kv.shape[1]
+    valid = (jnp.arange(S) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)     # [B,1,H,r]
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_v)        # [B,1,H,dv]
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,183 @@
+"""Shared model machinery: param definitions, norms, RoPE, embeddings.
+
+Params are described declaratively as trees of :class:`ParamDef` so the same
+definition yields (a) real initialized arrays for smoke tests / training and
+(b) ``jax.ShapeDtypeStruct`` stand-ins + logical-axis metadata for the
+512-device dry-run, where nothing may be allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + logical axes + init scheme."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (or None)
+    init: str = "normal"              # normal | zeros | ones | small_normal
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_array(rng: jax.Array, d: ParamDef, dtype: jnp.dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+    std = d.scale / math.sqrt(fan_in)
+    if d.init == "small_normal":
+        std = 0.02 * d.scale
+    return (jax.random.normal(rng, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(defs: Tree, rng: jax.Array, dtype: jnp.dtype) -> Tree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    rngs = jax.random.split(rng, len(leaves))
+    arrs = [_init_array(r, d, dtype) for r, d in zip(rngs, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_specs(defs: Tree, dtype: jnp.dtype) -> Tree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_axes(defs: Tree) -> Tree:
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_count_tree(defs: Tree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+# --------------------------------------------------------------------------- #
+# layers
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]              # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jax.Array:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    angle = pos / np.power(10000.0, dim / d_model)
+    out = np.zeros((length, d_model), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def mlp_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+    return {
+        "gate": ParamDef((d_model, d_ff), ("d_model", "d_ff")),
+        "up": ParamDef((d_model, d_ff), ("d_model", "d_ff")),
+        "down": ParamDef((d_ff, d_model), ("d_ff", "d_model")),
+    }
+
+
+def shard_batch(x: jax.Array) -> jax.Array:
+    """Constrain a [B, ...] activation to shard batch over ('pod', 'data').
+
+    Keeps XLA's SPMD propagation honest at layer boundaries (without these
+    anchors the partitioner can drop the batch sharding around replicated
+    attention weights and replicate whole attention blocks).  No-op when no
+    mesh is in context (smoke tests, single-device runs).
+    """
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, P(("pod", "data"), *([None] * (x.ndim - 1))))
+    except Exception:
+        try:
+            from jax.sharding import PartitionSpec as P
+            return jax.lax.with_sharding_constraint(
+                x, P("data", *([None] * (x.ndim - 1))))
+        except Exception:
+            return x
+
+
+def scan_layers(body, init, xs, cfg):
+    """lax.scan over stacked layer params honoring ``cfg.scan_unroll``.
+
+    unroll=1 keeps HLO depth-independent (fast compiles); the dry-run sets
+    scan_unroll >= num_layers so XLA's cost/memory analysis sees every layer
+    (a while body is costed ONCE regardless of trip count).
+    """
+    leaves = jax.tree.leaves(xs)
+    length = leaves[0].shape[0] if leaves else 0
+    u = True if cfg.scan_unroll >= length else max(int(cfg.scan_unroll), 1)
+    return jax.lax.scan(body, init, xs, unroll=u)
+
+
+def stack_defs(defs: Tree, n: int, axis_name: str = "layers") -> Tree:
+    """Prepend a stacking dim (for scan-over-layers) to every ParamDef."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes,
+                           init=d.init, scale=d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in fp32. logits [..., V], labels [...] int32.
+
+    The gold logit is extracted with an iota-compare select-reduce instead
+    of ``take_along_axis``: a vocab-dim gather de-shards the batch dim under
+    SPMD (every device materializes all rows of its vocab shard), while the
+    elementwise compare+select fuses into the logits producer and keeps both
+    the (batch, vocab) shardings — each shard contributes a partial sum and
+    XLA inserts one small all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(labels[..., None] == vocab_iota, logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend is a stub).
+
+``input_specs`` supplies precomputed frame embeddings [B, T_frames, d_model];
+encoder is bidirectional, decoder is causal with cross-attention.  Positions
+are sinusoidal (additive).  FFNs are SwiGLU for uniformity with the rest of
+the zoo (backbone-only fidelity per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.common import (ParamDef, cross_entropy_loss, mlp_defs,
+                                 rms_norm, scan_layers, shard_batch,
+                                 sinusoidal_positions, stack_defs, swiglu)
+
+Tree = Any
+
+
+def _enc_layer_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "ln2": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "attn": attn.gqa_defs(cfg),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "ln_x": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "ln2": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "self_attn": attn.gqa_defs(cfg),
+        "cross_attn": attn.gqa_defs(cfg),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_defs(cfg: ArchConfig) -> Dict[str, Tree]:
+    V, D = cfg.padded_vocab, cfg.d_model
+    return {
+        "embed": ParamDef((V, D), ("vocab", "d_model"), init="small_normal"),
+        "enc_norm": ParamDef((D,), ("d_model",), init="ones"),
+        "final_norm": ParamDef((D,), ("d_model",), init="ones"),
+        "lm_head": ParamDef((D, V), ("d_model", "vocab")),
+        "enc_layers": stack_defs(_enc_layer_defs(cfg), cfg.encdec.encoder_layers),
+        "dec_layers": stack_defs(_dec_layer_defs(cfg), cfg.num_layers),
+    }
+
+
+def _encode(params: Tree, frames: jax.Array, cfg: ArchConfig,
+            impl: str) -> jax.Array:
+    T = frames.shape[1]
+    h = frames.astype(jnp.dtype(cfg.compute_dtype))
+    h = h + sinusoidal_positions(T, cfg.d_model).astype(h.dtype)[None]
+
+    def body(carry, lp):
+        x = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        a, _ = attn.gqa_forward(lp["attn"], x, cfg, causal=False,
+                                use_rope=False, impl=impl)
+        hh = shard_batch(carry + a)
+        x = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        return shard_batch(hh + swiglu(x, lp["mlp"]["gate"], lp["mlp"]["up"],
+                                       lp["mlp"]["down"])), None
+
+    h, _ = scan_layers(body, h, params["enc_layers"], cfg)
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(carry, lp, enc_out, cfg: ArchConfig, impl: str):
+    x = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+    a, kv = attn.gqa_forward(lp["self_attn"], x, cfg, causal=True,
+                             use_rope=False, impl=impl)
+    h = carry + a
+    x = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+    c, cross_kv = attn.gqa_forward(lp["cross_attn"], x, cfg, kv_x=enc_out,
+                                   causal=False, use_rope=False, impl=impl)
+    h = h + c
+    x = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    h = h + swiglu(x, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
+    return shard_batch(h), (kv, cross_kv)
+
+
+def encdec_forward(params: Tree, batch: Dict, cfg: ArchConfig, *,
+                   impl: str = "xla", remat: str = "none") -> jax.Array:
+    enc_out = _encode(params, batch["frames"], cfg, impl)
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    h = h + sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(
+        h.dtype)[None]
+
+    def body(carry, lp):
+        out, _ = _dec_layer(carry, lp, enc_out, cfg, impl)
+        return out, None
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = scan_layers(body, h, params["dec_layers"], cfg)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+
+
+def encdec_loss(params: Tree, batch: Dict, cfg: ArchConfig, *,
+                impl: str = "xla", remat: str = "dots") -> jax.Array:
+    logits = encdec_forward(params, batch, cfg, impl=impl, remat=remat)
+    return cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def encdec_cache_defs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    T = cfg.encdec.encoder_frames
+    self_cache = {
+        "k": ParamDef((batch, seq, KV, hd),
+                      ("batch", "kv_seq", "kv_heads", None), init="zeros"),
+        "v": ParamDef((batch, seq, KV, hd),
+                      ("batch", "kv_seq", "kv_heads", None), init="zeros"),
+    }
+    cross_cache = {
+        "k": ParamDef((batch, T, KV, hd), ("batch", None, "kv_heads", None),
+                      init="zeros"),
+        "v": ParamDef((batch, T, KV, hd), ("batch", None, "kv_heads", None),
+                      init="zeros"),
+    }
+    return {"self": stack_defs(self_cache, cfg.num_layers),
+            "cross": stack_defs(cross_cache, cfg.num_layers)}
+
+
+def encdec_prefill(params: Tree, batch: Dict, cfg: ArchConfig, *,
+                   impl: str = "xla") -> Tuple[jax.Array, Tree]:
+    enc_out = _encode(params, batch["frames"], cfg, impl)
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    h = h + sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(
+        h.dtype)[None]
+
+    def body(carry, lp):
+        out, caches = _dec_layer(carry, lp, enc_out, cfg, impl)
+        return out, caches
+
+    h, (self_kv, cross_kv) = scan_layers(body, h, params["dec_layers"], cfg)
+    h = rms_norm(h[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, {"self": self_kv, "cross": cross_kv}
+
+
+def encdec_decode_step(params: Tree, cache: Tree, batch: Dict, cfg: ArchConfig
+                       ) -> Tuple[jax.Array, Tree]:
+    pos = batch["pos"]
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    S_table = max(cache["self"]["k"].shape[2], 1)
+    pos_enc = sinusoidal_positions(S_table, cfg.d_model)
+    h = h + jax.lax.dynamic_slice_in_dim(pos_enc, pos, 1, axis=0).astype(
+        h.dtype)[None]
+
+    def body(carry, xs):
+        lp, self_c, cross_c = xs
+        x = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        a, new_self = attn.gqa_decode(lp["self_attn"], x, self_c, pos, cfg,
+                                      use_rope=False)
+        hh = carry + a
+        x = rms_norm(hh, lp["ln_x"], cfg.norm_eps)
+        c = attn.gqa_cross_decode(lp["cross_attn"], x, cross_c, cfg)
+        hh = hh + c
+        x = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        hh = hh + swiglu(x, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
+        return hh, new_self
+
+    h, new_self = scan_layers(
+        body, h, (params["dec_layers"], cache["self"], cache["cross"]), cfg)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,200 @@
+"""Zamba2-style hybrid: Mamba2 trunk + shared attention blocks.
+
+``num_layers`` SSD layers, grouped into ``num_layers / attn_every`` groups;
+after each group one of ``shared_attn_blocks`` *shared-parameter* attention+MLP
+blocks is applied (round-robin), matching Zamba2's parameter-sharing pattern.
+Lowering: outer scan over groups (shared params enter via closure; the
+round-robin pick is a dynamic index into the stacked shared blocks), inner
+scan over the group's SSD layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import (ParamDef, cross_entropy_loss, mlp_defs,
+                                 rms_norm, scan_layers, shard_batch,
+                                 stack_defs, swiglu)
+
+Tree = Any
+
+
+def _shared_block_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "ln2": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "attn": attn.gqa_defs(cfg),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def hybrid_defs(cfg: ArchConfig) -> Dict[str, Tree]:
+    V, D = cfg.padded_vocab, cfg.d_model
+    hb = cfg.hybrid
+    n_groups = cfg.num_layers // hb.attn_every
+    assert cfg.num_layers % hb.attn_every == 0
+    return {
+        "embed": ParamDef((V, D), ("vocab", "d_model"), init="small_normal"),
+        "final_norm": ParamDef((D,), ("d_model",), init="ones"),
+        "lm_head": ParamDef((D, V), ("d_model", "vocab")),
+        "ssm_layers": stack_defs(ssm_mod.ssm_defs(cfg), cfg.num_layers),
+        "shared": stack_defs(_shared_block_defs(cfg), hb.shared_attn_blocks,
+                             axis_name="shared_blocks"),
+    }
+
+
+def _group_params(params: Tree, cfg: ArchConfig) -> Tree:
+    """[L, ...] ssm params -> [G, attn_every, ...] for nested scan."""
+    hb = cfg.hybrid
+    g = cfg.num_layers // hb.attn_every
+    return jax.tree.map(
+        lambda x: x.reshape((g, hb.attn_every) + x.shape[1:]),
+        params["ssm_layers"])
+
+
+def _pick_shared(params: Tree, idx) -> Tree:
+    return jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(
+        x, idx, axis=0, keepdims=False), params["shared"])
+
+
+def _shared_fwd(sp: Tree, h: jax.Array, cfg: ArchConfig, impl: str) -> jax.Array:
+    x = rms_norm(h, sp["ln1"], cfg.norm_eps)
+    a, _ = attn.gqa_forward(sp["attn"], x, cfg, impl=impl)
+    h = h + a
+    x = rms_norm(h, sp["ln2"], cfg.norm_eps)
+    return shard_batch(
+        h + swiglu(x, sp["mlp"]["gate"], sp["mlp"]["up"], sp["mlp"]["down"]))
+
+
+def hybrid_forward(params: Tree, batch: Dict, cfg: ArchConfig, *,
+                   impl: str = "xla", remat: str = "none") -> jax.Array:
+    hb = cfg.hybrid
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    grouped = _group_params(params, cfg)
+    n_groups = cfg.num_layers // hb.attn_every
+
+    def inner(carry, lp):
+        return carry + ssm_mod.ssm_forward(lp, carry, cfg, impl=impl), None
+
+    def group_body(carry, xs):
+        gp, gidx = xs
+        hh, _ = scan_layers(inner, carry, gp, cfg)
+        sp = _pick_shared(params, gidx % hb.shared_attn_blocks)
+        return _shared_fwd(sp, hh, cfg, impl), None
+
+    if remat != "none":
+        group_body = jax.checkpoint(group_body)
+    h, _ = scan_layers(group_body, h, (grouped, jnp.arange(n_groups)), cfg)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+
+
+def hybrid_loss(params: Tree, batch: Dict, cfg: ArchConfig, *,
+                impl: str = "xla", remat: str = "dots") -> jax.Array:
+    logits = hybrid_forward(params, batch, cfg, impl=impl,
+                            remat="full" if remat != "none" else "none")
+    return cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def hybrid_cache_defs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    s = cfg.ssm
+    D = cfg.d_model
+    hb = cfg.hybrid
+    H, P, N = s.n_heads(D), s.head_dim, s.d_state
+    conv_dim = s.d_inner(D) + 2 * s.n_groups * s.d_state
+    n_groups = cfg.num_layers // hb.attn_every
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ssm_cache = {
+        "ssm": ParamDef((batch, H, P, N), ("batch", "ssm_heads", None, None),
+                        init="zeros"),
+        "conv": ParamDef((batch, s.d_conv - 1, conv_dim),
+                         ("batch", None, "d_inner"), init="zeros"),
+    }
+    attn_cache = {
+        "k": ParamDef((batch, seq, KV, hd),
+                      ("batch", "kv_seq", "kv_heads", None), init="zeros"),
+        "v": ParamDef((batch, seq, KV, hd),
+                      ("batch", "kv_seq", "kv_heads", None), init="zeros"),
+    }
+    return {
+        "ssm_layers": stack_defs(ssm_cache, cfg.num_layers),
+        "attn": stack_defs(attn_cache, n_groups, axis_name="groups"),
+    }
+
+
+def hybrid_prefill(params: Tree, batch: Dict, cfg: ArchConfig, *,
+                   impl: str = "xla") -> Tuple[jax.Array, Tree]:
+    hb = cfg.hybrid
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    grouped = _group_params(params, cfg)
+    n_groups = cfg.num_layers // hb.attn_every
+
+    def inner(carry, lp):
+        out, state = ssm_mod.ssm_forward(lp, carry, cfg, return_state=True,
+                                         impl=impl)
+        return carry + out, state
+
+    def group_body(carry, xs):
+        gp, gidx = xs
+        hh, states = scan_layers(inner, carry, gp, cfg)
+        sp = _pick_shared(params, gidx % hb.shared_attn_blocks)
+        x = rms_norm(hh, sp["ln1"], cfg.norm_eps)
+        a, kv = attn.gqa_forward(sp["attn"], x, cfg, impl=impl)
+        hh = hh + a
+        x = rms_norm(hh, sp["ln2"], cfg.norm_eps)
+        hh = hh + swiglu(x, sp["mlp"]["gate"], sp["mlp"]["up"], sp["mlp"]["down"])
+        return hh, (states, kv)
+
+    h, (ssm_states, attn_kv) = scan_layers(
+        group_body, h, (grouped, jnp.arange(n_groups)), cfg)
+    # ssm_states leaves: [G, attn_every, B, ...] -> [L, B, ...]
+    ssm_states = jax.tree.map(
+        lambda x: x.reshape((cfg.num_layers,) + x.shape[2:]), ssm_states)
+    h = rms_norm(h[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, {"ssm_layers": ssm_states, "attn": attn_kv}
+
+
+def hybrid_decode_step(params: Tree, cache: Tree, batch: Dict, cfg: ArchConfig
+                       ) -> Tuple[jax.Array, Tree]:
+    hb = cfg.hybrid
+    pos = batch["pos"]
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    grouped = _group_params(params, cfg)
+    n_groups = cfg.num_layers // hb.attn_every
+    grouped_ssm_cache = jax.tree.map(
+        lambda x: x.reshape((n_groups, hb.attn_every) + x.shape[1:]),
+        cache["ssm_layers"])
+
+    def inner(carry, xs):
+        lp, lcache = xs
+        out, new_cache = ssm_mod.ssm_decode(lp, carry, lcache, cfg)
+        return carry + out, new_cache
+
+    def group_body(carry, xs):
+        gp, gcache, acache, gidx = xs
+        hh, new_ssm = scan_layers(inner, carry, (gp, gcache), cfg)
+        sp = _pick_shared(params, gidx % hb.shared_attn_blocks)
+        x = rms_norm(hh, sp["ln1"], cfg.norm_eps)
+        a, new_attn = attn.gqa_decode(sp["attn"], x, acache, pos, cfg)
+        hh = hh + a
+        x = rms_norm(hh, sp["ln2"], cfg.norm_eps)
+        hh = hh + swiglu(x, sp["mlp"]["gate"], sp["mlp"]["up"], sp["mlp"]["down"])
+        return hh, (new_ssm, new_attn)
+
+    h, (new_ssm, new_attn) = scan_layers(
+        group_body, h, (grouped, grouped_ssm_cache, cache["attn"],
+                        jnp.arange(n_groups)), cfg)
+    new_ssm = jax.tree.map(
+        lambda x: x.reshape((cfg.num_layers,) + x.shape[2:]), new_ssm)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, {"ssm_layers": new_ssm, "attn": new_attn}

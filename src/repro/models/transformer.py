@@ -1,0 +1,294 @@
+"""Decoder-only LM stack: dense GQA, MLA, MoE, VLM-backbone variants.
+
+Layer parameters are stacked on a leading ``layers`` dim and the stack lowers
+as ``jax.lax.scan`` — HLO size and compile time are depth-independent, which
+is what makes 64 dry-run compiles tractable on one CPU core.  MoE models with
+leading dense layers lower as two scans (dense group, then MoE group).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import (ParamDef, cross_entropy_loss, mlp_defs,
+                                 param_axes, param_specs, rms_norm,
+                                 scan_layers, shard_batch, stack_defs,
+                                 swiglu)
+
+Tree = Any
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "full",
+    "dots": "dots",
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------- #
+# parameter definitions
+# --------------------------------------------------------------------------- #
+def _attn_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    if cfg.mla is not None:
+        return attn.mla_defs(cfg)
+    return attn.gqa_defs(cfg)
+
+
+def _layer_defs(cfg: ArchConfig, use_moe: bool, d_ff: int) -> Dict[str, ParamDef]:
+    defs = {
+        "ln1": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "ln2": ParamDef((cfg.d_model,), ("d_model",), init="ones"),
+        "attn": _attn_defs(cfg),
+    }
+    if use_moe:
+        defs["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(cfg.d_model, d_ff)
+    return defs
+
+
+def lm_defs(cfg: ArchConfig) -> Dict[str, Tree]:
+    V, D = cfg.padded_vocab, cfg.d_model
+    defs: Dict[str, Tree] = {
+        "embed": ParamDef((V, D), ("vocab", "d_model"), init="small_normal"),
+        "final_norm": ParamDef((D,), ("d_model",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((D, V), ("d_model", "vocab"))
+    m = cfg.moe
+    if m is not None and m.first_dense_layers > 0:
+        defs["dense_layers"] = stack_defs(
+            _layer_defs(cfg, False, m.d_ff_dense or cfg.d_ff),
+            m.first_dense_layers)
+        defs["layers"] = stack_defs(
+            _layer_defs(cfg, True, 0), cfg.num_layers - m.first_dense_layers)
+    else:
+        defs["layers"] = stack_defs(
+            _layer_defs(cfg, m is not None, cfg.d_ff), cfg.num_layers)
+    if cfg.mtp:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * D, D), (None, "d_model")),
+            "ln_h": ParamDef((D,), ("d_model",), init="ones"),
+            "ln_e": ParamDef((D,), ("d_model",), init="ones"),
+            "block": _layer_defs(cfg, m is not None, cfg.d_ff),
+        }
+    return defs
+
+
+# --------------------------------------------------------------------------- #
+# layer bodies
+# --------------------------------------------------------------------------- #
+def _layer_fwd(h: jax.Array, lp: Dict, cfg: ArchConfig, use_moe: bool,
+               impl: str) -> Tuple[jax.Array, jax.Array]:
+    x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, _ = attn.mla_forward(lp["attn"], x, cfg)
+    else:
+        a, _ = attn.gqa_forward(lp["attn"], x, cfg, impl=impl)
+    h = shard_batch(h + a)
+    x = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if use_moe:
+        f, aux = moe_mod.moe_forward(lp["moe"], x, cfg)
+    else:
+        f = swiglu(x, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
+        aux = jnp.zeros((), jnp.float32)
+    return shard_batch(h + f), aux
+
+
+def _scan_layers(h: jax.Array, layers: Tree, cfg: ArchConfig, use_moe: bool,
+                 impl: str, remat: str) -> Tuple[jax.Array, jax.Array]:
+    def body(carry, lp):
+        out, aux = _layer_fwd(carry, lp, cfg, use_moe, impl)
+        return out, aux
+    body = _maybe_remat(body, remat)
+    h, auxs = scan_layers(body, h, layers, cfg)
+    return h, jnp.sum(auxs)
+
+
+def _trunk(params: Tree, h: jax.Array, cfg: ArchConfig, impl: str,
+           remat: str) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    m = cfg.moe
+    if m is not None and m.first_dense_layers > 0:
+        h, a0 = _scan_layers(h, params["dense_layers"], cfg, False, impl, remat)
+        h, a1 = _scan_layers(h, params["layers"], cfg, True, impl, remat)
+        aux = a0 + a1
+    else:
+        h, aux = _scan_layers(h, params["layers"], cfg, m is not None, impl, remat)
+    return h, aux
+
+
+def _logits(params: Tree, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+def _embed_tokens(params: Tree, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+
+
+def _embed_inputs(params: Tree, batch: Dict, cfg: ArchConfig) -> jax.Array:
+    """Token embeddings; VLM prepends precomputed patch embeddings (stub)."""
+    h = _embed_tokens(params, batch["tokens"], cfg)
+    if cfg.vlm is not None and "patch_embeds" in batch:
+        h = jnp.concatenate(
+            [batch["patch_embeds"].astype(h.dtype), h], axis=1)
+    return shard_batch(h)
+
+
+# --------------------------------------------------------------------------- #
+# public entry points
+# --------------------------------------------------------------------------- #
+def lm_forward(params: Tree, batch: Dict, cfg: ArchConfig, *,
+               impl: str = "xla", remat: str = "none"
+               ) -> Tuple[jax.Array, jax.Array]:
+    h = _embed_inputs(params, batch, cfg)
+    h, aux = _trunk(params, h, cfg, impl, remat)
+    return _logits(params, h, cfg), aux
+
+
+def lm_loss(params: Tree, batch: Dict, cfg: ArchConfig, *,
+            impl: str = "xla", remat: str = "dots") -> jax.Array:
+    """Next-token CE (+ MoE aux + MTP aux where configured)."""
+    h = _embed_inputs(params, batch, cfg)
+    h, aux = _trunk(params, h, cfg, impl, remat)
+    n_prefix = 0
+    if cfg.vlm is not None and "patch_embeds" in batch:
+        n_prefix = batch["patch_embeds"].shape[1]
+        h = h[:, n_prefix:]
+    logits = _logits(params, h, cfg)
+    tokens = batch["tokens"]
+    loss = cross_entropy_loss(logits[:, :-1], tokens[:, 1:])
+
+    if cfg.mtp:
+        # DeepSeek-V3 multi-token prediction: one extra block predicts t+2
+        mp = params["mtp"]
+        emb_next = _embed_tokens(params, tokens, cfg)
+        h_in = jnp.concatenate(
+            [rms_norm(h[:, :-1], mp["ln_h"], cfg.norm_eps),
+             rms_norm(emb_next[:, 1:], mp["ln_e"], cfg.norm_eps)], axis=-1)
+        h_mtp = jnp.einsum("bsd,dk->bsk", h_in, mp["proj"])
+        h_mtp, aux_mtp = _layer_fwd(h_mtp, mp["block"], cfg,
+                                    cfg.moe is not None, impl)
+        logits_mtp = _logits(params, h_mtp, cfg)
+        loss = loss + 0.3 * cross_entropy_loss(logits_mtp[:, :-1], tokens[:, 2:])
+        aux = aux + aux_mtp
+    return loss + aux
+
+
+def lm_prefill(params: Tree, batch: Dict, cfg: ArchConfig, *,
+               impl: str = "xla") -> Tuple[jax.Array, Tree]:
+    """Process the full prompt; return (last-position logits, kv caches)."""
+    h = _embed_inputs(params, batch, cfg)
+
+    def body(carry, lp):
+        x = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            a, kv = attn.mla_forward(lp["attn"], x, cfg)
+        else:
+            a, kv = attn.gqa_forward(lp["attn"], x, cfg, impl=impl)
+        hh = shard_batch(carry + a)
+        x = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None and "moe" in lp:
+            f, _ = moe_mod.moe_forward(lp["moe"], x, cfg)
+        else:
+            f = swiglu(x, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
+        return shard_batch(hh + f), kv
+
+    caches = {}
+    m = cfg.moe
+    if m is not None and m.first_dense_layers > 0:
+        h, caches["dense_layers"] = scan_layers(body, h, params["dense_layers"], cfg)
+        h, caches["layers"] = scan_layers(body, h, params["layers"], cfg)
+    else:
+        h, caches["layers"] = scan_layers(body, h, params["layers"], cfg)
+    logits = _logits(params, h[:, -1:, :], cfg)
+    return logits, caches
+
+
+def _decode_layer(h, lp, cache, pos, cfg: ArchConfig):
+    x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = attn.mla_decode(lp["attn"], x, cache, pos, cfg)
+    else:
+        a, new_cache = attn.gqa_decode(lp["attn"], x, cache, pos, cfg)
+    h = h + a
+    x = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        f, _ = moe_mod.moe_forward(lp["moe"], x, cfg)
+    else:
+        f = swiglu(x, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
+    return h + f, new_cache
+
+
+def lm_decode_step(params: Tree, cache: Tree, batch: Dict, cfg: ArchConfig
+                   ) -> Tuple[jax.Array, Tree]:
+    """One decode step. batch: {"tokens": [B,1] int32, "pos": scalar int32}."""
+    pos = batch["pos"]
+    h = _embed_tokens(params, batch["tokens"], cfg)
+
+    def body(carry, xs):
+        lp, layer_cache = xs
+        out, new_cache = _decode_layer(carry, lp, layer_cache, pos, cfg)
+        return out, new_cache
+
+    new_cache = {}
+    m = cfg.moe
+    if m is not None and m.first_dense_layers > 0:
+        h, new_cache["dense_layers"] = scan_layers(
+            body, h, (params["dense_layers"], cache["dense_layers"]), cfg)
+        h, new_cache["layers"] = scan_layers(
+            body, h, (params["layers"], cache["layers"]), cfg)
+    else:
+        h, new_cache["layers"] = scan_layers(
+            body, h, (params["layers"], cache["layers"]), cfg)
+    logits = _logits(params, h, cfg)
+    return logits, new_cache
+
+
+def lm_cache_defs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    """ParamDef tree describing the decode cache (for specs + allocation)."""
+    dt = cfg.compute_dtype
+    if cfg.mla is not None:
+        c = cfg.mla
+        per_layer = {
+            "c_kv": ParamDef((batch, seq, c.kv_lora_rank),
+                             ("batch", "kv_seq", None), init="zeros"),
+            "k_rope": ParamDef((batch, seq, c.qk_rope_head_dim),
+                               ("batch", "kv_seq", None), init="zeros"),
+        }
+    else:
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        per_layer = {
+            "k": ParamDef((batch, seq, KV, hd),
+                          ("batch", "kv_seq", "kv_heads", None),
+                          init="zeros"),
+            "v": ParamDef((batch, seq, KV, hd),
+                          ("batch", "kv_seq", "kv_heads", None),
+                          init="zeros"),
+        }
+    m = cfg.moe
+    out = {}
+    if m is not None and m.first_dense_layers > 0:
+        out["dense_layers"] = stack_defs(per_layer, m.first_dense_layers)
+        out["layers"] = stack_defs(per_layer, cfg.num_layers - m.first_dense_layers)
+    else:
+        out["layers"] = stack_defs(per_layer, cfg.num_layers)
+    return out

@@ -1,0 +1,18 @@
+"""Discrete-event simulation of an AI-RAN edge cluster (paper §IV).
+
+Heterogeneous nodes share GPU/CPU/VRAM between DU / CU-UP RAN functions and
+large/small AI services; requests carry per-stage work and deadlines; the
+placement layer acts at epochs, the allocation layer at every event.
+"""
+from repro.sim.types import (InstanceCategory, InstanceSpec, NodeSpec,
+                             Request, RequestClass, MigrationAction)
+from repro.sim.cluster import ClusterState
+from repro.sim.engine import Simulator, SimResult
+from repro.sim.workload import WorkloadConfig, generate_workload
+from repro.sim.scenario import paper_scenario
+
+__all__ = [
+    "InstanceCategory", "InstanceSpec", "NodeSpec", "Request", "RequestClass",
+    "MigrationAction", "ClusterState", "Simulator", "SimResult",
+    "WorkloadConfig", "generate_workload", "paper_scenario",
+]

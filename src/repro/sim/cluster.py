@@ -1,0 +1,337 @@
+"""Cluster state: residency y_{n,s}, queues, VRAM accounting, allocator I/O.
+
+Performance notes (the simulator re-allocates on every event):
+  * per-instance queue aggregates (Ψ sums) are maintained incrementally,
+  * per-instance deadline vectors are cached numpy arrays rebuilt only when
+    the queue changes, so urgency ω(t) is one vectorized op per instance,
+  * expired not-yet-started requests are dropped lazily (bounds queue length
+    and models admission control; counted as unfulfilled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.allocator_np import allocate_cluster_np
+from repro.sim.types import (InstanceCategory, InstanceSpec, MigrationAction,
+                             NodeSpec, Request, RequestClass)
+
+EPS_URGENCY = 1e-3   # ε in Eq. 14 (seconds)
+EPS_FLOOR = 1e-4     # denominator clamp in Eq. 15
+FLOOR_MARGIN = 0.9   # finish RAN work 10% before the earliest deadline:
+                     # serving exactly at the floor rate would complete at
+                     # the deadline edge, losing ties to transport jitter
+
+
+@dataclasses.dataclass
+class Job:
+    """A request's residency at one instance (one service stage)."""
+    req: Request
+    rem_g: float                # residual GPU work  Φ^{g,rem}
+    rem_c: float                # residual CPU work  Φ^{c,rem}
+    abs_deadline: float         # a_q + τ_q
+    kv_bytes: float = 0.0
+    started: bool = False
+
+
+class InstQueue:
+    """FIFO queue of jobs at one (node, instance) with cached aggregates."""
+
+    __slots__ = ("jobs", "psi_g", "psi_c", "_deadlines", "_dirty")
+
+    def __init__(self) -> None:
+        self.jobs: deque = deque()
+        self.psi_g = 0.0        # Ψ^g — aggregate residual GPU work (Eq. 13)
+        self.psi_c = 0.0        # Ψ^c
+        self._deadlines = np.empty(0, np.float64)
+        self._dirty = False
+
+    def push(self, job: Job) -> None:
+        self.jobs.append(job)
+        self.psi_g += job.rem_g
+        self.psi_c += job.rem_c
+        self._dirty = True
+
+    def pop(self) -> Job:
+        job = self.jobs.popleft()
+        self.psi_g -= job.rem_g
+        self.psi_c -= job.rem_c
+        self._dirty = True
+        return job
+
+    @property
+    def kv_active(self) -> float:
+        """γ_q of the in-service request (A_{n,s}: the running batch holds
+        KV on the accelerator; waiting requests queue in host memory)."""
+        if self.jobs and self.jobs[0].started:
+            return self.jobs[0].kv_bytes
+        return 0.0
+
+    def head(self) -> Optional[Job]:
+        return self.jobs[0] if self.jobs else None
+
+    def progress_head(self, dg: float, dc: float) -> None:
+        job = self.jobs[0]
+        job.rem_g -= dg
+        job.rem_c -= dc
+        self.psi_g -= dg
+        self.psi_c -= dc
+
+    def deadlines(self) -> np.ndarray:
+        if self._dirty:
+            self._deadlines = np.fromiter(
+                (j.abs_deadline for j in self.jobs), np.float64,
+                count=len(self.jobs))
+            self._dirty = False
+        return self._deadlines
+
+    def omega(self, t: float) -> float:
+        """Urgency Σ 1/max(τ − (t − a), ε)  (Eq. 14)."""
+        if not self.jobs:
+            return 0.0
+        rem = self.deadlines() - t
+        return float(np.sum(1.0 / np.maximum(rem, EPS_URGENCY)))
+
+    def min_deadline_remaining(self, t: float) -> float:
+        if not self.jobs:
+            return np.inf
+        return float(self.deadlines().min() - t)
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+
+class ClusterState:
+    """Mutable cluster: placement + queues + allocations (Eq. 3–4 invariants)."""
+
+    def __init__(self, nodes: Sequence[NodeSpec],
+                 instances: Sequence[InstanceSpec],
+                 initial_placement: Sequence[int],
+                 transport_delay: float):
+        self.nodes = list(nodes)
+        self.instances = list(instances)
+        self.N = len(nodes)
+        self.S = len(instances)
+        assert len(initial_placement) == self.S
+        self.placement = np.asarray(initial_placement, np.int64).copy()
+        self.reconfig_until = np.zeros(self.S)       # instance usable when t >=
+        self.queues: List[InstQueue] = [InstQueue() for _ in range(self.S)]
+        self.delta = transport_delay                 # δ (one-way per hop)
+
+        self.gpu_capacity = np.array([n.gpu_flops for n in nodes])
+        self.cpu_capacity = np.array([n.cpu_cores for n in nodes])
+        self.vram_capacity = np.array([n.vram_bytes for n in nodes])
+
+        self.alloc_g = np.zeros(self.S)              # g_{n(s),s}
+        self.alloc_c = np.zeros(self.S)              # c_{n(s),s}
+        self.infeasible_events = 0                   # Eq. 15 denominator ≤ 0
+
+        self._du_by_cell: Dict[int, int] = {}
+        self._cuup_by_cell: Dict[int, int] = {}
+        for s in instances:
+            if s.category == InstanceCategory.DU:
+                self._du_by_cell[s.cell] = s.sid
+            elif s.category == InstanceCategory.CUUP:
+                self._cuup_by_cell[s.cell] = s.sid
+        self._cat_sids: Dict[InstanceCategory, List[int]] = {}
+        for s in instances:
+            self._cat_sids.setdefault(s.category, []).append(s.sid)
+        self._node_sids: List[List[int]] = [[] for _ in range(self.N)]
+        for sid in range(self.S):
+            self._node_sids[self.placement[sid]].append(sid)
+
+        # expected downstream CU-UP processing time α̂^down (EMA per cell)
+        self._cuup_time_ema = {c: 5e-4 for c in self._cuup_by_cell}
+
+    # ------------------------------------------------------------------ #
+    # lookups
+    # ------------------------------------------------------------------ #
+    def du_of(self, cell: int) -> int:
+        return self._du_by_cell[cell]
+
+    def cuup_of(self, cell: int) -> int:
+        return self._cuup_by_cell[cell]
+
+    def sids_of(self, cat: InstanceCategory) -> List[int]:
+        return self._cat_sids.get(cat, [])
+
+    def available(self, sid: int, t: float) -> bool:
+        return t >= self.reconfig_until[sid]
+
+    def hops(self, n_a: int, n_b: int) -> int:
+        return 0 if n_a == n_b else 1               # full-mesh fabric
+
+    # ------------------------------------------------------------------ #
+    # memory (Eq. 4)
+    # ------------------------------------------------------------------ #
+    def vram_used(self) -> np.ndarray:
+        used = np.zeros(self.N)
+        for s in self.instances:
+            n = self.placement[s.sid]
+            used[n] += s.weight_bytes
+            used[n] += self.queues[s.sid].kv_active
+        return used
+
+    def vram_headroom(self) -> np.ndarray:
+        return self.vram_capacity - self.vram_used()
+
+    def migration_feasible(self, a: MigrationAction) -> bool:
+        """Destination VRAM must cover the incoming weights (Eq. 4)."""
+        if a.src == a.dst or self.placement[a.sid] != a.src:
+            return False
+        inst = self.instances[a.sid]
+        head = self.vram_headroom()[a.dst]
+        kv = self.queues[a.sid].kv_active            # KV travels with service
+        return head >= inst.weight_bytes + kv
+
+    # ------------------------------------------------------------------ #
+    # migration (the placement-layer commit, Eq. 12)
+    # ------------------------------------------------------------------ #
+    def apply_migration(self, a: MigrationAction, t: float) -> None:
+        inst = self.instances[a.sid]
+        assert self.placement[a.sid] == a.src, (a, self.placement[a.sid])
+        self.placement[a.sid] = a.dst
+        self.reconfig_until[a.sid] = t + inst.reconfig_s
+        self._node_sids[a.src].remove(a.sid)
+        self._node_sids[a.dst].append(a.sid)
+
+    # ------------------------------------------------------------------ #
+    # allocator I/O (Eq. 13–15 -> Eq. 16 -> apply Eq. 18)
+    # ------------------------------------------------------------------ #
+    def residency_mask(self, t: float) -> np.ndarray:
+        """[N, S] — y_{n,s} ∧ not reconfiguring (unavailable gets nothing)."""
+        mask = np.zeros((self.N, self.S), bool)
+        for sid in range(self.S):
+            if t >= self.reconfig_until[sid]:
+                mask[self.placement[sid], sid] = True
+        return mask
+
+    def allocator_inputs(self, t: float, nodes: Optional[List[int]] = None):
+        """Build (psi_g, psi_c, omega, floors_g, floors_c, mask) as [N, S].
+
+        ``nodes`` restricts the (expensive) per-instance aggregation to the
+        given node rows — the event loop's incremental-reallocation path.
+        """
+        N, S = self.N, self.S
+        psi_g = np.zeros((N, S))
+        psi_c = np.zeros((N, S))
+        omega = np.zeros((N, S))
+        floors_g = np.zeros((N, S))
+        floors_c = np.zeros((N, S))
+        mask = self.residency_mask(t)
+
+        if nodes is None:
+            sids = range(self.S)
+        else:
+            sids = [s for n in nodes for s in self._node_sids[n]]
+        for sid in sids:
+            inst = self.instances[sid]
+            q = self.queues[sid]
+            if not q.jobs:
+                continue
+            n = self.placement[sid]
+            if not mask[n, sid]:
+                continue
+            psi_g[n, sid] = max(q.psi_g, 0.0)
+            psi_c[n, sid] = max(q.psi_c, 0.0)
+            omega[n, sid] = q.omega(t)
+
+            # RAN capacity floors (Eq. 15) on the dominant resource
+            if inst.category == InstanceCategory.DU:
+                alpha_down = self._cuup_time_ema.get(inst.cell, 5e-4)
+                rem = q.min_deadline_remaining(t) - self.delta - alpha_down
+                rem *= FLOOR_MARGIN
+                if rem <= 0.0:
+                    self.infeasible_events += 1
+                floors_g[n, sid] = min(
+                    max(q.psi_g, 0.0) / max(rem, EPS_FLOOR),
+                    self.gpu_capacity[n])
+            elif inst.category == InstanceCategory.CUUP:
+                rem = q.min_deadline_remaining(t) * FLOOR_MARGIN
+                if rem <= 0.0:
+                    self.infeasible_events += 1
+                floors_c[n, sid] = min(
+                    max(q.psi_c, 0.0) / max(rem, EPS_FLOOR),
+                    self.cpu_capacity[n])
+        return psi_g, psi_c, omega, floors_g, floors_c, mask
+
+    def apply_allocation(self, g_ns: np.ndarray, c_ns: np.ndarray,
+                         nodes: Optional[List[int]] = None) -> None:
+        """Collapse [N, S] node-major allocation onto per-instance vectors."""
+        if nodes is None:
+            self.alloc_g = g_ns[self.placement, np.arange(self.S)]
+            self.alloc_c = c_ns[self.placement, np.arange(self.S)]
+            return
+        for n in nodes:
+            for sid in self._node_sids[n]:
+                self.alloc_g[sid] = g_ns[n, sid]
+                self.alloc_c[sid] = c_ns[n, sid]
+
+    def default_allocate(self, t: float,
+                         nodes: Optional[List[int]] = None) -> None:
+        """The paper's allocation layer (closed-form active-set, Eq. 18)."""
+        psi_g, psi_c, omega, fg, fc, mask = self.allocator_inputs(t, nodes)
+        if nodes is None:
+            g, c, _ = allocate_cluster_np(psi_g, psi_c, omega, fg, fc,
+                                          self.gpu_capacity,
+                                          self.cpu_capacity, mask)
+            self.apply_allocation(g, c)
+            return
+        from repro.core.allocator_np import solve_resource_np
+        for n in nodes:
+            g, _, _ = solve_resource_np(psi_g[n], omega[n], fg[n],
+                                        float(self.gpu_capacity[n]), mask[n])
+            c, _, _ = solve_resource_np(psi_c[n], omega[n], fc[n],
+                                        float(self.cpu_capacity[n]), mask[n])
+            for sid in self._node_sids[n]:
+                self.alloc_g[sid] = g[sid]
+                self.alloc_c[sid] = c[sid]
+
+    def observe_cuup_time(self, cell: int, elapsed: float) -> None:
+        ema = self._cuup_time_ema.get(cell, elapsed)
+        self._cuup_time_ema[cell] = 0.9 * ema + 0.1 * elapsed
+
+    # ------------------------------------------------------------------ #
+    # routing: smallest-backlog among the service's replicas (paper §II)
+    # ------------------------------------------------------------------ #
+    def route_ai(self, sids: List[int], t: float,
+                 rr_counter: Optional[List[int]] = None) -> int:
+        if rr_counter is not None:                   # Round-Robin baseline
+            sid = sids[rr_counter[0] % len(sids)]
+            rr_counter[0] += 1
+            return sid
+        best, best_cost = sids[0], np.inf
+        for sid in sids:
+            q = self.queues[sid]
+            rate = max(self.alloc_g[sid], 1e6)
+            wait = q.psi_g / rate + max(self.reconfig_until[sid] - t, 0.0)
+            if wait < best_cost:
+                best, best_cost = sid, wait
+        return best
+
+    # ------------------------------------------------------------------ #
+    # snapshot metrics for agents / critics / prompts
+    # ------------------------------------------------------------------ #
+    def utilization(self, t: float) -> Dict[str, np.ndarray]:
+        psi_g, psi_c, omega, fg, fc, mask = self.allocator_inputs(t)
+        g_used = np.zeros(self.N)
+        c_used = np.zeros(self.N)
+        for sid in range(self.S):
+            n = self.placement[sid]
+            g_used[n] += self.alloc_g[sid]
+            c_used[n] += self.alloc_c[sid]
+        return {
+            "gpu_util": g_used / self.gpu_capacity,
+            "cpu_util": c_used / self.cpu_capacity,
+            "ran_floor_g": fg.sum(axis=1) / self.gpu_capacity,
+            "ran_floor_c": fc.sum(axis=1) / self.cpu_capacity,
+            "vram_used": self.vram_used(),
+            "vram_headroom": self.vram_headroom(),
+            "psi_g": psi_g.sum(axis=0),
+            "psi_c": psi_c.sum(axis=0),
+            "omega": omega.sum(axis=0),
+            "queue_len": np.array([len(q) for q in self.queues], np.int64),
+        }

@@ -1,0 +1,419 @@
+"""Event-driven simulator: the fast/slow timescale split of the paper.
+
+The allocation layer re-runs at every event (arrival, stage completion,
+epoch boundary, migration completion); the placement layer acts only at
+epoch boundaries through a pluggable :class:`PlacementPolicy`.  Baselines
+swap the :class:`AllocationPolicy` and/or the placement policy; HAF uses
+the deadline-aware closed form + the agentic placement layer.
+
+Event mechanics: between events every instance serves the head of its FIFO
+queue at its allocated rate (GPU work first, then CPU — Eq. 1), so the next
+completion time is computable in closed form and nothing happens between
+events.  Expired not-yet-started requests are dropped when they reach the
+head (admission control; counted as unfulfilled).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.sim.cluster import ClusterState, Job
+from repro.sim.snapshot import EpochSnapshot
+from repro.sim.types import (InstanceCategory, MigrationAction, Request,
+                             RequestClass)
+
+INF = float("inf")
+
+
+class PlacementPolicy(Protocol):
+    name: str
+
+    def decide(self, snap: EpochSnapshot) -> Optional[MigrationAction]: ...
+
+
+class AllocationPolicy(Protocol):
+    name: str
+
+    def allocate(self, cluster: ClusterState, t: float,
+                 nodes: Optional[List[int]] = None) -> None: ...
+
+
+class StaticPlacement:
+    """No slow-timescale adaptation (HAF-Static / Round-Robin / CAORA)."""
+    name = "static"
+
+    def decide(self, snap: EpochSnapshot) -> Optional[MigrationAction]:
+        return None
+
+
+class DeadlineAwareAllocation:
+    """The paper's allocation layer (closed-form active-set, Eq. 16–19)."""
+    name = "deadline-aware"
+
+    def allocate(self, cluster: ClusterState, t: float,
+                 nodes: Optional[List[int]] = None) -> None:
+        cluster.default_allocate(t, nodes)
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    epoch: int
+    t: float
+    snapshot: EpochSnapshot
+    action: Optional[MigrationAction]
+    shortlist: List[MigrationAction]
+    # realized class-resolved fulfillment over [t_k, t_{k+1})  (the critic
+    # label r_k: large-AI, small-AI, RAN)
+    fulfill: Optional[Tuple[float, float, float]] = None
+    counts: Optional[Tuple[int, int, int]] = None
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    dropped: set
+    migrations: List[Tuple[float, MigrationAction]]
+    epochs: List[EpochRecord]
+    infeasible_events: int
+    n_events: int
+
+    # ------------------------------------------------------------------ #
+    def fulfillment(self) -> Dict[str, float]:
+        stats: Dict[str, List[int]] = {}
+        for r in self.requests:
+            ok = r.fulfilled() and r.rid not in self.dropped
+            stats.setdefault(r.cls.value, []).append(int(ok))
+            stats.setdefault("overall", []).append(int(ok))
+            if r.cls.is_ai:
+                stats.setdefault("AI", []).append(int(ok))
+        return {k: float(np.mean(v)) for k, v in stats.items()}
+
+    def migration_counts(self) -> Tuple[int, int]:
+        """(large-AI migrations, total migrations) — Table II/III 'Mig'."""
+        large = sum(1 for _, a in self.migrations
+                    if a.category == InstanceCategory.LARGE_AI)
+        return large, len(self.migrations)
+
+    def summary(self) -> Dict[str, float]:
+        f = self.fulfillment()
+        large, tot = self.migration_counts()
+        return {
+            "overall": f.get("overall", 0.0),
+            "ran": f.get("RAN", 0.0),
+            "ai": f.get("AI", 0.0),
+            "large_ai": f.get("LARGE_AI", 0.0),
+            "small_ai": f.get("SMALL_AI", 0.0),
+            "mig_large": large,
+            "mig_total": tot,
+        }
+
+
+# annotate MigrationAction with its category for counting
+@dataclasses.dataclass(frozen=True)
+class CommittedMigration(MigrationAction):
+    category: InstanceCategory = InstanceCategory.SMALL_AI
+
+
+class Simulator:
+    def __init__(self, scenario: Dict, epoch_interval: float = 5.0,
+                 drop_expired: bool = False, seed: int = 0):
+        self.scenario = scenario
+        self.epoch_interval = epoch_interval
+        self.drop_expired = drop_expired
+        self.seed = seed
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: List[Request],
+            placement: PlacementPolicy,
+            allocation: AllocationPolicy,
+            rr_dispatch: bool = False,
+            max_events: int = 5_000_000,
+            epoch_hook: Optional[Callable] = None) -> SimResult:
+        # clone: requests carry mutable runtime state; runs must not interact
+        requests = [dataclasses.replace(r) for r in requests]
+        sc = self.scenario
+        cluster = ClusterState(sc["nodes"], sc["instances"], sc["placement"],
+                               sc["transport_delay"])
+        service_sids: Dict[str, List[int]] = sc["service_sids"]
+        ran_packet = sc["ran_packet_delay"]
+        delta = sc["transport_delay"]
+
+        heap: List[Tuple[float, int, str, object]] = []
+        seq = 0
+
+        def push(t: float, kind: str, payload) -> None:
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        horizon = max(r.arrival for r in requests) if requests else 0.0
+        n_epochs = int(horizon / self.epoch_interval) + 3
+        for k in range(1, n_epochs):
+            push(k * self.epoch_interval, "epoch", k)
+
+        for r in requests:
+            if r.cls == RequestClass.RAN:
+                push(r.arrival, "du", r)
+            else:
+                push(r.arrival + ran_packet, "ai_route", r)
+
+        dropped: set = set()
+        migrations: List[Tuple[float, MigrationAction]] = []
+        epochs: List[EpochRecord] = []
+        rr_counter = [0] if rr_dispatch else None
+
+        # per-interval outcome accumulators (for the critic label r_k)
+        win = {RequestClass.LARGE_AI: [0, 0], RequestClass.SMALL_AI: [0, 0],
+               RequestClass.RAN: [0, 0]}
+        arrivals_win: Dict[str, int] = {}
+
+        def record_outcome(req: Request, ok: bool) -> None:
+            w = win[req.cls]
+            w[0] += int(ok)
+            w[1] += 1
+
+        def finish_request(req: Request, t: float) -> None:
+            req.finish = t
+            record_outcome(req, req.fulfilled())
+
+        def drop_request(req: Request) -> None:
+            dropped.add(req.rid)
+            record_outcome(req, False)
+
+        t = 0.0
+        n_events = 0
+        allocation.allocate(cluster, t)
+        dirty: set = set()
+        last_full = 0.0
+        realloc_refresh = 0.25   # urgency drift: full re-solve at least 4 Hz
+
+        def mark(sid: int) -> None:
+            dirty.add(int(cluster.placement[sid]))
+
+        def cleanup_drops() -> None:
+            if not self.drop_expired:
+                return
+            for sid in range(cluster.S):
+                q = cluster.queues[sid]
+                while q.jobs:
+                    head = q.jobs[0]
+                    if head.started or head.abs_deadline > t:
+                        break
+                    q.pop()
+                    drop_request(head.req)
+                    mark(sid)
+
+        def next_completion() -> Tuple[float, int]:
+            best_t, best_s = INF, -1
+            for sid in range(cluster.S):
+                q = cluster.queues[sid]
+                head = q.head()
+                if head is None or not cluster.available(sid, t):
+                    continue
+                g, c = cluster.alloc_g[sid], cluster.alloc_c[sid]
+                dt = 0.0
+                if head.rem_g > 0:
+                    if g <= 0:
+                        continue
+                    dt += head.rem_g / g
+                if head.rem_c > 0:
+                    if c <= 0:
+                        continue
+                    dt += head.rem_c / c
+                if t + dt < best_t:
+                    best_t, best_s = t + dt, sid
+            return best_t, best_s
+
+        def advance(dt: float) -> None:
+            if dt <= 0:
+                return
+            for sid in range(cluster.S):
+                q = cluster.queues[sid]
+                head = q.head()
+                if head is None or not cluster.available(sid, t):
+                    continue
+                g, c = cluster.alloc_g[sid], cluster.alloc_c[sid]
+                rem_dt = dt
+                if head.rem_g > 0 and g > 0:
+                    tg = min(rem_dt, head.rem_g / g)
+                    q.progress_head(g * tg, 0.0)
+                    head.started = True
+                    rem_dt -= tg
+                if rem_dt > 0 and head.rem_c > 0 and c > 0:
+                    tc = min(rem_dt, head.rem_c / c)
+                    q.progress_head(0.0, c * tc)
+                    head.started = True
+
+        def handle_completion(sid: int) -> None:
+            q = cluster.queues[sid]
+            job = q.pop()
+            job.rem_g = job.rem_c = 0.0
+            req = job.req
+            inst = cluster.instances[sid]
+            if inst.category == InstanceCategory.DU:
+                # RAN chain: DU done -> transport -> CU-UP
+                cu_sid = cluster.cuup_of(req.cell)
+                hops = cluster.hops(cluster.placement[sid],
+                                    cluster.placement[cu_sid])
+                push(t + hops * delta, "cuup", req)
+            elif inst.category == InstanceCategory.CUUP:
+                finish_request(req, t)
+                cluster.observe_cuup_time(req.cell, t - req.stage_entered)
+            else:                                   # AI service done
+                finish_request(req, t)
+
+        def build_snapshot(epoch: int) -> EpochSnapshot:
+            util = cluster.utilization(t)
+            fl = {}
+            for cls, w in win.items():
+                fl[cls.value] = (w[0] / w[1]) if w[1] else 1.0
+            rates = {k: v / self.epoch_interval
+                     for k, v in arrivals_win.items()}
+            return EpochSnapshot(
+                t=t, epoch=epoch, nodes=cluster.nodes,
+                instances=cluster.instances,
+                placement=cluster.placement.copy(),
+                reconfig_until=cluster.reconfig_until.copy(),
+                gpu_util=util["gpu_util"], cpu_util=util["cpu_util"],
+                ran_floor_g=util["ran_floor_g"],
+                ran_floor_c=util["ran_floor_c"],
+                vram_used=util["vram_used"],
+                vram_headroom=util["vram_headroom"],
+                queue_len=util["queue_len"], psi_g=util["psi_g"],
+                psi_c=util["psi_c"], omega=util["omega"],
+                alloc_g=cluster.alloc_g.copy(),
+                alloc_c=cluster.alloc_c.copy(),
+                kv_held=np.array([q.kv_active for q in cluster.queues]),
+                recent_fulfill=fl, arrival_rate=rates)
+
+        def close_epoch_window(rec: Optional[EpochRecord]) -> None:
+            if rec is not None:
+                counts = (win[RequestClass.LARGE_AI][1],
+                          win[RequestClass.SMALL_AI][1],
+                          win[RequestClass.RAN][1])
+                rec.fulfill = tuple(
+                    (win[c][0] / win[c][1]) if win[c][1] else 1.0
+                    for c in (RequestClass.LARGE_AI, RequestClass.SMALL_AI,
+                              RequestClass.RAN))
+                rec.counts = counts
+            for w in win.values():
+                w[0] = w[1] = 0
+            arrivals_win.clear()
+
+        current_rec: Optional[EpochRecord] = None
+
+        while heap:
+            if n_events >= max_events:
+                break
+            t_comp, sid_comp = next_completion()
+            t_ev = heap[0][0]
+            t_next = min(t_comp, t_ev)
+            if not math.isfinite(t_next):
+                break
+            advance(t_next - t)
+            t = t_next
+            n_events += 1
+
+            if t_comp <= t_ev:
+                mark(sid_comp)
+                handle_completion(sid_comp)
+            else:
+                _, _, kind, payload = heapq.heappop(heap)
+                if kind == "du":
+                    req: Request = payload
+                    sid = cluster.du_of(req.cell)
+                    cluster.queues[sid].push(Job(
+                        req=req, rem_g=max(req.du_work_g, 1.0),
+                        rem_c=max(req.du_work_c, 0.0),
+                        abs_deadline=req.arrival + req.deadline))
+                    arrivals_win["ran"] = arrivals_win.get("ran", 0) + 1
+                    mark(sid)
+                elif kind == "cuup":
+                    req = payload
+                    sid = cluster.cuup_of(req.cell)
+                    req.stage_entered = t
+                    cluster.queues[sid].push(Job(
+                        req=req, rem_g=0.0,
+                        rem_c=max(req.cuup_work_c, 1e-9),
+                        abs_deadline=req.arrival + req.deadline))
+                    mark(sid)
+                elif kind == "ai_route":
+                    req = payload
+                    sids = service_sids[req.service]
+                    sid = cluster.route_ai(sids, t, rr_counter)
+                    req.target_sid = sid
+                    # transport: DU node -> AI node hops
+                    du_node = cluster.placement[cluster.du_of(req.cell)]
+                    ai_node = cluster.placement[sid]
+                    hops = cluster.hops(du_node, ai_node)
+                    push(t + hops * delta, "ai_enqueue", (req, sid))
+                    arrivals_win[req.service] = \
+                        arrivals_win.get(req.service, 0) + 1
+                elif kind == "ai_enqueue":
+                    req, sid = payload
+                    req.stage_entered = t
+                    cluster.queues[sid].push(Job(
+                        req=req, rem_g=max(req.ai_work_g, 1.0),
+                        rem_c=max(req.ai_work_c, 0.0),
+                        abs_deadline=req.arrival + req.deadline,
+                        kv_bytes=req.kv_bytes))
+                    mark(sid)
+                elif kind == "epoch":
+                    k: int = payload
+                    close_epoch_window(current_rec)
+                    snap = build_snapshot(k)
+                    action = placement.decide(snap)
+                    shortlist = getattr(placement, "last_shortlist", [])
+                    if action is not None:
+                        ok = (cluster.migration_feasible(action)
+                              and cluster.available(action.sid, t))
+                        if ok:
+                            inst = cluster.instances[action.sid]
+                            committed = CommittedMigration(
+                                sid=action.sid, src=action.src,
+                                dst=action.dst, category=inst.category)
+                            cluster.apply_migration(committed, t)
+                            migrations.append((t, committed))
+                            push(t + inst.reconfig_s, "mig_done", action.sid)
+                        else:
+                            action = None
+                    current_rec = EpochRecord(
+                        epoch=k, t=t, snapshot=snap, action=action,
+                        shortlist=list(shortlist))
+                    epochs.append(current_rec)
+                    if epoch_hook is not None:
+                        epoch_hook(current_rec, cluster)
+                elif kind == "mig_done":
+                    mark(payload)   # availability flip triggers realloc
+                if kind == "epoch":
+                    dirty.update(range(cluster.N))
+
+            cleanup_drops()
+            if t - last_full >= realloc_refresh or len(dirty) >= cluster.N:
+                allocation.allocate(cluster, t)
+                last_full = t
+            elif dirty:
+                allocation.allocate(cluster, t, sorted(dirty))
+            dirty.clear()
+
+        # drain: no timed events left, but queues may still hold work
+        while n_events < max_events:
+            t_comp, sid_comp = next_completion()
+            if not math.isfinite(t_comp):
+                break
+            advance(t_comp - t)
+            t = t_comp
+            n_events += 1
+            handle_completion(sid_comp)
+            cleanup_drops()
+            allocation.allocate(cluster, t)
+
+        close_epoch_window(current_rec)
+        return SimResult(requests=requests, dropped=dropped,
+                         migrations=migrations, epochs=epochs,
+                         infeasible_events=cluster.infeasible_events,
+                         n_events=n_events)

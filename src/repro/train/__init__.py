@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.train.loop import TrainConfig, train
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "TrainConfig", "train"]

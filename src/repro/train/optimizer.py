@@ -1,0 +1,74 @@
+"""Pure-JAX AdamW + schedules + global-norm clipping (no optax in the
+container; the explicit pytree keeps checkpoint/restore trivial)."""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Tree
+    v: Tree
+
+
+def adamw_init(params: Tree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float
+                        ) -> Tuple[Tree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(params: Tree, grads: Tree, state: AdamWState, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1
+                 ) -> Tuple[Tree, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if p.ndim >= 2:                      # decay matrices, not norms/bias
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_p = jax.tree.map(lambda t3: t3[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=is3)
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_schedule(step: jax.Array, *, peak_lr: float, warmup: int,
+                    total: int, floor_frac: float = 0.1) -> jax.Array:
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / max(warmup, 1)
+    frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac)
+                     * 0.5 * (1 + jnp.cos(math.pi * frac)))
+    return jnp.where(t < warmup, warm, cos)

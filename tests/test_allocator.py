@@ -1,0 +1,155 @@
+"""Property tests for the closed-form deadline-aware allocator (Eq. 13–19).
+
+The paper's claim is that the active-set closed form IS the argmin of the
+convex problem (16).  We certify:
+  * KKT optimality vs a numeric projected-gradient solve,
+  * the capacity and floor constraints as invariants under random inputs,
+  * exact agreement between the JAX, NumPy, and Pallas implementations.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import allocator
+from repro.core.allocator_np import active_set_np, solve_resource_np
+from repro.kernels import ops as kops
+
+S = 12
+
+
+def _rand_inputs(seed, feasible_floors=True):
+    rng = np.random.default_rng(seed)
+    psi = np.where(rng.random(S) < 0.8, rng.uniform(0, 1e14, S), 0.0)
+    omega = np.where(psi > 0, rng.uniform(0.1, 1e3, S), 0.0)
+    cap = rng.uniform(5e13, 3e14)
+    floors = np.where(rng.random(S) < 0.4, rng.uniform(0, cap / S, S), 0.0)
+    if not feasible_floors:
+        floors = floors * 20.0
+    mask = rng.random(S) < 0.9
+    return psi, omega, floors, cap, mask
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), feas=st.booleans())
+def test_capacity_and_floor_invariants(seed, feas):
+    psi, omega, floors, cap, mask = _rand_inputs(seed, feas)
+    res = allocator.solve_resource(jnp.asarray(psi), jnp.asarray(omega),
+                                   jnp.asarray(floors), jnp.asarray(cap),
+                                   jnp.asarray(mask))
+    alloc = np.asarray(res.alloc)
+    # capacity: Σ alloc ≤ cap (float32 tolerance)
+    assert alloc.sum() <= cap * (1 + 1e-5) + 1e3
+    # non-resident instances get nothing
+    assert np.all(alloc[~mask] == 0)
+    # floors respected whenever they are jointly feasible
+    if bool(res.feasible):
+        f = np.where(mask, floors, 0.0)
+        assert np.all(alloc + cap * 1e-5 + 1e3 >= f)
+    # non-negative
+    assert np.all(alloc >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_closed_form_matches_numeric_convex_solve(seed):
+    """The active-set result attains the numeric optimum of Eq. 16."""
+    psi, omega, floors, cap, mask = _rand_inputs(seed, True)
+    res = allocator.solve_resource(jnp.asarray(psi), jnp.asarray(omega),
+                                   jnp.asarray(floors), jnp.asarray(cap),
+                                   jnp.asarray(mask))
+    x_num = allocator.solve_numeric(jnp.asarray(psi), jnp.asarray(omega),
+                                    jnp.asarray(floors), jnp.asarray(cap),
+                                    jnp.asarray(mask))
+    f_closed = float(allocator.objective(res.alloc, jnp.asarray(psi),
+                                         jnp.asarray(omega),
+                                         jnp.asarray(mask)))
+    f_num = float(allocator.objective(x_num, jnp.asarray(psi),
+                                      jnp.asarray(omega), jnp.asarray(mask)))
+    # closed form must be at least as good as the numeric solve
+    assert f_closed <= f_num * (1 + 5e-3) + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), feas=st.booleans())
+def test_jax_equals_numpy(seed, feas):
+    psi, omega, floors, cap, mask = _rand_inputs(seed, feas)
+    res = allocator.solve_resource(jnp.asarray(psi), jnp.asarray(omega),
+                                   jnp.asarray(floors), jnp.asarray(cap),
+                                   jnp.asarray(mask))
+    a_np, f_np, _ = solve_resource_np(psi, omega, floors, float(cap), mask)
+    np.testing.assert_allclose(np.asarray(res.alloc), a_np, rtol=1e-4,
+                               atol=cap * 1e-5)
+    assert bool(res.feasible) == bool(f_np)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pallas_kernel_equals_oracle(seed):
+    rng = np.random.default_rng(seed)
+    N = 4
+    psi = rng.uniform(0, 1e14, (N, S))
+    omega = rng.uniform(0, 100, (N, S))
+    cap = rng.uniform(5e13, 2e14, N)
+    floors = np.where(rng.random((N, S)) < 0.3,
+                      rng.uniform(0, 2e13, (N, S)), 0.0)
+    mask = rng.random((N, S)) < 0.9
+    al, fe, pin = kops.alloc_active_set(
+        jnp.asarray(psi), jnp.asarray(omega), jnp.asarray(floors),
+        jnp.asarray(cap), jnp.asarray(mask))
+    for n in range(N):
+        a_np, f_np, _ = solve_resource_np(psi[n], omega[n], floors[n],
+                                          float(cap[n]), mask[n])
+        np.testing.assert_allclose(np.asarray(al[n]), a_np, rtol=1e-4,
+                                   atol=cap[n] * 1e-5)
+        assert bool(fe[n]) == bool(f_np)
+
+
+def test_sqrt_proportionality():
+    """Unfloored instances follow g ∝ √(ωΨ) exactly (Eq. 17)."""
+    psi = np.array([1e13, 4e13, 9e13, 0.0])
+    omega = np.array([1.0, 1.0, 1.0, 0.0])
+    res = allocator.solve_resource(jnp.asarray(psi), jnp.asarray(omega),
+                                   jnp.zeros(4), jnp.asarray(1e14),
+                                   jnp.ones(4, bool))
+    a = np.asarray(res.alloc)
+    w = np.sqrt(psi * omega)
+    np.testing.assert_allclose(a[:3] / a[:3].sum(), w[:3] / w[:3].sum(),
+                               rtol=1e-5)
+    assert a[3] == 0.0
+    np.testing.assert_allclose(a.sum(), 1e14, rtol=1e-5)
+
+
+def test_floor_clipping_redistributes():
+    """A pinned instance keeps its floor; the rest re-share (Eq. 18–19)."""
+    psi = np.array([1e10, 5e13, 5e13])          # inst 0: tiny work, big floor
+    omega = np.ones(3)
+    floors = np.array([4e13, 0.0, 0.0])
+    res = allocator.solve_resource(jnp.asarray(psi), jnp.asarray(omega),
+                                   jnp.asarray(floors), jnp.asarray(1e14),
+                                   jnp.ones(3, bool))
+    a = np.asarray(res.alloc)
+    assert a[0] == pytest.approx(4e13, rel=1e-5)          # pinned at floor
+    assert a[1] == pytest.approx(a[2], rel=1e-5)          # equal √ωΨ shares
+    assert a[1] + a[2] == pytest.approx(6e13, rel=1e-5)   # residual capacity
+
+
+def test_infeasible_floors_scale_down():
+    psi = np.array([1e13, 1e13])
+    omega = np.ones(2)
+    floors = np.array([8e13, 8e13])              # Σ floors = 1.6e14 > 1e14
+    res = allocator.solve_resource(jnp.asarray(psi), jnp.asarray(omega),
+                                   jnp.asarray(floors), jnp.asarray(1e14),
+                                   jnp.ones(2, bool))
+    assert not bool(res.feasible)
+    assert float(np.sum(np.asarray(res.alloc))) <= 1e14 * (1 + 1e-5)
+
+
+def test_generic_active_set_equal_share():
+    """active_set_np with unit weights = equal share (Round-Robin baseline)."""
+    w = np.ones(4)
+    alloc, feas, _ = active_set_np(w, np.zeros(4), 100.0, np.ones(4, bool))
+    np.testing.assert_allclose(alloc, 25.0)

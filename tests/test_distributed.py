@@ -1,0 +1,112 @@
+"""Sharding rules, checkpointing, and gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import compression as comp
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
+                                        spec_for)
+from jax.sharding import PartitionSpec as P
+
+
+class FakeMesh:
+    """Just enough of a Mesh for spec_for (shape lookup)."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def test_spec_for_divisible_dims():
+    mesh = FakeMesh(data=16, model=16)
+    spec = spec_for((152064, 896), ("vocab", "d_model"), mesh)
+    assert spec == P("model", "data")
+
+
+def test_spec_for_fallback_replication():
+    mesh = FakeMesh(data=16, model=16)
+    # qwen2: 14 heads not divisible by model=16 -> replicated head dim
+    spec = spec_for((896, 14, 64), ("d_model", "heads", None), mesh)
+    assert spec == P("data",)
+    # zamba2: 24 SSD heads not divisible -> replicated
+    spec = spec_for((24,), ("ssm_heads",), mesh)
+    assert spec == P()
+
+
+def test_spec_for_no_axis_reuse():
+    mesh = FakeMesh(data=16, model=16)
+    # both dims want "model": only the first gets it
+    spec = spec_for((256, 256), ("vocab", "heads"), mesh)
+    assert spec == P("model",)
+
+
+def test_spec_for_missing_mesh_axis():
+    mesh = FakeMesh(data=16, model=16)          # no "pod"
+    spec = spec_for((4096, 128), ("batch", None), mesh)
+    assert spec == P("data",)
+    mesh3 = FakeMesh(pod=2, data=16, model=16)
+    spec = spec_for((4096, 128), ("batch", None), mesh3)
+    assert spec == P(("pod", "data"),)
+
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    params = {"w": jnp.arange(12.0).reshape(3, 4),
+              "nested": {"b": jnp.ones(5, jnp.bfloat16)}}
+    ckpt.save_checkpoint(str(tmp_path), 10, params)
+    ckpt.save_checkpoint(str(tmp_path), 20, params)
+    assert ckpt.latest_step(str(tmp_path)) == 20
+    template = {"params": jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)}
+    state, step, _ = ckpt.restore_checkpoint(str(tmp_path), template)
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.asarray(params["w"]))
+    assert state["params"]["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    params = {"w": jnp.zeros((4,))}
+    ckpt.save_checkpoint(str(tmp_path), 1, params)
+    leftovers = [p for p in os.listdir(tmp_path) if p.startswith(".tmp")]
+    assert not leftovers
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    template = {"params": {"w": jax.ShapeDtypeStruct((5,), jnp.float32)}}
+    with pytest.raises(ValueError):
+        ckpt.restore_checkpoint(str(tmp_path), template)
+
+
+def test_checkpoint_extra_state(tmp_path):
+    ckpt.save_checkpoint(str(tmp_path), 7, {"w": jnp.zeros(3)},
+                         extra={"pipeline": {"step": 7}})
+    template = {"params": {"w": jax.ShapeDtypeStruct((3,), jnp.float32)}}
+    _, _, extra = ckpt.restore_checkpoint(str(tmp_path), template)
+    assert extra == {"pipeline": {"step": 7}}
+
+
+def test_int8_compression_bounded_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    q, scale = comp.compress_int8(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(comp.decompress_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Σ compressed grads → Σ true grads (error feedback carries residual)."""
+    rng = np.random.default_rng(1)
+    grads = [jnp.asarray(rng.normal(size=(32,)).astype(np.float32) * 1e-3)
+             for _ in range(50)]
+    state = comp.init_state({"g": grads[0]})
+    acc = np.zeros(32)
+    for g in grads:
+        cg, state = comp.compressed_gradients({"g": g}, state)
+        acc += np.asarray(cg["g"])
+    true = np.sum([np.asarray(g) for g in grads], axis=0)
+    resid = np.abs(acc + np.asarray(state.error["g"]) - true)
+    assert resid.max() < 1e-4

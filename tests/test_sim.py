@@ -1,0 +1,141 @@
+"""Simulator invariants: request accounting, RAN floors, migrations, VRAM."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import EqualShareAllocation
+from repro.sim import (Simulator, WorkloadConfig, generate_workload,
+                       paper_scenario)
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+from repro.sim.types import InstanceCategory, MigrationAction, RequestClass
+from repro.core.controller import ScriptedPlacement
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return paper_scenario()
+
+
+@pytest.fixture(scope="module")
+def small_run(scenario):
+    wcfg = WorkloadConfig(rho=1.0, n_ai_requests=600, seed=3)
+    reqs, _ = generate_workload(wcfg, scenario["work_models"])
+    sim = Simulator(scenario, epoch_interval=5.0)
+    res = sim.run(reqs, StaticPlacement(), DeadlineAwareAllocation())
+    return reqs, res
+
+
+def test_all_requests_terminate(small_run):
+    reqs, res = small_run
+    unfinished = [r for r in res.requests
+                  if r.finish < 0 and r.rid not in res.dropped]
+    assert not unfinished, f"{len(unfinished)} requests never completed"
+
+
+def test_fulfillment_consistency(small_run):
+    _, res = small_run
+    f = res.fulfillment()
+    assert 0.0 <= f["overall"] <= 1.0
+    # overall is the request-weighted blend of the class rates
+    per = [int(r.fulfilled() and r.rid not in res.dropped)
+           for r in res.requests]
+    assert abs(f["overall"] - np.mean(per)) < 1e-9
+
+
+def test_ran_floors_protect_under_ai_overload(small_run):
+    """Eq. 5b via floors: RAN stays ≥90% even at ρ=1.0 AI saturation."""
+    _, res = small_run
+    assert res.fulfillment()["RAN"] >= 0.90
+
+
+def test_latency_includes_transport(scenario, small_run):
+    reqs, res = small_run
+    done = [r for r in res.requests
+            if r.cls != RequestClass.RAN and r.finish > 0]
+    assert done
+    # AI latency ≥ RAN-packet processing delay (δ_q component)
+    assert min(r.finish - r.arrival for r in done) >= \
+        scenario["ran_packet_delay"] * 0.999
+
+
+def test_scripted_migration_applies_reconfig(scenario):
+    wcfg = WorkloadConfig(rho=1.0, n_ai_requests=400, seed=4)
+    reqs, _ = generate_workload(wcfg, scenario["work_models"])
+    sim = Simulator(scenario, epoch_interval=5.0)
+    res = sim.run(reqs, ScriptedPlacement({1: ("large0", 1)}),
+                  DeadlineAwareAllocation())
+    assert len(res.migrations) == 1
+    t, a = res.migrations[0]
+    inst = scenario["instances"][a.sid]
+    assert inst.name == "large0" and a.dst == 1
+    assert inst.reconfig_s == pytest.approx(8.0)   # Table I large-AI reload
+
+
+def test_migration_respects_vram(scenario):
+    """large-AI (28 GB) can never land on a 24 GB cpu-heavy node (Eq. 4)."""
+    from repro.sim.cluster import ClusterState
+    cl = ClusterState(scenario["nodes"], scenario["instances"],
+                      scenario["placement"], scenario["transport_delay"])
+    large_sid = next(s.sid for s in scenario["instances"]
+                     if s.name == "large0")
+    bad = MigrationAction(sid=large_sid, src=0, dst=2)   # n2 = cpu-heavy
+    assert not cl.migration_feasible(bad)
+    ok = MigrationAction(sid=large_sid, src=0, dst=1)
+    assert cl.migration_feasible(ok)
+
+
+def test_capacity_never_exceeded(scenario):
+    """Σ allocations ≤ node capacity at every epoch (Eq. 3)."""
+    wcfg = WorkloadConfig(rho=1.25, n_ai_requests=400, seed=5)
+    reqs, _ = generate_workload(wcfg, scenario["work_models"])
+    sim = Simulator(scenario, epoch_interval=5.0)
+    violations = []
+
+    def hook(rec, cluster):
+        g = np.zeros(cluster.N)
+        c = np.zeros(cluster.N)
+        for sid in range(cluster.S):
+            n = cluster.placement[sid]
+            g[n] += cluster.alloc_g[sid]
+            c[n] += cluster.alloc_c[sid]
+        if np.any(g > cluster.gpu_capacity * (1 + 1e-6)):
+            violations.append(("gpu", rec.epoch))
+        if np.any(c > cluster.cpu_capacity * (1 + 1e-6)):
+            violations.append(("cpu", rec.epoch))
+
+    sim.run(reqs, StaticPlacement(), DeadlineAwareAllocation(),
+            epoch_hook=hook)
+    assert not violations
+
+
+def test_equal_share_also_respects_floors(scenario):
+    wcfg = WorkloadConfig(rho=1.0, n_ai_requests=400, seed=6)
+    reqs, _ = generate_workload(wcfg, scenario["work_models"])
+    sim = Simulator(scenario, epoch_interval=5.0)
+    res = sim.run(reqs, StaticPlacement(), EqualShareAllocation())
+    assert res.fulfillment()["RAN"] >= 0.90
+
+
+def test_rr_dispatch_changes_routing(scenario):
+    wcfg = WorkloadConfig(rho=0.75, n_ai_requests=300, seed=7)
+    reqs, _ = generate_workload(wcfg, scenario["work_models"])
+    sim = Simulator(scenario, epoch_interval=5.0)
+    r1 = sim.run(reqs, StaticPlacement(), DeadlineAwareAllocation(),
+                 rr_dispatch=False)
+    r2 = sim.run(reqs, StaticPlacement(), DeadlineAwareAllocation(),
+                 rr_dispatch=True)
+    t1 = [r.target_sid for r in r1.requests if r.cls.is_ai]
+    t2 = [r.target_sid for r in r2.requests if r.cls.is_ai]
+    assert t1 != t2
+
+
+def test_workload_rho_scaling(scenario):
+    w1, i1 = generate_workload(WorkloadConfig(rho=0.75, n_ai_requests=500,
+                                              seed=0),
+                               scenario["work_models"])
+    w2, i2 = generate_workload(WorkloadConfig(rho=1.25, n_ai_requests=500,
+                                              seed=0),
+                               scenario["work_models"])
+    assert i2["lambda_ai"] > i1["lambda_ai"] * 1.5
+    # both classes scale together (paper: same factor at each load point)
+    assert i2["lambda_ran"] / i1["lambda_ran"] == pytest.approx(
+        i2["lambda_ai"] / i1["lambda_ai"], rel=0.05)

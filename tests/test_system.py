@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests for the paper's system (Tables II/III shape).
+
+Small workloads (runtime-bounded) — the full-scale numbers live in
+benchmarks/ and EXPERIMENTS.md; here we assert the paper's *qualitative*
+claims hold end to end:
+  H1 (Table III): HAF beats the static placement by fixing the binding
+      large-AI consolidation with a large-AI migration.
+  H2 (Table II):  the critic prunes migrations and never hurts a noisy
+      agent; it approves the decisive early migration.
+  H3 (Fig. 2):    the HAF advantage shrinks at ρ=1.25 (capacity-limited).
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import HAFPlacement, make_agent
+from repro.core.critic import Critic
+from repro.sim import (Simulator, WorkloadConfig, generate_workload,
+                       paper_scenario)
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+from repro.sim.types import InstanceCategory
+
+CRITIC_PATH = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / \
+    "critic.json"
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return paper_scenario()
+
+
+@pytest.fixture(scope="module")
+def workload(scenario):
+    wcfg = WorkloadConfig(rho=1.0, n_ai_requests=1500, seed=0)
+    return generate_workload(wcfg, scenario["work_models"])[0]
+
+
+@pytest.fixture(scope="module")
+def critic(scenario):
+    if CRITIC_PATH.exists():
+        return Critic.load(str(CRITIC_PATH))
+    pytest.skip("no trained critic artifact (run benchmarks.critic_data)")
+
+
+def test_haf_beats_static(scenario, workload):
+    sim = Simulator(scenario, epoch_interval=5.0)
+    static = sim.run(workload, StaticPlacement(),
+                     DeadlineAwareAllocation()).summary()
+    haf = sim.run(workload,
+                  HAFPlacement(make_agent("qwen3-32b-sim"), critic=None),
+                  DeadlineAwareAllocation()).summary()
+    assert haf["overall"] > static["overall"] + 0.10
+    assert haf["large_ai"] > static["large_ai"] + 0.30
+    assert haf["mig_large"] >= 1           # the binding migration happened
+    assert static["small_ai"] > 0.95       # small-AI never the bottleneck
+
+
+def test_critic_gates_noisy_agent(scenario, workload, critic):
+    sim = Simulator(scenario, epoch_interval=5.0)
+    agent = "deepseek-r1-70b-sim"          # eager/noisy stand-in
+    nc = sim.run(workload, HAFPlacement(make_agent(agent), critic=None),
+                 DeadlineAwareAllocation()).summary()
+    wc = sim.run(workload, HAFPlacement(make_agent(agent), critic=critic),
+                 DeadlineAwareAllocation()).summary()
+    assert wc["mig_total"] < nc["mig_total"]          # fewer migrations
+    assert wc["overall"] >= nc["overall"] - 0.02      # never hurts
+
+
+def test_critic_approves_decisive_migration(scenario, workload, critic):
+    sim = Simulator(scenario, epoch_interval=5.0)
+    res = sim.run(workload,
+                  HAFPlacement(make_agent("qwen3-32b-sim"), critic=critic),
+                  DeadlineAwareAllocation())
+    large_migs = [a for _, a in res.migrations
+                  if a.category == InstanceCategory.LARGE_AI]
+    assert len(large_migs) >= 1
+    assert res.summary()["overall"] > 0.85
+
+
+def test_advantage_shrinks_at_saturation(scenario):
+    sim = Simulator(scenario, epoch_interval=5.0)
+    gaps = {}
+    for rho in (1.0, 1.25):
+        wcfg = WorkloadConfig(rho=rho, n_ai_requests=1200, seed=1)
+        reqs, _ = generate_workload(wcfg, scenario["work_models"])
+        s = sim.run(reqs, StaticPlacement(),
+                    DeadlineAwareAllocation()).summary()
+        h = sim.run(reqs,
+                    HAFPlacement(make_agent("qwen3-32b-sim"), critic=None),
+                    DeadlineAwareAllocation()).summary()
+        gaps[rho] = h["ai"] - s["ai"]
+    assert gaps[1.25] < gaps[1.0]          # capacity-limited convergence
