@@ -1,8 +1,10 @@
-"""Shared benchmark scaffolding: scenario, workloads, critic, CSV output.
+"""Shared benchmark scaffolding on top of the repro.sim.scenarios registry
+and the repro.eval fleet harness.
 
 Scale: REPRO_FULL=1 runs the paper-scale request counts (Table I: 20k at
 ρ=1.0, 15k/25k at 0.75/1.25); the default is a 4× reduced load with the
 same operating points so `python -m benchmarks.run` finishes on one CPU.
+REPRO_WORKERS sets the sweep parallelism (default: up to 4 processes).
 """
 from __future__ import annotations
 
@@ -10,46 +12,51 @@ import os
 import pathlib
 import pickle
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
-from repro.core import HAFPlacement, make_agent, train_critic
 from repro.core.critic import Critic
 from repro.core.datagen import harvest
-from repro.sim import (Simulator, WorkloadConfig, generate_workload,
-                       paper_scenario)
-from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+from repro.core import train_critic
+from repro.eval import SweepSpec, haf_spec, run_sweep
+from repro.sim import Simulator, make_scenario, workload_for
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACTS = ROOT / "artifacts"
 FULL = os.environ.get("REPRO_FULL", "0") == "1"
+WORKERS = int(os.environ.get("REPRO_WORKERS",
+                             max(1, min(4, os.cpu_count() or 1))))
 
 # paper request counts (Table I / §IV-3); default = /4 for CPU runtime
 REQUESTS = {0.75: 15000, 1.0: 20000, 1.25: 25000} if FULL else \
            {0.75: 3750, 1.0: 5000, 1.25: 6250}
 
-_scenario = None
+DEFAULT_AGENT = "qwen3-32b-sim"
+
+_scenarios: Dict[str, Dict] = {}
 
 
-def scenario() -> Dict:
-    global _scenario
-    if _scenario is None:
-        _scenario = paper_scenario()
-    return _scenario
+def scenario(name: str = "paper", **params) -> Dict:
+    """Registry scenario, cached per (name, params)."""
+    key = name + repr(sorted(params.items()))
+    if key not in _scenarios:
+        _scenarios[key] = make_scenario(name, **params)
+    return _scenarios[key]
 
 
 def workload(rho: float, seed: int = 0):
-    wcfg = WorkloadConfig(rho=rho, n_ai_requests=REQUESTS[rho], seed=seed)
-    return generate_workload(wcfg, scenario()["work_models"])[0]
+    return workload_for(scenario(), seed=seed, rho=rho,
+                        n_ai_requests=REQUESTS[rho])[0]
 
 
 def get_critic(retrain: bool = False) -> Critic:
     """The frozen critic artifact (trained offline once, reused everywhere)."""
-    path = ARTIFACTS / "critic.json"
+    path = critic_path()
     if path.exists() and not retrain:
         return Critic.load(str(path))
     print("# training critic (offline phase: exploration + counterfactual "
           "probes + supervised regression)...", flush=True)
     samples = harvest(scenario(), verbose=False)
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
     with open(ARTIFACTS / "critic_samples.pkl", "wb") as f:
         pickle.dump(samples, f)
     critic = train_critic(samples, epochs=2000, seed=0)
@@ -57,12 +64,44 @@ def get_critic(retrain: bool = False) -> Critic:
     return critic
 
 
+def critic_path() -> pathlib.Path:
+    return ARTIFACTS / "critic.json"
+
+
 def simulator() -> Simulator:
     return Simulator(scenario(), epoch_interval=5.0)
 
 
+def method_grid(caora_alpha: float, with_critic: bool = True,
+                agent: str = DEFAULT_AGENT) -> List[Dict]:
+    """The Table-III method grid as repro.eval method specs."""
+    return [
+        {"name": "haf-static", "label": "HAF-Static"},
+        {"name": "round-robin", "label": "Round-Robin"},
+        {"name": "lyapunov", "label": "Lyapunov"},
+        {"name": "game-theory", "label": "Game-Theory"},
+        {"name": "caora", "label": "CAORA", "params": {"alpha": caora_alpha}},
+        haf_spec(agent=agent,
+                 critic_path=str(critic_path()) if with_critic else None),
+    ]
+
+
+def sweep(methods, scenarios, seeds=(0,), workers: Optional[int] = None,
+          **kw) -> List[Dict]:
+    """Run a policies × scenarios × seeds grid through repro.eval.
+
+    Returns only completed rows: failed jobs (None slots, already reported
+    by run_sweep) are dropped so callers can print/post-process directly.
+    """
+    spec = SweepSpec(methods=tuple(methods), scenarios=tuple(scenarios),
+                     seeds=tuple(seeds),
+                     workers=WORKERS if workers is None else workers, **kw)
+    return [r for r in run_sweep(spec) if r is not None]
+
+
 def run_method(name: str, placement, allocation, requests,
                rr_dispatch: bool = False) -> Dict[str, float]:
+    """Single in-process run (ablations that hold live policy objects)."""
     t0 = time.time()
     res = simulator().run(requests, placement, allocation,
                           rr_dispatch=rr_dispatch)

@@ -1,41 +1,29 @@
 """Fig. 2: load sweep ρ ∈ {0.75, 1.0, 1.25} for HAF and all baselines.
 
 Request counts follow the paper (15k/20k/25k at full scale) so the horizon
-stays comparable across load points.
+stays comparable across load points.  The grid runs through the
+repro.eval fleet harness (parallel workers, one job per method × ρ).
 """
 from __future__ import annotations
 
 from benchmarks import common
 from benchmarks.table3_baselines import caora_alpha
-from repro.core import HAFPlacement, make_agent
-from repro.core.baselines import (AlphaSplitAllocation, EqualShareAllocation,
-                                  GameTheoryPlacement, LyapunovPlacement,
-                                  MarketAllocation, MaxWeightAllocation)
-from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
 
 
-def main(agent: str = "qwen3-32b-sim") -> list:
-    critic = common.get_critic()
-    rows = []
-    for rho in (0.75, 1.0, 1.25):
-        reqs = common.workload(rho)
-        methods = [
-            ("HAF-Static", StaticPlacement(), DeadlineAwareAllocation(),
-             False),
-            ("Round-Robin", StaticPlacement(), EqualShareAllocation(), True),
-            ("Lyapunov", LyapunovPlacement(), MaxWeightAllocation(), False),
-            ("Game-Theory", GameTheoryPlacement(), MarketAllocation(), False),
-            ("CAORA", StaticPlacement(),
-             AlphaSplitAllocation(caora_alpha()), False),
-            ("HAF", HAFPlacement(make_agent(agent), critic=critic),
-             DeadlineAwareAllocation(), False),
-        ]
-        for name, pp, ap, rr in methods:
-            s = common.run_method(f"{name}@rho={rho}", pp, ap, reqs,
-                                  rr_dispatch=rr)
-            s["rho"] = rho
-            rows.append(s)
-            print(common.csv_row("fig2", s), flush=True)
+def main(agent: str = common.DEFAULT_AGENT) -> list:
+    common.get_critic()                      # ensure the critic artifact
+    scenarios = [
+        {"family": "paper", "label": f"rho={rho}",
+         "params": {"rho": rho, "n_ai_requests": common.REQUESTS[rho]}}
+        for rho in (0.75, 1.0, 1.25)
+    ]
+    rows = common.sweep(common.method_grid(caora_alpha(), agent=agent),
+                        scenarios)
+    rho_of = {sc["label"]: sc["params"]["rho"] for sc in scenarios}
+    for s in rows:
+        s["rho"] = rho_of[s["scenario"]]
+        printed = dict(s, method=f"{s['method']}@{s['scenario']}")
+        print(common.csv_row("fig2", printed), flush=True)
     return rows
 
 

@@ -1,0 +1,62 @@
+"""Fleet sweep: HAF + baselines across the generated scenario families.
+
+This is the scenario-diversity benchmark the registry enables — the
+paper's Table-III grid is one cell of it.  Writes an aggregated JSON
+report (per-class fulfillment mean/CI + migration counts) to
+``artifacts/fleet_sweep.json``.
+
+  PYTHONPATH=src python -m benchmarks.fleet_sweep            # default
+  PYTHONPATH=src python -m benchmarks.fleet_sweep --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+from repro.eval import build_report, format_table, haf_spec, write_report
+from repro.eval.sweep import SweepSpec, run_sweep
+
+FAMILIES = ("paper", "diurnal", "flash-crowd", "heavy-tail", "node-outage",
+            "skewed-hetero")
+
+
+def main(smoke: bool = False, seeds: int = 2, agent: str =
+         common.DEFAULT_AGENT) -> dict:
+    # smoke mode must stay CI-fast: use the critic artifact only if it is
+    # already there (HAF runs agent-only otherwise); the full run trains it
+    if smoke:
+        critic = str(common.critic_path()) \
+            if common.critic_path().exists() else None
+    else:
+        common.get_critic()
+        critic = str(common.critic_path())
+    methods = [
+        haf_spec(agent=agent, critic_path=critic),
+        "haf-static", "round-robin", "lyapunov",
+    ]
+    spec = SweepSpec(
+        methods=tuple(methods),
+        scenarios=FAMILIES[:3] if smoke else FAMILIES,
+        seeds=(0,) if smoke else tuple(range(seeds)),
+        n_ai_requests=150 if smoke else (None if common.FULL else 2000),
+        workers=common.WORKERS,
+    )
+    rows = run_sweep(spec, verbose=not smoke)
+    report = build_report(spec, rows)
+    path = write_report(report, common.ARTIFACTS / "fleet_sweep.json")
+    for s in (r for r in rows if r is not None):
+        printed = dict(s, method=f"{s['method']}@{s['scenario']}"
+                                 f"#s{s['seed']}")
+        print(common.csv_row("fleet", printed), flush=True)
+    print(format_table(report["aggregate"]))
+    print(f"# report -> {path}", flush=True)
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny request counts, 1 seed (CI)")
+    ap.add_argument("--seeds", type=int, default=2)
+    args = ap.parse_args()
+    main(smoke=args.smoke, seeds=args.seeds)

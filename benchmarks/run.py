@@ -1,8 +1,10 @@
 """Benchmark aggregator — one section per paper table/figure + the roofline
-report.  Prints CSV lines (``table,method,metric=...``).
+report and the scenario-fleet sweep.  Prints CSV lines
+(``table,method,metric=...``).
 
   PYTHONPATH=src python -m benchmarks.run             # reduced-scale (CPU)
   REPRO_FULL=1 PYTHONPATH=src python -m benchmarks.run  # paper-scale counts
+  PYTHONPATH=src python -m benchmarks.run --only fleet --smoke   # CI mode
 """
 from __future__ import annotations
 
@@ -14,13 +16,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=(None, "table2", "table3", "fig2", "roofline",
-                             "alloc"))
+                             "alloc", "fleet"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode for the fleet sweep (tiny request "
+                         "counts, 1 seed)")
     args = ap.parse_args()
     t0 = time.time()
 
     from benchmarks import common
     print(f"# scenario: 6 nodes, requests={common.REQUESTS} "
-          f"(REPRO_FULL={'1' if common.FULL else '0'})", flush=True)
+          f"(REPRO_FULL={'1' if common.FULL else '0'}, "
+          f"workers={common.WORKERS})", flush=True)
 
     if args.only in (None, "alloc"):
         from benchmarks import alloc_microbench
@@ -34,6 +40,9 @@ def main() -> None:
     if args.only in (None, "fig2"):
         from benchmarks import fig2_load_sweep
         fig2_load_sweep.main()
+    if args.only in (None, "fleet"):
+        from benchmarks import fleet_sweep
+        fleet_sweep.main(smoke=args.smoke)
     if args.only in (None, "roofline"):
         from benchmarks import roofline_report
         roofline_report.main()

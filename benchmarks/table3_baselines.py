@@ -1,20 +1,16 @@
 """Table III: SLO fulfillment and migration count — HAF vs the 5 baselines.
 
 All methods share the workload and the RAN floor reservations (Eq. 15);
-they differ exactly as §IV-2 describes.
+they differ exactly as §IV-2 describes.  The method grid runs through the
+repro.eval fleet harness (one job per method, parallel workers).
 """
 from __future__ import annotations
 
 import json
 
 from benchmarks import common
-from repro.core import HAFPlacement, make_agent
-from repro.core.baselines import (AlphaSplitAllocation, EqualShareAllocation,
-                                  GameTheoryPlacement, LyapunovPlacement,
-                                  MarketAllocation, MaxWeightAllocation,
-                                  fit_caora_alpha)
-from repro.sim import WorkloadConfig, generate_workload
-from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+from repro.core.baselines import fit_caora_alpha
+from repro.sim import workload_for
 
 CAORA_ALPHA_PATH = common.ARTIFACTS / "caora_alpha.json"
 
@@ -24,30 +20,22 @@ def caora_alpha() -> float:
     for the SAC training run; see DESIGN.md §5)."""
     if CAORA_ALPHA_PATH.exists():
         return json.loads(CAORA_ALPHA_PATH.read_text())["alpha"]
-    wcfg = WorkloadConfig(rho=1.0, n_ai_requests=1500, seed=99)
-    reqs, _ = generate_workload(wcfg, common.scenario()["work_models"])
+    reqs, _ = workload_for(common.scenario(), seed=99, rho=1.0,
+                           n_ai_requests=1500)
     a = fit_caora_alpha(common.simulator(), reqs)
+    common.ARTIFACTS.mkdir(parents=True, exist_ok=True)
     CAORA_ALPHA_PATH.write_text(json.dumps({"alpha": a}))
     return a
 
 
-def main(rho: float = 1.0, agent: str = "qwen3-32b-sim") -> list:
-    reqs = common.workload(rho)
-    critic = common.get_critic()
-    methods = [
-        ("HAF-Static", StaticPlacement(), DeadlineAwareAllocation(), False),
-        ("Round-Robin", StaticPlacement(), EqualShareAllocation(), True),
-        ("Lyapunov", LyapunovPlacement(), MaxWeightAllocation(), False),
-        ("Game-Theory", GameTheoryPlacement(), MarketAllocation(), False),
-        ("CAORA", StaticPlacement(), AlphaSplitAllocation(caora_alpha()),
-         False),
-        ("HAF", HAFPlacement(make_agent(agent), critic=critic),
-         DeadlineAwareAllocation(), False),
-    ]
-    rows = []
-    for name, pp, ap, rr in methods:
-        s = common.run_method(name, pp, ap, reqs, rr_dispatch=rr)
-        rows.append(s)
+def main(rho: float = 1.0, agent: str = common.DEFAULT_AGENT) -> list:
+    common.get_critic()                      # ensure the critic artifact
+    scenarios = [{"family": "paper", "label": "paper",
+                  "params": {"rho": rho,
+                             "n_ai_requests": common.REQUESTS[rho]}}]
+    rows = common.sweep(common.method_grid(caora_alpha(), agent=agent),
+                        scenarios)
+    for s in rows:
         print(common.csv_row("table3", s), flush=True)
     return rows
 

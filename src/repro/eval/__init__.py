@@ -1,0 +1,27 @@
+"""Fleet evaluation: sweep specs, parallel execution, aggregated reports.
+
+The evaluation API every scaling PR plugs into::
+
+    from repro.eval import SweepSpec, run_sweep, build_report, write_report
+
+    spec = SweepSpec(methods=("haf-static", "round-robin"),
+                     scenarios=("paper", "flash-crowd"),
+                     seeds=(0, 1), n_ai_requests=500, workers=4)
+    rows = run_sweep(spec)
+    write_report(build_report(spec, rows), "artifacts/report.json")
+
+CLI: ``PYTHONPATH=src python -m repro.eval --help``.
+"""
+from repro.eval.policies import (haf_spec, make_method, method_names,
+                                 normalize_method, register_method)
+from repro.eval.report import (aggregate, build_report, format_table,
+                               write_report)
+from repro.eval.sweep import (SweepSpec, expand_jobs, normalize_scenario,
+                              run_job, run_sweep)
+
+__all__ = [
+    "SweepSpec", "expand_jobs", "normalize_scenario", "run_job", "run_sweep",
+    "haf_spec", "make_method", "method_names", "normalize_method",
+    "register_method",
+    "aggregate", "build_report", "format_table", "write_report",
+]

@@ -1,0 +1,5 @@
+import sys
+
+from repro.eval.cli import main
+
+sys.exit(main())

@@ -1,0 +1,122 @@
+"""Fleet-sweep CLI.
+
+  PYTHONPATH=src python -m repro.eval \
+      --scenarios paper,diurnal,flash-crowd --seeds 2 --workers 4 \
+      --methods haf,haf-static,round-robin,lyapunov \
+      --out artifacts/sweep_report.json
+
+``--smoke`` shrinks everything (tiny request counts, 1 seed) for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List, Optional
+
+from repro.eval.policies import haf_spec, method_names
+from repro.eval.report import build_report, format_table, write_report
+from repro.eval.sweep import SweepSpec, run_sweep
+
+DEFAULT_METHODS = "haf,haf-static,round-robin,lyapunov"
+DEFAULT_SCENARIOS = "paper,diurnal,flash-crowd"
+
+
+def _parse_seeds(text: str) -> List[int]:
+    """"3" -> [0, 1, 2]; "0,2,5" -> [0, 2, 5]."""
+    text = text.strip()
+    if "," in text:
+        return [int(s) for s in text.split(",") if s.strip() != ""]
+    return list(range(int(text))) if text else []
+
+
+def _parse_methods(text: str, critic_path: Optional[str],
+                   agent: str, caora_alpha: float) -> List:
+    methods: List = []
+    for name in (s.strip() for s in text.split(",")):
+        if not name:
+            continue
+        if name == "haf":
+            methods.append(haf_spec(agent=agent, critic_path=critic_path))
+        elif name == "caora":
+            methods.append({"name": "caora",
+                            "params": {"alpha": caora_alpha}})
+        else:
+            methods.append(name)
+    return methods
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.eval",
+        description="HAF fleet evaluation: policies x scenarios x seeds")
+    ap.add_argument("--scenarios", default=DEFAULT_SCENARIOS,
+                    help="comma-separated scenario family names")
+    ap.add_argument("--methods", default=DEFAULT_METHODS,
+                    help=f"comma-separated from {method_names()}")
+    ap.add_argument("--seeds", default="2",
+                    help="count (e.g. 3 -> 0,1,2) or explicit list 0,2,5")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override n_ai_requests for every scenario")
+    ap.add_argument("--rho", type=float, default=None,
+                    help="override the load point for every scenario")
+    ap.add_argument("--workers", type=int,
+                    default=max(min(4, (os.cpu_count() or 1)), 1))
+    ap.add_argument("--epoch-interval", type=float, default=5.0)
+    ap.add_argument("--out", default="artifacts/sweep_report.json")
+    ap.add_argument("--agent", default="qwen3-32b-sim")
+    ap.add_argument("--critic", default=None,
+                    help="path to a trained critic artifact for HAF")
+    ap.add_argument("--caora-alpha", type=float, default=0.5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny request counts, 1 seed")
+    args = ap.parse_args(argv)
+
+    from repro.sim.scenarios import family_names
+    scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    unknown = [s for s in scenarios if s not in family_names()]
+    if unknown:
+        ap.error(f"unknown scenario families {unknown}; "
+                 f"known: {family_names()}")
+    bad = [m.strip() for m in args.methods.split(",")
+           if m.strip() and m.strip() not in method_names()]
+    if bad:
+        ap.error(f"unknown methods {bad}; known: {method_names()}")
+    if args.critic and not os.path.exists(args.critic):
+        ap.error(f"--critic file not found: {args.critic}")
+
+    seeds = _parse_seeds(args.seeds)
+    if not seeds:
+        ap.error("--seeds needs a count >= 1 (e.g. 3 -> seeds 0,1,2) "
+                 "or an explicit list (e.g. 0,2,5)")
+    requests = args.requests
+    if args.smoke:
+        seeds = seeds[:1] or [0]
+        requests = requests or 150
+
+    spec = SweepSpec(
+        methods=tuple(_parse_methods(args.methods, args.critic, args.agent,
+                                     args.caora_alpha)),
+        scenarios=tuple(scenarios),
+        seeds=tuple(seeds),
+        n_ai_requests=requests,
+        rho=args.rho,
+        epoch_interval=args.epoch_interval,
+        workers=args.workers,
+    )
+    n_jobs = len(spec.methods) * len(spec.scenarios) * len(spec.seeds)
+    print(f"# sweep: {len(spec.methods)} methods x {len(spec.scenarios)} "
+          f"scenarios x {len(spec.seeds)} seeds = {n_jobs} runs "
+          f"({spec.workers} workers)", flush=True)
+    t0 = time.time()
+    rows = run_sweep(spec, verbose=True)
+    report = build_report(spec, rows)
+    path = write_report(report, args.out)
+    print(format_table(report["aggregate"]))
+    print(f"# report -> {path}  ({time.time() - t0:.0f}s)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+"""Named method registry: string -> (placement, allocation, rr_dispatch).
+
+Construction happens inside sweep workers, so methods are referenced by
+name + picklable params rather than by live policy objects.  The HAF
+critic travels as an artifact path (``critic_path``) and is loaded in the
+worker; without one, ``haf`` runs agent-only (HAF-NoCritic).
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional, Tuple, Union
+
+from repro.core.baselines import (AlphaSplitAllocation, EqualShareAllocation,
+                                  GameTheoryPlacement, LyapunovPlacement,
+                                  MarketAllocation, MaxWeightAllocation)
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+
+# (placement, allocation, rr_dispatch) for one simulator run
+MethodInstance = Tuple[object, object, bool]
+MethodSpec = Union[str, Dict]
+
+_REGISTRY: Dict[str, Callable[..., MethodInstance]] = {}
+
+
+def register_method(name: str) -> Callable:
+    def deco(fn: Callable[..., MethodInstance]) -> Callable:
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def method_names():
+    return sorted(_REGISTRY)
+
+
+def make_method(name: str, **params) -> MethodInstance:
+    try:
+        fn = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown method {name!r}; "
+                       f"known: {method_names()}") from None
+    return fn(**params)
+
+
+def normalize_method(spec: MethodSpec) -> Dict:
+    """"haf" | {"name": ..., "params": ..., "label": ...} -> canonical dict."""
+    if isinstance(spec, str):
+        return {"name": spec, "params": {}, "label": spec}
+    out = {"name": spec["name"], "params": dict(spec.get("params", {}))}
+    out["label"] = spec.get("label", out["name"])
+    return out
+
+
+def haf_spec(agent: str = "qwen3-32b-sim",
+             critic_path: Optional[str] = None,
+             label: str = "HAF", **params) -> Dict:
+    """The HAF method spec (single constructor for every sweep frontend)."""
+    return {"name": "haf", "label": label,
+            "params": {"agent": agent, "critic_path": critic_path,
+                       **params}}
+
+
+# --------------------------------------------------------------------------- #
+@register_method("haf-static")
+def _haf_static() -> MethodInstance:
+    return StaticPlacement(), DeadlineAwareAllocation(), False
+
+
+@register_method("round-robin")
+def _round_robin() -> MethodInstance:
+    return StaticPlacement(), EqualShareAllocation(), True
+
+
+@register_method("lyapunov")
+def _lyapunov(V: float = 0.25) -> MethodInstance:
+    return LyapunovPlacement(V=V), MaxWeightAllocation(), False
+
+
+@register_method("game-theory")
+def _game_theory(toll: float = 0.1) -> MethodInstance:
+    return GameTheoryPlacement(toll=toll), MarketAllocation(), False
+
+
+@register_method("caora")
+def _caora(alpha: float = 0.5) -> MethodInstance:
+    return StaticPlacement(), AlphaSplitAllocation(alpha), False
+
+
+@register_method("haf")
+def _haf(agent: str = "qwen3-32b-sim", seed: int = 0,
+         critic_path: Optional[str] = None, K: int = 3) -> MethodInstance:
+    from repro.core import HAFPlacement, make_agent
+    critic = None
+    if critic_path:
+        if not os.path.exists(critic_path):
+            raise FileNotFoundError(
+                f"critic artifact not found: {critic_path!r} "
+                f"(pass critic_path=None for agent-only HAF)")
+        from repro.core.critic import Critic
+        critic = Critic.load(critic_path)
+    return (HAFPlacement(make_agent(agent, seed=seed), critic=critic, K=K),
+            DeadlineAwareAllocation(), False)

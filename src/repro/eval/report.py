@@ -1,0 +1,92 @@
+"""Aggregation + JSON report for fleet sweeps.
+
+Per (method, scenario) cell: mean and 95% CI over seeds for the per-class
+fulfillment rates, plus mean migration counts.  The report is plain JSON:
+the raw per-run rows ride along so downstream analysis never needs to
+re-simulate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+from typing import Dict, List, Optional
+
+METRICS = ("overall", "ran", "ai", "large_ai", "small_ai")
+COUNTS = ("mig_large", "mig_total", "infeasible_events")
+
+
+def _mean_ci(values: List[float]) -> Dict[str, float]:
+    n = len(values)
+    mean = sum(values) / n
+    if n < 2:
+        return {"mean": mean, "ci95": 0.0, "n": n}
+    var = sum((v - mean) ** 2 for v in values) / (n - 1)
+    return {"mean": mean, "ci95": 1.96 * math.sqrt(var / n), "n": n}
+
+
+def aggregate(rows: List[Dict]) -> List[Dict]:
+    """Collapse per-run rows into (method, scenario) summary cells."""
+    groups: Dict[tuple, List[Dict]] = {}
+    for row in rows:
+        if row is None:
+            continue
+        groups.setdefault((row["method"], row["scenario"]), []).append(row)
+
+    out = []
+    for (method, scenario), g in sorted(groups.items()):
+        cell: Dict = {"method": method, "scenario": scenario,
+                      "seeds": sorted(r["seed"] for r in g)}
+        for m in METRICS:
+            cell[m] = _mean_ci([float(r[m]) for r in g])
+        for c in COUNTS:
+            vals = [float(r.get(c, 0)) for r in g]
+            cell[c] = {"mean": sum(vals) / len(vals),
+                       "max": max(vals)}
+        cell["wall_s"] = sum(float(r.get("wall_s", 0.0)) for r in g)
+        out.append(cell)
+    return out
+
+
+def build_report(spec, rows: List[Optional[Dict]]) -> Dict:
+    spec_dict = dataclasses.asdict(spec) if dataclasses.is_dataclass(spec) \
+        else dict(spec)
+    # sequences arrive as tuples; JSON wants lists
+    spec_dict = {k: list(v) if isinstance(v, tuple) else v
+                 for k, v in spec_dict.items()}
+    completed = [r for r in rows if r is not None]
+    return {
+        "kind": "repro.eval.sweep_report",
+        "spec": spec_dict,
+        "n_runs": len(completed),
+        "n_failed": len(rows) - len(completed),
+        "runs": completed,
+        "aggregate": aggregate(completed),
+    }
+
+
+def write_report(report: Dict, path) -> pathlib.Path:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(report, indent=2, sort_keys=True))
+    return path
+
+
+def format_table(aggregate_rows: List[Dict],
+                 metrics: Optional[List[str]] = None) -> str:
+    """Fixed-width text table of the aggregate (mean±ci per metric)."""
+    metrics = metrics or ["overall", "ran", "large_ai", "small_ai"]
+    hdr = (f"{'scenario':16s} {'method':14s} "
+           + " ".join(f"{m:>15s}" for m in metrics)
+           + f" {'mig(L/tot)':>12s}")
+    lines = [hdr, "-" * len(hdr)]
+    for cell in aggregate_rows:
+        vals = " ".join(
+            f"{cell[m]['mean']:.4f}±{cell[m]['ci95']:.4f}".rjust(15)
+            for m in metrics)
+        mig = (f"{cell['mig_large']['mean']:.1f}"
+               f"/{cell['mig_total']['mean']:.1f}")
+        lines.append(f"{cell['scenario']:16s} {cell['method']:14s} "
+                     f"{vals} {mig:>12s}")
+    return "\n".join(lines)

@@ -1,0 +1,166 @@
+"""Fleet sweeps: policies × scenarios × seeds, optionally across processes.
+
+A sweep is declared as data (:class:`SweepSpec`) and expanded into jobs;
+each job realizes its scenario + workload from names and seeds inside the
+worker, so nothing unpicklable crosses the process boundary.  Workers use
+the ``spawn`` start method (fork is unsafe once jax has initialized) —
+spawn re-imports ``__main__``, so call a ``workers > 1`` sweep from a real
+module or script (guarded by ``if __name__ == "__main__"``), not from a
+REPL/stdin; use ``workers=1`` there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import itertools
+import multiprocessing
+import time
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.eval.policies import make_method, normalize_method
+
+ScenarioSpec = Union[str, Dict]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """policies × scenarios × seeds (+ shared run parameters)."""
+    methods: Sequence = ("haf-static", "round-robin")
+    scenarios: Sequence = ("paper",)
+    seeds: Sequence = (0,)
+    n_ai_requests: Optional[int] = None     # override every family's default
+    rho: Optional[float] = None             # override every family's ρ
+    epoch_interval: float = 5.0
+    max_events: int = 5_000_000
+    workers: int = 1
+    scenario_seed: int = 0                  # topology seed (workload varies)
+
+
+def normalize_scenario(spec: ScenarioSpec) -> Dict:
+    if isinstance(spec, str):
+        return {"family": spec, "params": {}, "label": spec}
+    out = {"family": spec["family"], "params": dict(spec.get("params", {}))}
+    out["label"] = spec.get("label", out["family"])
+    return out
+
+
+def expand_jobs(spec: SweepSpec) -> List[Dict]:
+    """The sweep's full job list (one simulator run per entry)."""
+    methods = [normalize_method(m) for m in spec.methods]
+    scenarios = [normalize_scenario(s) for s in spec.scenarios]
+    jobs = []
+    for sc, m, seed in itertools.product(scenarios, methods, spec.seeds):
+        jobs.append({
+            "family": sc["family"],
+            "scenario_label": sc["label"],
+            "scenario_params": sc["params"],
+            "scenario_seed": spec.scenario_seed,
+            "method": m["name"],
+            "method_label": m["label"],
+            "method_params": m["params"],
+            "seed": int(seed),
+            "n_ai_requests": spec.n_ai_requests,
+            "rho": spec.rho,
+            "epoch_interval": spec.epoch_interval,
+            "max_events": spec.max_events,
+        })
+    return jobs
+
+
+def run_job(job: Dict) -> Dict:
+    """One simulator run; returns a flat, JSON-ready result row."""
+    from repro.sim import Simulator
+    from repro.sim.scenarios import make_scenario, workload_for
+
+    params = dict(job["scenario_params"])
+    # global overrides reach the family itself when it takes them (so
+    # families that derive structure from the trace length — e.g. outage
+    # windows — stay consistent with the realized workload); families
+    # without the knob still get the workload-level override below
+    from repro.sim.scenarios.registry import REGISTRY
+    sig = inspect.signature(REGISTRY[job["family"]]) \
+        if job["family"] in REGISTRY else None
+    for key in ("n_ai_requests", "rho"):
+        if job.get(key) is not None and sig is not None and (
+                key in sig.parameters
+                or any(p.kind is p.VAR_KEYWORD
+                       for p in sig.parameters.values())):
+            params[key] = job[key]
+    sc = make_scenario(job["family"], seed=job["scenario_seed"], **params)
+
+    requests, info = workload_for(sc, seed=job["seed"],
+                                  n_ai_requests=job.get("n_ai_requests"),
+                                  rho=job.get("rho"))
+    placement, allocation, rr = make_method(job["method"],
+                                            **job["method_params"])
+    sim = Simulator(sc, epoch_interval=job["epoch_interval"])
+    t0 = time.time()
+    res = sim.run(requests, placement, allocation, rr_dispatch=rr,
+                  max_events=job["max_events"])
+    row = dict(res.summary())
+    row.update({
+        "method": job["method_label"],
+        "scenario": job["scenario_label"],
+        "family": job["family"],
+        "seed": job["seed"],
+        "n_requests": len(requests),
+        "n_events": res.n_events,
+        "infeasible_events": res.infeasible_events,
+        "horizon_s": info.get("horizon", 0.0),
+        "wall_s": time.time() - t0,
+    })
+    return row
+
+
+def run_sweep(spec: SweepSpec, verbose: bool = False
+              ) -> List[Optional[Dict]]:
+    """Execute every job, in-process or across ``spec.workers`` processes.
+
+    A failing job does not abort the sweep: its slot is ``None`` (reported
+    loudly) and the surviving rows still aggregate.  Raises only when every
+    job failed.
+    """
+    jobs = expand_jobs(spec)
+    rows: List[Optional[Dict]] = [None] * len(jobs)
+
+    def note(i: int, done: int) -> None:
+        if verbose and rows[i] is not None:
+            r = rows[i]
+            print(f"# [{done}/{len(jobs)}] {r['method']}"
+                  f" @ {r['scenario']} seed={r['seed']}"
+                  f" overall={r['overall']:.4f}"
+                  f" wall={r['wall_s']:.1f}s", flush=True)
+
+    def failed(i: int, err: Exception) -> None:
+        job = jobs[i]
+        print(f"# JOB FAILED: {job['method_label']}"
+              f" @ {job['scenario_label']} seed={job['seed']}:"
+              f" {type(err).__name__}: {err}", flush=True)
+
+    if spec.workers <= 1 or len(jobs) <= 1:
+        for i, job in enumerate(jobs):
+            try:
+                rows[i] = run_job(job)
+            except Exception as err:        # noqa: BLE001
+                failed(i, err)
+            note(i, i + 1)
+    else:
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=spec.workers,
+                                 mp_context=ctx) as pool:
+            futures = {pool.submit(run_job, job): i
+                       for i, job in enumerate(jobs)}
+            done = 0
+            for fut in as_completed(futures):
+                i = futures[fut]
+                try:
+                    rows[i] = fut.result()
+                except Exception as err:    # noqa: BLE001
+                    failed(i, err)
+                done += 1
+                note(i, done)
+
+    if jobs and all(r is None for r in rows):
+        raise RuntimeError("every sweep job failed (see JOB FAILED lines)")
+    return rows

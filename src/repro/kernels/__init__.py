@@ -1,3 +1,20 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Version compatibility shims shared by the Pallas TPU kernels.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across JAX releases; depending on the installed
+version only one of the two names exists.  ``CompilerParams`` below
+resolves to whichever the installed JAX provides, so the kernel modules
+(`rmsnorm`, `flash_attention`, `ssd_scan`, `alloc_active_set`) work on
+both sides of the rename.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+try:
+    CompilerParams = _pltpu.CompilerParams          # newer JAX
+except AttributeError:
+    CompilerParams = _pltpu.TPUCompilerParams       # older JAX (≤ 0.4.x)
+
+__all__ = ["CompilerParams"]

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 EPS = 1e-9
 
 
@@ -91,7 +93,7 @@ def alloc_active_set_ns(psi: jax.Array, omega: jax.Array, floors: jax.Array,
             jax.ShapeDtypeStruct((N, 1), jnp.int32),
             jax.ShapeDtypeStruct((N, S), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(psi, omega, floors, capacity, mask)

@@ -10,9 +10,12 @@ from repro.sim.cluster import ClusterState
 from repro.sim.engine import Simulator, SimResult
 from repro.sim.workload import WorkloadConfig, generate_workload
 from repro.sim.scenario import paper_scenario
+from repro.sim.scenarios import (family_names, make_scenario,
+                                 scenario_fingerprint, workload_for)
 
 __all__ = [
     "InstanceCategory", "InstanceSpec", "NodeSpec", "Request", "RequestClass",
     "MigrationAction", "ClusterState", "Simulator", "SimResult",
     "WorkloadConfig", "generate_workload", "paper_scenario",
+    "family_names", "make_scenario", "scenario_fingerprint", "workload_for",
 ]

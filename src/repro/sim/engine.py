@@ -161,6 +161,11 @@ class Simulator:
             else:
                 push(r.arrival + ran_packet, "ai_route", r)
 
+        # node availability windows (scenario fault injection): everything
+        # resident on the node at t0 goes dark until t1
+        for node, t0, t1 in sc.get("outages", ()):
+            push(float(t0), "outage", (int(node), float(t1)))
+
         dropped: set = set()
         migrations: List[Tuple[float, MigrationAction]] = []
         epochs: List[EpochRecord] = []
@@ -306,11 +311,13 @@ class Simulator:
 
         current_rec: Optional[EpochRecord] = None
 
-        while heap:
-            if n_events >= max_events:
-                break
+        # single loop over timed events AND queue completions: it must keep
+        # draining after the heap empties (a stage completion can push the
+        # next stage — e.g. DU -> CU-UP — or work may resume after an
+        # outage/reconfiguration ends)
+        while n_events < max_events:
             t_comp, sid_comp = next_completion()
-            t_ev = heap[0][0]
+            t_ev = heap[0][0] if heap else INF
             t_next = min(t_comp, t_ev)
             if not math.isfinite(t_next):
                 break
@@ -377,8 +384,15 @@ class Simulator:
                                 sid=action.sid, src=action.src,
                                 dst=action.dst, category=inst.category)
                             cluster.apply_migration(committed, t)
+                            # landing on a node mid-outage: the instance
+                            # stays dark until the node itself returns
+                            until = t + inst.reconfig_s
+                            for node, o0, o1 in sc.get("outages", ()):
+                                if int(node) == action.dst and o0 <= t < o1:
+                                    until = max(until, float(o1))
+                            cluster.reconfig_until[action.sid] = until
                             migrations.append((t, committed))
-                            push(t + inst.reconfig_s, "mig_done", action.sid)
+                            push(until, "mig_done", action.sid)
                         else:
                             action = None
                     current_rec = EpochRecord(
@@ -389,6 +403,18 @@ class Simulator:
                         epoch_hook(current_rec, cluster)
                 elif kind == "mig_done":
                     mark(payload)   # availability flip triggers realloc
+                elif kind == "outage":
+                    node, until = payload
+                    for sid in range(cluster.S):
+                        if cluster.placement[sid] == node:
+                            cluster.reconfig_until[sid] = max(
+                                cluster.reconfig_until[sid], until)
+                            mark(sid)
+                    push(until, "outage_end", node)
+                elif kind == "outage_end":
+                    for sid in range(cluster.S):
+                        if cluster.placement[sid] == payload:
+                            mark(sid)   # back online: trigger realloc
                 if kind == "epoch":
                     dirty.update(range(cluster.N))
 
@@ -399,18 +425,6 @@ class Simulator:
             elif dirty:
                 allocation.allocate(cluster, t, sorted(dirty))
             dirty.clear()
-
-        # drain: no timed events left, but queues may still hold work
-        while n_events < max_events:
-            t_comp, sid_comp = next_completion()
-            if not math.isfinite(t_comp):
-                break
-            advance(t_comp - t)
-            t = t_comp
-            n_events += 1
-            handle_completion(sid_comp)
-            cleanup_drops()
-            allocation.allocate(cluster, t)
 
         close_epoch_window(current_rec)
         return SimResult(requests=requests, dropped=dropped,

@@ -1,0 +1,31 @@
+"""Scenario-generation subsystem: parameterized, seeded scenario families.
+
+Usage::
+
+    from repro.sim.scenarios import make_scenario, workload_for
+
+    sc = make_scenario("flash-crowd", seed=3, magnitude=6.0)
+    requests, info = workload_for(sc, seed=7)
+    res = Simulator(sc).run(requests, placement, allocation)
+
+Families (see :mod:`repro.sim.scenarios.families` for parameters):
+``paper``, ``dense-urban``, ``diurnal``, ``flash-crowd``, ``heavy-tail``,
+``node-outage``, ``skewed-hetero``.  All generators are deterministic in
+(seed, params); :func:`scenario_fingerprint` certifies it.
+"""
+from repro.sim.scenarios.registry import (REGISTRY, family_names,
+                                          make_scenario, register,
+                                          scenario_fingerprint)
+from repro.sim.scenarios.builder import (build_scenario,
+                                         effective_ai_capacity,
+                                         validate_scenario)
+from repro.sim.scenarios.workload import (estimated_horizon, workload_config,
+                                          workload_for)
+from repro.sim.scenarios import families  # noqa: F401  (populates REGISTRY)
+
+__all__ = [
+    "REGISTRY", "family_names", "make_scenario", "register",
+    "scenario_fingerprint", "build_scenario", "effective_ai_capacity",
+    "validate_scenario", "estimated_horizon", "workload_config",
+    "workload_for", "families",
+]

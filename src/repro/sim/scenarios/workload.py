@@ -1,0 +1,145 @@
+"""Workload realization for registry scenarios.
+
+A scenario carries a plain-dict ``workload`` recipe; :func:`workload_for`
+turns it into the request list the ``Simulator`` consumes.  On top of the
+base Poisson/lognormal generator (:mod:`repro.sim.workload`) this module
+adds the time/size structure the non-stationary families need:
+
+  * ``arrival`` profiles reshape arrival times by the time-rescaling
+    theorem: homogeneous arrivals a_i are mapped through Λ⁻¹ (the inverse
+    cumulative intensity), yielding an inhomogeneous Poisson process with
+    intensity λ·m(t) — ``diurnal`` (sinusoidal m) and ``flash-crowd``
+    (piecewise-constant spike windows).
+  * ``heavy_tail`` scales a seeded fraction of AI request sizes by a
+    Pareto multiplier (heavy-tailed Φ^g / γ_q).
+
+Everything is deterministic in (scenario, seed): the recipe is data, the
+randomness comes only from seeded generators.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sim.types import Request
+from repro.sim.workload import (WorkloadConfig, generate_workload,
+                                mean_request_work)
+
+# WorkloadConfig fields a scenario recipe may set
+_CFG_KEYS = ("rho", "n_ai_requests", "large_fraction", "ran_per_ai",
+             "urllc_fraction", "ran_burst_prob", "n_cells", "ai_capacity",
+             "large_deadline", "small_deadline")
+_TUPLE_KEYS = ("large_deadline", "small_deadline")
+
+_HEAVY_TAIL_STREAM = 0x48545F      # rng stream tag ("HT_")
+
+
+def workload_config(scenario: Dict, seed: int = 0,
+                    n_ai_requests: Optional[int] = None,
+                    rho: Optional[float] = None) -> WorkloadConfig:
+    """The base (stationary) WorkloadConfig encoded by the scenario."""
+    spec = dict(scenario.get("workload") or {})
+    kw = {k: spec[k] for k in _CFG_KEYS if k in spec}
+    for k in _TUPLE_KEYS:
+        if k in kw:
+            kw[k] = tuple(kw[k])
+    if n_ai_requests is not None:
+        kw["n_ai_requests"] = int(n_ai_requests)
+    if rho is not None:
+        kw["rho"] = float(rho)
+    return WorkloadConfig(seed=seed, **kw)
+
+
+def estimated_horizon(scenario: Dict, n_ai_requests: Optional[int] = None,
+                      rho: Optional[float] = None) -> float:
+    """Expected trace length [s] implied by the recipe (horizon = n/λ)."""
+    cfg = workload_config(scenario, 0, n_ai_requests, rho)
+    w_bar = mean_request_work(scenario["work_models"], cfg)
+    lam = cfg.rho * cfg.ai_capacity / w_bar
+    return cfg.n_ai_requests / lam
+
+
+def workload_for(scenario: Dict, seed: int = 0,
+                 n_ai_requests: Optional[int] = None,
+                 rho: Optional[float] = None
+                 ) -> Tuple[List[Request], Dict[str, float]]:
+    """Realize the scenario's workload recipe into (requests, info)."""
+    spec = dict(scenario.get("workload") or {})
+    cfg = workload_config(scenario, seed, n_ai_requests, rho)
+    requests, info = generate_workload(cfg, scenario["work_models"])
+
+    arrival = spec.get("arrival") or {"kind": "poisson"}
+    if arrival.get("kind", "poisson") != "poisson":
+        _reshape_arrivals(requests, arrival)
+        requests.sort(key=lambda r: r.arrival)
+
+    heavy = spec.get("heavy_tail")
+    if heavy:
+        _apply_heavy_tail(requests, heavy, seed)
+    return requests, info
+
+
+# --------------------------------------------------------------------------- #
+# arrival-time reshaping (inhomogeneous Poisson via time rescaling)
+# --------------------------------------------------------------------------- #
+def _intensity_profile(arrival: Dict, ts: np.ndarray,
+                       horizon: float) -> np.ndarray:
+    kind = arrival["kind"]
+    if kind == "diurnal":
+        period = float(arrival.get("period_s", 240.0))
+        depth = float(arrival.get("depth", 0.6))
+        phase = float(arrival.get("phase", 0.0))
+        m = 1.0 + depth * np.sin(2 * np.pi * ts / period + phase)
+    elif kind == "flash-crowd":
+        # windows: [start_frac, len_frac, magnitude] of the horizon
+        m = np.ones_like(ts)
+        for start, length, mag in arrival["windows"]:
+            lo, hi = start * horizon, (start + length) * horizon
+            m[(ts >= lo) & (ts < hi)] = float(mag)
+    else:
+        raise ValueError(f"unknown arrival profile {kind!r}")
+    return np.maximum(m, 0.05)          # intensity stays strictly positive
+
+
+def _reshape_arrivals(requests: List[Request], arrival: Dict) -> None:
+    """Map arrivals through Λ⁻¹ so the empirical intensity follows m(t).
+
+    Λ is normalized to Λ(H) = H, so the trace keeps its total duration and
+    mean rate — the profile redistributes load over time, it does not add
+    load (ρ keeps its meaning as the time-averaged operating point).
+    """
+    if not requests:
+        return
+    horizon = max(r.arrival for r in requests) * (1 + 1e-9)
+    ts = np.linspace(0.0, horizon, 4097)
+    m = _intensity_profile(arrival, ts, horizon)
+    dt = np.diff(ts)
+    lam_cum = np.concatenate(
+        [[0.0], np.cumsum(0.5 * (m[1:] + m[:-1]) * dt)])
+    lam_cum *= horizon / lam_cum[-1]
+    # t' = Λ⁻¹(a): arrivals thin out where m is small, bunch where large
+    warped = np.interp([r.arrival for r in requests], lam_cum, ts)
+    for r, t in zip(requests, warped):
+        r.arrival = float(t)
+
+
+# --------------------------------------------------------------------------- #
+# heavy-tailed request sizes
+# --------------------------------------------------------------------------- #
+def _apply_heavy_tail(requests: List[Request], heavy: Dict,
+                      seed: int) -> None:
+    """Scale a seeded fraction of AI requests by a Pareto work multiplier."""
+    fraction = float(heavy.get("fraction", 0.2))
+    alpha = float(heavy.get("alpha", 1.3))
+    cap = float(heavy.get("cap", 30.0))
+    rng = np.random.default_rng([seed, _HEAVY_TAIL_STREAM])
+    for r in requests:
+        if not r.cls.is_ai:
+            continue
+        if rng.random() >= fraction:
+            continue
+        mult = min(1.0 + rng.pareto(alpha), cap)
+        r.ai_work_g *= mult
+        # KV grows sublinearly with work (longer context, same arch)
+        r.kv_bytes *= min(mult, 4.0)

@@ -1,0 +1,104 @@
+"""Fleet-evaluation harness: job expansion, parallel sweeps, reports."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.eval import (SweepSpec, aggregate, build_report, expand_jobs,
+                        format_table, make_method, method_names, run_job,
+                        run_sweep, write_report)
+
+MINI = SweepSpec(
+    methods=("haf-static", "round-robin"),
+    scenarios=("paper", {"family": "skewed-hetero",
+                         "params": {"n_nodes": 4}}),
+    seeds=(0, 1),
+    n_ai_requests=120,
+    workers=1,
+)
+
+
+@pytest.fixture(scope="module")
+def mini_rows():
+    return run_sweep(MINI)
+
+
+def test_method_registry_covers_table3():
+    assert {"haf", "haf-static", "round-robin", "lyapunov", "game-theory",
+            "caora"} <= set(method_names())
+    for name in method_names():
+        placement, allocation, rr = make_method(name)
+        assert hasattr(placement, "decide")
+        assert hasattr(allocation, "allocate")
+        assert isinstance(rr, bool)
+
+
+def test_expand_jobs_is_full_product():
+    jobs = expand_jobs(MINI)
+    assert len(jobs) == 2 * 2 * 2
+    keys = {(j["method"], j["scenario_label"], j["seed"]) for j in jobs}
+    assert len(keys) == 8
+
+
+def test_mini_sweep_rows_well_formed(mini_rows):
+    assert len(mini_rows) == 8
+    for row in mini_rows:
+        for k in ("overall", "ran", "ai", "large_ai", "small_ai",
+                  "mig_large", "mig_total", "method", "scenario", "seed",
+                  "wall_s", "n_requests"):
+            assert k in row, k
+        assert 0.0 <= row["overall"] <= 1.0
+
+
+def test_run_job_deterministic():
+    job = expand_jobs(MINI)[0]
+    a, b = run_job(dict(job)), run_job(dict(job))
+    for k in ("overall", "ran", "ai", "mig_total", "n_events"):
+        assert a[k] == b[k], k
+
+
+def test_aggregate_mean_ci(mini_rows):
+    cells = aggregate(mini_rows)
+    assert len(cells) == 4                   # 2 methods x 2 scenarios
+    for cell in cells:
+        assert cell["seeds"] == [0, 1]
+        for m in ("overall", "ran", "large_ai", "small_ai"):
+            assert cell[m]["n"] == 2
+            assert cell[m]["ci95"] >= 0.0
+            assert 0.0 <= cell[m]["mean"] <= 1.0
+        assert cell["mig_total"]["mean"] >= 0.0
+    # hand-check one mean
+    cell = next(c for c in cells if c["method"] == "haf-static"
+                and c["scenario"] == "paper")
+    manual = [r["overall"] for r in mini_rows
+              if r["method"] == "haf-static" and r["scenario"] == "paper"]
+    assert cell["overall"]["mean"] == pytest.approx(sum(manual) / 2)
+
+
+def test_report_roundtrips_as_json(tmp_path, mini_rows):
+    report = build_report(MINI, mini_rows)
+    path = write_report(report, tmp_path / "report.json")
+    loaded = json.loads(path.read_text())
+    assert loaded["kind"] == "repro.eval.sweep_report"
+    assert loaded["n_runs"] == 8
+    assert len(loaded["aggregate"]) == 4
+    assert loaded["spec"]["seeds"] == [0, 1]
+    table = format_table(loaded["aggregate"])
+    assert "haf-static" in table and "skewed-hetero" in table
+
+
+def test_parallel_equals_serial():
+    spec = SweepSpec(methods=("haf-static",),
+                     scenarios=("paper", "flash-crowd"),
+                     seeds=(0,), n_ai_requests=100, workers=2)
+    serial = run_sweep(dataclasses.replace(spec, workers=1))
+    parallel = run_sweep(spec)
+    key = lambda r: (r["method"], r["scenario"], r["seed"])  # noqa: E731
+    for s, p in zip(sorted(serial, key=key), sorted(parallel, key=key)):
+        assert s["overall"] == p["overall"]
+        assert s["n_events"] == p["n_events"]
+
+
+def test_unknown_method_raises():
+    with pytest.raises(KeyError, match="unknown method"):
+        make_method("definitely-not-a-method")
