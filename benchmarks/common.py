@@ -68,8 +68,24 @@ def critic_path() -> pathlib.Path:
     return ARTIFACTS / "critic.json"
 
 
-def simulator() -> Simulator:
-    return Simulator(scenario(), epoch_interval=5.0)
+ENGINE = os.environ.get("REPRO_ENGINE", "numpy")
+
+
+def simulator(engine: Optional[str] = None) -> Simulator:
+    return Simulator(scenario(), epoch_interval=5.0,
+                     engine=engine or ENGINE)
+
+
+def check_not_truncated(rows, where: str) -> None:
+    """Benchmarks must fail loudly on partial runs: a table built from a
+    simulation that hit ``max_events`` mid-trace is not a reproduction."""
+    bad = [r for r in rows if r.get("truncated")]
+    if bad:
+        names = [f"{r.get('method', '?')}@{r.get('scenario', '?')}"
+                 f"#s{r.get('seed', '?')}" for r in bad]
+        raise RuntimeError(
+            f"{where}: {len(bad)} run(s) hit max_events and returned "
+            f"truncated results: {', '.join(names)} — raise max_events")
 
 
 def method_grid(caora_alpha: float, with_critic: bool = True,
@@ -94,9 +110,11 @@ def sweep(methods, scenarios, seeds=(0,), workers: Optional[int] = None,
     by run_sweep) are dropped so callers can print/post-process directly.
     """
     spec = SweepSpec(methods=tuple(methods), scenarios=tuple(scenarios),
-                     seeds=tuple(seeds),
+                     seeds=tuple(seeds), engine=kw.pop("engine", ENGINE),
                      workers=WORKERS if workers is None else workers, **kw)
-    return [r for r in run_sweep(spec) if r is not None]
+    rows = [r for r in run_sweep(spec) if r is not None]
+    check_not_truncated(rows, "sweep")
+    return rows
 
 
 def run_method(name: str, placement, allocation, requests,
@@ -108,6 +126,7 @@ def run_method(name: str, placement, allocation, requests,
     s = res.summary()
     s["wall_s"] = time.time() - t0
     s["method"] = name
+    check_not_truncated([s], name)
     return s
 
 

@@ -1,0 +1,99 @@
+"""Event-core benchmark: scalar reference vs vectorized numpy engine.
+
+Runs the ``dense-urban`` family at S >= 100 instances (the regime the
+vectorized core exists for) with both engines on identical workloads,
+checks they produce identical results, and records events/sec + wall
+clock to ``BENCH_pr2.json`` at the repo root so the perf trajectory is
+tracked from this PR on.
+
+  PYTHONPATH=src python -m benchmarks.engine_bench            # full grid
+  PYTHONPATH=src python -m benchmarks.engine_bench --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from typing import Dict, List
+
+from benchmarks import common
+from repro.sim import Simulator, make_scenario, workload_for
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+
+BENCH_PATH = common.ROOT / "BENCH_pr2.json"
+
+
+def _canon_summary(s: Dict) -> Dict:
+    """NaN -> None so absent-class entries compare by value, not by the
+    accident of NaN object identity (float('nan') != float('nan'))."""
+    return {k: None if isinstance(v, float) and math.isnan(v) else v
+            for k, v in s.items()}
+
+# (n_nodes, n_ai_requests): S = 3 * n_nodes for dense-urban
+SMOKE_GRID = ((36, 1500), (480, 2500))
+FULL_GRID = ((36, 4000), (120, 4000), (240, 4000), (480, 4000))
+
+
+def bench_point(n_nodes: int, n_requests: int, repeats: int = 2) -> Dict:
+    sc = make_scenario("dense-urban", seed=0, n_nodes=n_nodes)
+    reqs, _ = workload_for(sc, seed=1, n_ai_requests=n_requests)
+    point: Dict = {"family": "dense-urban", "n_nodes": n_nodes,
+                   "n_instances": len(sc["instances"]),
+                   "n_requests": len(reqs)}
+    results = {}
+    for engine in ("scalar", "numpy"):
+        sim = Simulator(sc, engine=engine)
+        wall = float("inf")                  # best-of-N: steady-state rate
+        for _ in range(repeats):
+            t0 = time.time()
+            res = sim.run(reqs, StaticPlacement(), DeadlineAwareAllocation())
+            wall = min(wall, time.time() - t0)
+        common.check_not_truncated([res.summary()], f"engine_bench:{engine}")
+        results[engine] = (_canon_summary(res.summary()), res.n_events,
+                           sorted(res.dropped))
+        point[engine] = {"wall_s": round(wall, 3),
+                         "events": res.n_events,
+                         "events_per_sec": round(res.n_events / wall, 1)}
+    if results["scalar"] != results["numpy"]:
+        raise RuntimeError("engine_bench: scalar and numpy engines diverged "
+                           f"at n_nodes={n_nodes} — equivalence broken")
+    point["speedup"] = round(point["numpy"]["events_per_sec"]
+                             / point["scalar"]["events_per_sec"], 2)
+    return point
+
+
+def main(smoke: bool = False) -> Dict:
+    grid = SMOKE_GRID if smoke else FULL_GRID
+    points: List[Dict] = []
+    for n_nodes, n_requests in grid:
+        p = bench_point(n_nodes, n_requests)
+        points.append(p)
+        print(f"engine,dense-urban,S={p['n_instances']},"
+              f"scalar_evps={p['scalar']['events_per_sec']},"
+              f"numpy_evps={p['numpy']['events_per_sec']},"
+              f"speedup={p['speedup']}x", flush=True)
+    record = {
+        "kind": "repro.bench.engine",
+        "pr": 2,
+        "smoke": smoke,
+        "default_engine": "numpy",
+        "points": points,
+        "max_speedup": max(p["speedup"] for p in points),
+    }
+    BENCH_PATH.write_text(json.dumps(record, indent=2, sort_keys=True))
+    print(f"# record -> {BENCH_PATH}", flush=True)
+    at_scale = [p for p in points if p["n_instances"] >= 100]
+    best = max(p["speedup"] for p in at_scale)
+    if best < 5.0:
+        print(f"# WARNING: best speedup at S>=100 is {best}x (< 5x target)",
+              flush=True)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="two grid points, reduced request counts (CI)")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

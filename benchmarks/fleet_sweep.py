@@ -40,8 +40,11 @@ def main(smoke: bool = False, seeds: int = 2, agent: str =
         seeds=(0,) if smoke else tuple(range(seeds)),
         n_ai_requests=150 if smoke else (None if common.FULL else 2000),
         workers=common.WORKERS,
+        engine=common.ENGINE,
     )
     rows = run_sweep(spec, verbose=not smoke)
+    common.check_not_truncated([r for r in rows if r is not None],
+                               "fleet_sweep")
     report = build_report(spec, rows)
     path = write_report(report, common.ARTIFACTS / "fleet_sweep.json")
     for s in (r for r in rows if r is not None):

@@ -16,10 +16,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=(None, "table2", "table3", "fig2", "roofline",
-                             "alloc", "fleet"))
+                             "alloc", "fleet", "engine"))
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI mode for the fleet sweep (tiny request "
-                         "counts, 1 seed)")
+                    help="fast CI mode (tiny request counts, 1 seed; the "
+                         "engine bench still records BENCH_pr2.json)")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -28,6 +28,9 @@ def main() -> None:
           f"(REPRO_FULL={'1' if common.FULL else '0'}, "
           f"workers={common.WORKERS})", flush=True)
 
+    if args.only in (None, "engine"):
+        from benchmarks import engine_bench
+        engine_bench.main(smoke=args.smoke)
     if args.only in (None, "alloc"):
         from benchmarks import alloc_microbench
         alloc_microbench.main()

@@ -63,7 +63,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="override the load point for every scenario")
     ap.add_argument("--workers", type=int,
                     default=max(min(4, (os.cpu_count() or 1)), 1))
+    ap.add_argument("--engine", default="numpy",
+                    choices=("numpy", "scalar", "jax"),
+                    help="event core backend (scalar = debug reference)")
     ap.add_argument("--epoch-interval", type=float, default=5.0)
+    ap.add_argument("--max-events", type=int, default=5_000_000,
+                    help="per-run event budget; hitting it marks the run "
+                         "truncated in the report")
     ap.add_argument("--out", default="artifacts/sweep_report.json")
     ap.add_argument("--agent", default="qwen3-32b-sim")
     ap.add_argument("--critic", default=None,
@@ -103,7 +109,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         n_ai_requests=requests,
         rho=args.rho,
         epoch_interval=args.epoch_interval,
+        max_events=args.max_events,
         workers=args.workers,
+        engine=args.engine,
     )
     n_jobs = len(spec.methods) * len(spec.scenarios) * len(spec.seeds)
     print(f"# sweep: {len(spec.methods)} methods x {len(spec.scenarios)} "
@@ -113,6 +121,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     rows = run_sweep(spec, verbose=True)
     report = build_report(spec, rows)
     path = write_report(report, args.out)
+    if report["n_truncated"]:
+        print(f"# WARNING: {report['n_truncated']}/{report['n_runs']} runs "
+              f"hit max_events — partial results (raise --max-events)",
+              flush=True)
     print(format_table(report["aggregate"]))
     print(f"# report -> {path}  ({time.time() - t0:.0f}s)", flush=True)
     return 0

@@ -4,6 +4,13 @@ Per (method, scenario) cell: mean and 95% CI over seeds for the per-class
 fulfillment rates, plus mean migration counts.  The report is plain JSON:
 the raw per-run rows ride along so downstream analysis never needs to
 re-simulate.
+
+Request classes absent from a scenario arrive as NaN (see
+``SimResult.summary``): they are skipped — not averaged as zeros — and a
+cell whose every seed lacks the class reports ``mean: null`` with
+``n: 0``.  Truncated runs (``max_events`` hit with work pending) are
+counted per cell and at report top level so partial results never pass
+silently for converged ones.
 """
 from __future__ import annotations
 
@@ -17,12 +24,17 @@ METRICS = ("overall", "ran", "ai", "large_ai", "small_ai")
 COUNTS = ("mig_large", "mig_total", "infeasible_events")
 
 
-def _mean_ci(values: List[float]) -> Dict[str, float]:
-    n = len(values)
-    mean = sum(values) / n
+def _mean_ci(values: List[float]) -> Dict[str, Optional[float]]:
+    """Mean and 95% CI over the finite values; NaN entries are absent
+    classes and do not contribute to n."""
+    finite = [v for v in values if not math.isnan(v)]
+    n = len(finite)
+    if n == 0:
+        return {"mean": None, "ci95": None, "n": 0}
+    mean = sum(finite) / n
     if n < 2:
         return {"mean": mean, "ci95": 0.0, "n": n}
-    var = sum((v - mean) ** 2 for v in values) / (n - 1)
+    var = sum((v - mean) ** 2 for v in finite) / (n - 1)
     return {"mean": mean, "ci95": 1.96 * math.sqrt(var / n), "n": n}
 
 
@@ -44,9 +56,21 @@ def aggregate(rows: List[Dict]) -> List[Dict]:
             vals = [float(r.get(c, 0)) for r in g]
             cell[c] = {"mean": sum(vals) / len(vals),
                        "max": max(vals)}
+        cell["truncated_runs"] = sum(1 for r in g if r.get("truncated"))
         cell["wall_s"] = sum(float(r.get("wall_s", 0.0)) for r in g)
         out.append(cell)
     return out
+
+
+def _sanitize(obj):
+    """NaN -> null recursively: the report must stay strict JSON."""
+    if isinstance(obj, float) and math.isnan(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize(v) for v in obj]
+    return obj
 
 
 def build_report(spec, rows: List[Optional[Dict]]) -> Dict:
@@ -56,20 +80,22 @@ def build_report(spec, rows: List[Optional[Dict]]) -> Dict:
     spec_dict = {k: list(v) if isinstance(v, tuple) else v
                  for k, v in spec_dict.items()}
     completed = [r for r in rows if r is not None]
-    return {
+    return _sanitize({
         "kind": "repro.eval.sweep_report",
         "spec": spec_dict,
         "n_runs": len(completed),
         "n_failed": len(rows) - len(completed),
+        "n_truncated": sum(1 for r in completed if r.get("truncated")),
         "runs": completed,
         "aggregate": aggregate(completed),
-    }
+    })
 
 
 def write_report(report: Dict, path) -> pathlib.Path:
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(report, indent=2, sort_keys=True))
+    path.write_text(json.dumps(report, indent=2, sort_keys=True,
+                               allow_nan=False))
     return path
 
 
@@ -83,10 +109,12 @@ def format_table(aggregate_rows: List[Dict],
     lines = [hdr, "-" * len(hdr)]
     for cell in aggregate_rows:
         vals = " ".join(
+            "—".rjust(15) if cell[m]["mean"] is None else
             f"{cell[m]['mean']:.4f}±{cell[m]['ci95']:.4f}".rjust(15)
             for m in metrics)
         mig = (f"{cell['mig_large']['mean']:.1f}"
                f"/{cell['mig_total']['mean']:.1f}")
+        flag = " TRUNC" if cell.get("truncated_runs") else ""
         lines.append(f"{cell['scenario']:16s} {cell['method']:14s} "
-                     f"{vals} {mig:>12s}")
+                     f"{vals} {mig:>12s}{flag}")
     return "\n".join(lines)

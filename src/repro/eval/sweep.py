@@ -35,6 +35,7 @@ class SweepSpec:
     max_events: int = 5_000_000
     workers: int = 1
     scenario_seed: int = 0                  # topology seed (workload varies)
+    engine: str = "numpy"                   # event core: numpy | scalar | jax
 
 
 def normalize_scenario(spec: ScenarioSpec) -> Dict:
@@ -64,6 +65,7 @@ def expand_jobs(spec: SweepSpec) -> List[Dict]:
             "rho": spec.rho,
             "epoch_interval": spec.epoch_interval,
             "max_events": spec.max_events,
+            "engine": spec.engine,
         })
     return jobs
 
@@ -94,7 +96,8 @@ def run_job(job: Dict) -> Dict:
                                   rho=job.get("rho"))
     placement, allocation, rr = make_method(job["method"],
                                             **job["method_params"])
-    sim = Simulator(sc, epoch_interval=job["epoch_interval"])
+    sim = Simulator(sc, epoch_interval=job["epoch_interval"],
+                    engine=job.get("engine", "numpy"))
     t0 = time.time()
     res = sim.run(requests, placement, allocation, rr_dispatch=rr,
                   max_events=job["max_events"])
@@ -106,6 +109,8 @@ def run_job(job: Dict) -> Dict:
         "seed": job["seed"],
         "n_requests": len(requests),
         "n_events": res.n_events,
+        "truncated": res.truncated,
+        "engine": job.get("engine", "numpy"),
         "infeasible_events": res.infeasible_events,
         "horizon_s": info.get("horizon", 0.0),
         "wall_s": time.time() - t0,
@@ -127,10 +132,11 @@ def run_sweep(spec: SweepSpec, verbose: bool = False
     def note(i: int, done: int) -> None:
         if verbose and rows[i] is not None:
             r = rows[i]
+            trunc = " TRUNCATED" if r.get("truncated") else ""
             print(f"# [{done}/{len(jobs)}] {r['method']}"
                   f" @ {r['scenario']} seed={r['seed']}"
                   f" overall={r['overall']:.4f}"
-                  f" wall={r['wall_s']:.1f}s", flush=True)
+                  f" wall={r['wall_s']:.1f}s{trunc}", flush=True)
 
     def failed(i: int, err: Exception) -> None:
         job = jobs[i]

@@ -1,0 +1,69 @@
+"""jax backend for the simulator's per-event hot pair (Eq. 1 stage model).
+
+The fused step mirrors :class:`repro.sim.event_core.NumpyEventCore`
+element-for-element in float64 — the event schedule is a chain of IEEE-754
+double divisions; float32 would desync the engines within a handful of
+events.  XLA may still fuse multiply-adds, so event times can differ from
+the scalar/numpy pair by ulps (the bit-for-bit contract binds scalar and
+numpy; this backend is held to identical discrete outcomes).  Callers must run inside :func:`jax.experimental.enable_x64` (the
+:class:`~repro.sim.event_core.JaxEventCore` wrapper does); the flag is
+deliberately NOT flipped globally so the rest of the process keeps jax's
+default dtypes.  On CPU the per-event dispatch makes
+this slower than numpy; the backend exists as the accelerator-resident
+growth path — batching the step across seeds/replicas turns the [S]
+vectors into [B, S] blocks, at which point the same expressions become a
+Pallas TPU kernel alongside :mod:`repro.kernels.alloc_active_set` (lane
+reductions over the padded instance dimension).
+
+Like every module in this package, importing it requires jax; the
+simulator only imports it when ``engine="jax"`` is selected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+@jax.jit
+def next_completion_jax(rem_g: jax.Array, rem_c: jax.Array,
+                        alloc_g: jax.Array, alloc_c: jax.Array,
+                        avail: jax.Array, t: float):
+    """Earliest head completion honoring GPU-then-CPU stage ordering.
+
+    A pending stage with zero allocation divides to +inf and can never be
+    the argmin — such heads wait for a reallocation event.  Returns
+    ``(t_next, sid)``; ``t_next`` is +inf when nothing can complete.
+    """
+    dt_g = jnp.where(rem_g > 0.0, rem_g / alloc_g, 0.0)
+    dt_c = jnp.where(rem_c > 0.0, rem_c / alloc_c, 0.0)
+    cand = jnp.where(avail, t + (dt_g + dt_c), INF)
+    sid = jnp.argmin(cand)
+    return cand[sid], sid
+
+
+@jax.jit
+def advance_jax(rem_g: jax.Array, rem_c: jax.Array,
+                alloc_g: jax.Array, alloc_c: jax.Array,
+                act: jax.Array, dt: float):
+    """Fused ``advance``: progress served heads by ``dt`` without crossing
+    the GPU->CPU stage boundary; stalled GPU stages freeze the head.
+
+    Returns ``(rem_g', rem_c', started)`` — the progressed residuals and
+    the mask of heads that progressed (Ψ aggregates are derived from the
+    residuals by :class:`~repro.sim.cluster.ClusterState`, so no work
+    deltas travel back).
+    """
+    gpu_need = rem_g > 0.0
+    run_g = act & gpu_need & (alloc_g > 0.0)
+    stalled = act & gpu_need & (alloc_g <= 0.0)
+    tg = jnp.where(run_g, jnp.minimum(dt, rem_g / alloc_g), 0.0)
+    dg = jnp.where(run_g, alloc_g * tg, 0.0)
+    rg_new = rem_g - dg
+    rem_dt = jnp.where(run_g, dt - tg, dt)
+    cpu_ok = (act & ~stalled & (rg_new <= 0.0) & (rem_dt > 0.0)
+              & (rem_c > 0.0) & (alloc_c > 0.0))
+    tc = jnp.where(cpu_ok, jnp.minimum(rem_dt, rem_c / alloc_c), 0.0)
+    dc = jnp.where(cpu_ok, alloc_c * tc, 0.0)
+    return rg_new, rem_c - dc, run_g | cpu_ok

@@ -8,6 +8,7 @@ from repro.sim.types import (InstanceCategory, InstanceSpec, NodeSpec,
                              Request, RequestClass, MigrationAction)
 from repro.sim.cluster import ClusterState
 from repro.sim.engine import Simulator, SimResult
+from repro.sim.event_core import ENGINES, make_event_core
 from repro.sim.workload import WorkloadConfig, generate_workload
 from repro.sim.scenario import paper_scenario
 from repro.sim.scenarios import (family_names, make_scenario,
@@ -16,6 +17,7 @@ from repro.sim.scenarios import (family_names, make_scenario,
 __all__ = [
     "InstanceCategory", "InstanceSpec", "NodeSpec", "Request", "RequestClass",
     "MigrationAction", "ClusterState", "Simulator", "SimResult",
+    "ENGINES", "make_event_core",
     "WorkloadConfig", "generate_workload", "paper_scenario",
     "family_names", "make_scenario", "scenario_fingerprint", "workload_for",
 ]

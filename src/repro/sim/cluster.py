@@ -1,29 +1,86 @@
 """Cluster state: residency y_{n,s}, queues, VRAM accounting, allocator I/O.
 
 Performance notes (the simulator re-allocates on every event):
-  * per-instance queue aggregates (Ψ sums) are maintained incrementally,
+  * head-of-queue state (residuals, deadline, KV, started) and the queue
+    aggregates (Ψ sums, Eq. 13) live in contiguous ``[S]`` numpy arrays on
+    :class:`ClusterState`, updated incrementally by :meth:`push_job` /
+    :meth:`pop_job` and advanced wholesale by the event cores — so
+    ``next_completion`` is one masked argmin and ``advance`` one fused
+    array update (see :mod:`repro.sim.event_core`),
   * per-instance deadline vectors are cached numpy arrays rebuilt only when
     the queue changes, so urgency ω(t) is one vectorized op per instance,
   * expired not-yet-started requests are dropped lazily (bounds queue length
     and models admission control; counted as unfulfilled).
+
+The ``Job`` objects in each FIFO remain the request-level record, but while
+a job is at the head of its queue the *arrays* are authoritative for its
+residual work / started flag; :meth:`pop_job` syncs the final values back
+onto the object before handing it to the engine.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-
-from repro.core.allocator_np import allocate_cluster_np
 from repro.sim.types import (InstanceCategory, InstanceSpec, MigrationAction,
                              NodeSpec, Request, RequestClass)
 
 EPS_URGENCY = 1e-3   # ε in Eq. 14 (seconds)
 EPS_FLOOR = 1e-4     # denominator clamp in Eq. 15
+EPS_ALLOC = 1e-9     # denominator clamp in Eq. 18 (matches allocator_np.EPS)
 FLOOR_MARGIN = 0.9   # finish RAN work 10% before the earliest deadline:
                      # serving exactly at the floor rate would complete at
                      # the deadline edge, losing ties to transport jitter
+
+
+def _active_set_small(w: List[float], floors: List[float],
+                      capacity: float) -> List[float]:
+    """Floors-respecting proportional share (Eq. 17–19) on a few scalars.
+
+    Semantics of :func:`repro.core.allocator_np.active_set_np`, but over the
+    handful of busy instances on ONE node as plain Python floats — the
+    simulator re-allocates per event, and full-S vector solves per node are
+    exactly the O(S)-per-event cost the event loop must not pay.
+    """
+    k = len(w)
+    floor_sum = 0.0
+    for f in floors:
+        floor_sum += f
+    if floor_sum > capacity + 1e-6 and floor_sum > 0.0:
+        scale = capacity / floor_sum
+        floors = [f * scale for f in floors]
+    pinned = [wi <= 0.0 for wi in w]
+    for _ in range(k):
+        rem = capacity
+        denom = 0.0
+        for i in range(k):
+            if pinned[i]:
+                rem -= floors[i]
+            else:
+                denom += w[i]
+        rem = max(rem, 0.0)
+        denom = max(denom, EPS_ALLOC)
+        grew = False
+        for i in range(k):
+            if not pinned[i] and w[i] * rem / denom < floors[i]:
+                pinned[i] = True
+                grew = True
+        if not grew:
+            break
+    rem = capacity
+    denom = 0.0
+    for i in range(k):
+        if pinned[i]:
+            rem -= floors[i]
+        else:
+            denom += w[i]
+    rem = max(rem, 0.0)
+    denom = max(denom, EPS_ALLOC)
+    return [floors[i] if pinned[i] else w[i] * rem / denom
+            for i in range(k)]
 
 
 @dataclasses.dataclass
@@ -38,47 +95,21 @@ class Job:
 
 
 class InstQueue:
-    """FIFO queue of jobs at one (node, instance) with cached aggregates."""
+    """FIFO of jobs at one (node, instance) with a cached deadline vector.
 
-    __slots__ = ("jobs", "psi_g", "psi_c", "_deadlines", "_dirty")
+    Aggregates (Ψ) and head state live on :class:`ClusterState` arrays;
+    the queue only owns the job order and the deadline cache for ω(t).
+    """
+
+    __slots__ = ("jobs", "_deadlines", "_dirty")
 
     def __init__(self) -> None:
         self.jobs: deque = deque()
-        self.psi_g = 0.0        # Ψ^g — aggregate residual GPU work (Eq. 13)
-        self.psi_c = 0.0        # Ψ^c
         self._deadlines = np.empty(0, np.float64)
         self._dirty = False
 
-    def push(self, job: Job) -> None:
-        self.jobs.append(job)
-        self.psi_g += job.rem_g
-        self.psi_c += job.rem_c
-        self._dirty = True
-
-    def pop(self) -> Job:
-        job = self.jobs.popleft()
-        self.psi_g -= job.rem_g
-        self.psi_c -= job.rem_c
-        self._dirty = True
-        return job
-
-    @property
-    def kv_active(self) -> float:
-        """γ_q of the in-service request (A_{n,s}: the running batch holds
-        KV on the accelerator; waiting requests queue in host memory)."""
-        if self.jobs and self.jobs[0].started:
-            return self.jobs[0].kv_bytes
-        return 0.0
-
     def head(self) -> Optional[Job]:
         return self.jobs[0] if self.jobs else None
-
-    def progress_head(self, dg: float, dc: float) -> None:
-        job = self.jobs[0]
-        job.rem_g -= dg
-        job.rem_c -= dc
-        self.psi_g -= dg
-        self.psi_c -= dc
 
     def deadlines(self) -> np.ndarray:
         if self._dirty:
@@ -93,7 +124,9 @@ class InstQueue:
         if not self.jobs:
             return 0.0
         rem = self.deadlines() - t
-        return float(np.sum(1.0 / np.maximum(rem, EPS_URGENCY)))
+        np.maximum(rem, EPS_URGENCY, out=rem)
+        np.reciprocal(rem, out=rem)
+        return float(rem.sum())
 
     def min_deadline_remaining(self, t: float) -> float:
         if not self.jobs:
@@ -129,6 +162,18 @@ class ClusterState:
         self.alloc_c = np.zeros(self.S)              # c_{n(s),s}
         self.infeasible_events = 0                   # Eq. 15 denominator ≤ 0
 
+        # --- contiguous per-instance event-core state --------------------- #
+        # Ψ (Eq. 13) is derived: tail (jobs behind the head; only changes on
+        # push/pop) + the head residual — so advance never updates aggregates
+        self.tail_psi_g = np.zeros(self.S)
+        self.tail_psi_c = np.zeros(self.S)
+        self.head_rem_g = np.zeros(self.S)           # head-of-queue residuals
+        self.head_rem_c = np.zeros(self.S)
+        self.head_deadline = np.full(self.S, np.inf)
+        self.head_kv = np.zeros(self.S)              # γ_q of the head
+        self.head_mask = np.zeros(self.S, bool)      # queue non-empty
+        self.head_started = np.zeros(self.S, bool)   # head has progressed
+
         self._du_by_cell: Dict[int, int] = {}
         self._cuup_by_cell: Dict[int, int] = {}
         for s in instances:
@@ -142,9 +187,70 @@ class ClusterState:
         self._node_sids: List[List[int]] = [[] for _ in range(self.N)]
         for sid in range(self.S):
             self._node_sids[self.placement[sid]].append(sid)
+        # instance weights by sid (vectorized VRAM accounting, Eq. 4)
+        self._weights = np.array([s.weight_bytes for s in instances])
 
         # expected downstream CU-UP processing time α̂^down (EMA per cell)
         self._cuup_time_ema = {c: 5e-4 for c in self._cuup_by_cell}
+
+    # ------------------------------------------------------------------ #
+    # queue mutation (the ONLY writers of the head/Ψ arrays besides the
+    # event cores' advance)
+    # ------------------------------------------------------------------ #
+    def _promote_head(self, sid: int) -> None:
+        q = self.queues[sid]
+        job = q.head()
+        if job is None:
+            self.head_rem_g[sid] = 0.0
+            self.head_rem_c[sid] = 0.0
+            self.head_deadline[sid] = np.inf
+            self.head_kv[sid] = 0.0
+            self.head_mask[sid] = False
+            self.head_started[sid] = False
+        else:
+            self.head_rem_g[sid] = job.rem_g
+            self.head_rem_c[sid] = job.rem_c
+            self.head_deadline[sid] = job.abs_deadline
+            self.head_kv[sid] = job.kv_bytes
+            self.head_mask[sid] = True
+            self.head_started[sid] = job.started
+
+    def push_job(self, sid: int, job: Job) -> None:
+        q = self.queues[sid]
+        q.jobs.append(job)
+        q._dirty = True
+        if len(q.jobs) == 1:
+            self._promote_head(sid)
+        else:
+            self.tail_psi_g[sid] += job.rem_g
+            self.tail_psi_c[sid] += job.rem_c
+
+    def pop_job(self, sid: int) -> Job:
+        """Remove the head; syncs its live residuals back onto the Job."""
+        q = self.queues[sid]
+        job = q.jobs.popleft()
+        q._dirty = True
+        job.rem_g = float(self.head_rem_g[sid])
+        job.rem_c = float(self.head_rem_c[sid])
+        job.started = bool(self.head_started[sid])
+        nxt = q.head()
+        if nxt is not None:                   # the new head leaves the tail
+            self.tail_psi_g[sid] -= nxt.rem_g
+            self.tail_psi_c[sid] -= nxt.rem_c
+        self._promote_head(sid)
+        return job
+
+    def psi_g_of(self, sid: int) -> float:
+        """Ψ^g — aggregate residual GPU work at ``sid`` (Eq. 13)."""
+        return float(self.tail_psi_g[sid] + self.head_rem_g[sid])
+
+    def psi_c_of(self, sid: int) -> float:
+        return float(self.tail_psi_c[sid] + self.head_rem_c[sid])
+
+    def kv_active_vec(self) -> np.ndarray:
+        """γ_q of each in-service request (A_{n,s}: the running batch holds
+        KV on the accelerator; waiting requests queue in host memory)."""
+        return np.where(self.head_started, self.head_kv, 0.0)
 
     # ------------------------------------------------------------------ #
     # lookups
@@ -169,10 +275,7 @@ class ClusterState:
     # ------------------------------------------------------------------ #
     def vram_used(self) -> np.ndarray:
         used = np.zeros(self.N)
-        for s in self.instances:
-            n = self.placement[s.sid]
-            used[n] += s.weight_bytes
-            used[n] += self.queues[s.sid].kv_active
+        np.add.at(used, self.placement, self._weights + self.kv_active_vec())
         return used
 
     def vram_headroom(self) -> np.ndarray:
@@ -184,7 +287,7 @@ class ClusterState:
             return False
         inst = self.instances[a.sid]
         head = self.vram_headroom()[a.dst]
-        kv = self.queues[a.sid].kv_active            # KV travels with service
+        kv = float(self.kv_active_vec()[a.sid])      # KV travels with service
         return head >= inst.weight_bytes + kv
 
     # ------------------------------------------------------------------ #
@@ -204,9 +307,8 @@ class ClusterState:
     def residency_mask(self, t: float) -> np.ndarray:
         """[N, S] — y_{n,s} ∧ not reconfiguring (unavailable gets nothing)."""
         mask = np.zeros((self.N, self.S), bool)
-        for sid in range(self.S):
-            if t >= self.reconfig_until[sid]:
-                mask[self.placement[sid], sid] = True
+        avail = t >= self.reconfig_until
+        mask[self.placement[avail], np.nonzero(avail)[0]] = True
         return mask
 
     def allocator_inputs(self, t: float, nodes: Optional[List[int]] = None):
@@ -224,39 +326,49 @@ class ClusterState:
         mask = self.residency_mask(t)
 
         if nodes is None:
-            sids = range(self.S)
+            sids = np.nonzero(self.head_mask)[0]
         else:
-            sids = [s for n in nodes for s in self._node_sids[n]]
+            sids = [s for n in nodes for s in self._node_sids[n]
+                    if self.head_mask[s]]
         for sid in sids:
-            inst = self.instances[sid]
-            q = self.queues[sid]
-            if not q.jobs:
-                continue
             n = self.placement[sid]
             if not mask[n, sid]:
                 continue
-            psi_g[n, sid] = max(q.psi_g, 0.0)
-            psi_c[n, sid] = max(q.psi_c, 0.0)
-            omega[n, sid] = q.omega(t)
-
-            # RAN capacity floors (Eq. 15) on the dominant resource
-            if inst.category == InstanceCategory.DU:
-                alpha_down = self._cuup_time_ema.get(inst.cell, 5e-4)
-                rem = q.min_deadline_remaining(t) - self.delta - alpha_down
-                rem *= FLOOR_MARGIN
-                if rem <= 0.0:
-                    self.infeasible_events += 1
-                floors_g[n, sid] = min(
-                    max(q.psi_g, 0.0) / max(rem, EPS_FLOOR),
-                    self.gpu_capacity[n])
-            elif inst.category == InstanceCategory.CUUP:
-                rem = q.min_deadline_remaining(t) * FLOOR_MARGIN
-                if rem <= 0.0:
-                    self.infeasible_events += 1
-                floors_c[n, sid] = min(
-                    max(q.psi_c, 0.0) / max(rem, EPS_FLOOR),
-                    self.cpu_capacity[n])
+            (psi_g[n, sid], psi_c[n, sid], omega[n, sid],
+             floors_g[n, sid], floors_c[n, sid]) = self._sid_alloc_inputs(
+                sid, t, float(self.gpu_capacity[n]),
+                float(self.cpu_capacity[n]))
         return psi_g, psi_c, omega, floors_g, floors_c, mask
+
+    def _sid_alloc_inputs(self, sid: int, t: float, gpu_cap: float,
+                          cpu_cap: float):
+        """(Ψ^g, Ψ^c, ω, floor_g, floor_c) for one servable head (Eq. 13–15).
+
+        The single source of the RAN capacity-floor formula — both the
+        [N, S] allocator-input build (baselines, snapshots) and the compact
+        per-node deadline-aware solve feed from here, so the floor/urgency
+        semantics (and the infeasibility count) cannot desync."""
+        q = self.queues[sid]
+        psi_g = max(self.psi_g_of(sid), 0.0)
+        psi_c = max(self.psi_c_of(sid), 0.0)
+        omega = q.omega(t)
+        fg = fc = 0.0
+        # RAN capacity floors (Eq. 15) on the dominant resource
+        category = self.instances[sid].category
+        if category == InstanceCategory.DU:
+            alpha_down = self._cuup_time_ema.get(self.instances[sid].cell,
+                                                 5e-4)
+            rem = q.min_deadline_remaining(t) - self.delta - alpha_down
+            rem *= FLOOR_MARGIN
+            if rem <= 0.0:
+                self.infeasible_events += 1
+            fg = min(psi_g / max(rem, EPS_FLOOR), gpu_cap)
+        elif category == InstanceCategory.CUUP:
+            rem = q.min_deadline_remaining(t) * FLOOR_MARGIN
+            if rem <= 0.0:
+                self.infeasible_events += 1
+            fc = min(psi_c / max(rem, EPS_FLOOR), cpu_cap)
+        return psi_g, psi_c, omega, fg, fc
 
     def apply_allocation(self, g_ns: np.ndarray, c_ns: np.ndarray,
                          nodes: Optional[List[int]] = None) -> None:
@@ -270,25 +382,44 @@ class ClusterState:
                 self.alloc_g[sid] = g_ns[n, sid]
                 self.alloc_c[sid] = c_ns[n, sid]
 
+    def _deadline_alloc_node(self, n: int, t: float) -> None:
+        """Compact per-node closed form (Eq. 16–19) over busy instances only.
+
+        One pass gathers the node's servable heads (Ψ, ω, RAN floors) into
+        scalar lists, :func:`_active_set_small` shares each resource, and
+        idle/unavailable instances get zero — O(busy-on-node), not O(S)."""
+        gpu_cap = float(self.gpu_capacity[n])
+        cpu_cap = float(self.cpu_capacity[n])
+        busy: List[int] = []
+        w_g: List[float] = []
+        w_c: List[float] = []
+        fl_g: List[float] = []
+        fl_c: List[float] = []
+        for sid in self._node_sids[n]:
+            if not self.head_mask[sid] or t < self.reconfig_until[sid]:
+                self.alloc_g[sid] = 0.0
+                self.alloc_c[sid] = 0.0
+                continue
+            psi_g, psi_c, omega, fg, fc = self._sid_alloc_inputs(
+                sid, t, gpu_cap, cpu_cap)
+            busy.append(sid)
+            w_g.append(math.sqrt(omega * psi_g))            # Eq. 17
+            w_c.append(math.sqrt(omega * psi_c))
+            fl_g.append(fg)
+            fl_c.append(fc)
+        if not busy:
+            return
+        g = _active_set_small(w_g, fl_g, gpu_cap)
+        c = _active_set_small(w_c, fl_c, cpu_cap)
+        for i, sid in enumerate(busy):
+            self.alloc_g[sid] = g[i]
+            self.alloc_c[sid] = c[i]
+
     def default_allocate(self, t: float,
                          nodes: Optional[List[int]] = None) -> None:
         """The paper's allocation layer (closed-form active-set, Eq. 18)."""
-        psi_g, psi_c, omega, fg, fc, mask = self.allocator_inputs(t, nodes)
-        if nodes is None:
-            g, c, _ = allocate_cluster_np(psi_g, psi_c, omega, fg, fc,
-                                          self.gpu_capacity,
-                                          self.cpu_capacity, mask)
-            self.apply_allocation(g, c)
-            return
-        from repro.core.allocator_np import solve_resource_np
-        for n in nodes:
-            g, _, _ = solve_resource_np(psi_g[n], omega[n], fg[n],
-                                        float(self.gpu_capacity[n]), mask[n])
-            c, _, _ = solve_resource_np(psi_c[n], omega[n], fc[n],
-                                        float(self.cpu_capacity[n]), mask[n])
-            for sid in self._node_sids[n]:
-                self.alloc_g[sid] = g[sid]
-                self.alloc_c[sid] = c[sid]
+        for n in (range(self.N) if nodes is None else nodes):
+            self._deadline_alloc_node(n, t)
 
     def observe_cuup_time(self, cell: int, elapsed: float) -> None:
         ema = self._cuup_time_ema.get(cell, elapsed)
@@ -297,20 +428,17 @@ class ClusterState:
     # ------------------------------------------------------------------ #
     # routing: smallest-backlog among the service's replicas (paper §II)
     # ------------------------------------------------------------------ #
-    def route_ai(self, sids: List[int], t: float,
+    def route_ai(self, sids, t: float,
                  rr_counter: Optional[List[int]] = None) -> int:
         if rr_counter is not None:                   # Round-Robin baseline
             sid = sids[rr_counter[0] % len(sids)]
             rr_counter[0] += 1
-            return sid
-        best, best_cost = sids[0], np.inf
-        for sid in sids:
-            q = self.queues[sid]
-            rate = max(self.alloc_g[sid], 1e6)
-            wait = q.psi_g / rate + max(self.reconfig_until[sid] - t, 0.0)
-            if wait < best_cost:
-                best, best_cost = sid, wait
-        return best
+            return int(sid)
+        idx = np.asarray(sids, np.int64)
+        psi = self.tail_psi_g[idx] + self.head_rem_g[idx]
+        wait = psi / np.maximum(self.alloc_g[idx], 1e6) \
+            + np.maximum(self.reconfig_until[idx] - t, 0.0)
+        return int(idx[int(np.argmin(wait))])
 
     # ------------------------------------------------------------------ #
     # snapshot metrics for agents / critics / prompts
@@ -319,10 +447,8 @@ class ClusterState:
         psi_g, psi_c, omega, fg, fc, mask = self.allocator_inputs(t)
         g_used = np.zeros(self.N)
         c_used = np.zeros(self.N)
-        for sid in range(self.S):
-            n = self.placement[sid]
-            g_used[n] += self.alloc_g[sid]
-            c_used[n] += self.alloc_c[sid]
+        np.add.at(g_used, self.placement, self.alloc_g)
+        np.add.at(c_used, self.placement, self.alloc_c)
         return {
             "gpu_util": g_used / self.gpu_capacity,
             "cpu_util": c_used / self.cpu_capacity,

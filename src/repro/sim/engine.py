@@ -7,10 +7,15 @@ swap the :class:`AllocationPolicy` and/or the placement policy; HAF uses
 the deadline-aware closed form + the agentic placement layer.
 
 Event mechanics: between events every instance serves the head of its FIFO
-queue at its allocated rate (GPU work first, then CPU — Eq. 1), so the next
-completion time is computable in closed form and nothing happens between
-events.  Expired not-yet-started requests are dropped when they reach the
-head (admission control; counted as unfulfilled).
+queue at its allocated rate with strict stage ordering (GPU work first,
+then CPU — Eq. 1), so the next completion time is computable in closed
+form and nothing happens between events.  The per-event hot pair
+(``next_completion``/``advance``) runs on an interchangeable event core
+(``engine="numpy" | "scalar" | "jax"``, see :mod:`repro.sim.event_core`):
+the vectorized numpy core is the default; the scalar loop is the
+bit-for-bit reference kept as a debug engine.  Expired not-yet-started
+requests are dropped when they reach the head (admission control; counted
+as unfulfilled).
 """
 from __future__ import annotations
 
@@ -22,11 +27,13 @@ from typing import Callable, Dict, List, Optional, Protocol, Tuple
 import numpy as np
 
 from repro.sim.cluster import ClusterState, Job
+from repro.sim.event_core import make_event_core
 from repro.sim.snapshot import EpochSnapshot
 from repro.sim.types import (InstanceCategory, MigrationAction, Request,
                              RequestClass)
 
 INF = float("inf")
+NAN = float("nan")
 
 
 class PlacementPolicy(Protocol):
@@ -80,6 +87,9 @@ class SimResult:
     epochs: List[EpochRecord]
     infeasible_events: int
     n_events: int
+    # the run hit max_events with work still pending: the remaining
+    # requests never ran, so every aggregate below is a partial view
+    truncated: bool = False
 
     # ------------------------------------------------------------------ #
     def fulfillment(self) -> Dict[str, float]:
@@ -99,16 +109,20 @@ class SimResult:
         return large, len(self.migrations)
 
     def summary(self) -> Dict[str, float]:
+        """Flat metrics row.  Request classes absent from the scenario are
+        NaN (not 0.0) so fleet aggregation can skip them instead of
+        averaging phantom zeros into the class means."""
         f = self.fulfillment()
         large, tot = self.migration_counts()
         return {
-            "overall": f.get("overall", 0.0),
-            "ran": f.get("RAN", 0.0),
-            "ai": f.get("AI", 0.0),
-            "large_ai": f.get("LARGE_AI", 0.0),
-            "small_ai": f.get("SMALL_AI", 0.0),
+            "overall": f.get("overall", NAN),
+            "ran": f.get("RAN", NAN),
+            "ai": f.get("AI", NAN),
+            "large_ai": f.get("LARGE_AI", NAN),
+            "small_ai": f.get("SMALL_AI", NAN),
             "mig_large": large,
             "mig_total": tot,
+            "truncated": self.truncated,
         }
 
 
@@ -120,11 +134,14 @@ class CommittedMigration(MigrationAction):
 
 class Simulator:
     def __init__(self, scenario: Dict, epoch_interval: float = 5.0,
-                 drop_expired: bool = False, seed: int = 0):
+                 drop_expired: bool = False, seed: int = 0,
+                 engine: str = "numpy"):
         self.scenario = scenario
         self.epoch_interval = epoch_interval
         self.drop_expired = drop_expired
         self.seed = seed
+        self.engine = engine
+        make_event_core(engine)                # fail fast on unknown names
 
     # ------------------------------------------------------------------ #
     def run(self, requests: List[Request],
@@ -138,7 +155,14 @@ class Simulator:
         sc = self.scenario
         cluster = ClusterState(sc["nodes"], sc["instances"], sc["placement"],
                                sc["transport_delay"])
-        service_sids: Dict[str, List[int]] = sc["service_sids"]
+        # per-run core: the numpy backend carries mutable scratch + a
+        # prepare cache, so sharing one across overlapping runs (threads,
+        # nested runs from an epoch_hook) would cross-contaminate state
+        core = make_event_core(self.engine)
+        # replica sets as int arrays: route_ai is one vectorized argmin
+        service_sids: Dict[str, np.ndarray] = {
+            k: np.asarray(v, np.int64)
+            for k, v in sc["service_sids"].items()}
         ran_packet = sc["ran_packet_delay"]
         delta = sc["transport_delay"]
 
@@ -191,6 +215,7 @@ class Simulator:
 
         t = 0.0
         n_events = 0
+        truncated = False
         allocation.allocate(cluster, t)
         dirty: set = set()
         last_full = 0.0
@@ -202,60 +227,18 @@ class Simulator:
         def cleanup_drops() -> None:
             if not self.drop_expired:
                 return
-            for sid in range(cluster.S):
-                q = cluster.queues[sid]
-                while q.jobs:
-                    head = q.jobs[0]
-                    if head.started or head.abs_deadline > t:
-                        break
-                    q.pop()
-                    drop_request(head.req)
+            expired = (cluster.head_mask & ~cluster.head_started
+                       & (cluster.head_deadline <= t))
+            for sid in np.nonzero(expired)[0]:
+                while (cluster.head_mask[sid]
+                       and not cluster.head_started[sid]
+                       and cluster.head_deadline[sid] <= t):
+                    job = cluster.pop_job(sid)
+                    drop_request(job.req)
                     mark(sid)
 
-        def next_completion() -> Tuple[float, int]:
-            best_t, best_s = INF, -1
-            for sid in range(cluster.S):
-                q = cluster.queues[sid]
-                head = q.head()
-                if head is None or not cluster.available(sid, t):
-                    continue
-                g, c = cluster.alloc_g[sid], cluster.alloc_c[sid]
-                dt = 0.0
-                if head.rem_g > 0:
-                    if g <= 0:
-                        continue
-                    dt += head.rem_g / g
-                if head.rem_c > 0:
-                    if c <= 0:
-                        continue
-                    dt += head.rem_c / c
-                if t + dt < best_t:
-                    best_t, best_s = t + dt, sid
-            return best_t, best_s
-
-        def advance(dt: float) -> None:
-            if dt <= 0:
-                return
-            for sid in range(cluster.S):
-                q = cluster.queues[sid]
-                head = q.head()
-                if head is None or not cluster.available(sid, t):
-                    continue
-                g, c = cluster.alloc_g[sid], cluster.alloc_c[sid]
-                rem_dt = dt
-                if head.rem_g > 0 and g > 0:
-                    tg = min(rem_dt, head.rem_g / g)
-                    q.progress_head(g * tg, 0.0)
-                    head.started = True
-                    rem_dt -= tg
-                if rem_dt > 0 and head.rem_c > 0 and c > 0:
-                    tc = min(rem_dt, head.rem_c / c)
-                    q.progress_head(0.0, c * tc)
-                    head.started = True
-
         def handle_completion(sid: int) -> None:
-            q = cluster.queues[sid]
-            job = q.pop()
+            job = cluster.pop_job(sid)
             job.rem_g = job.rem_c = 0.0
             req = job.req
             inst = cluster.instances[sid]
@@ -292,7 +275,7 @@ class Simulator:
                 psi_c=util["psi_c"], omega=util["omega"],
                 alloc_g=cluster.alloc_g.copy(),
                 alloc_c=cluster.alloc_c.copy(),
-                kv_held=np.array([q.kv_active for q in cluster.queues]),
+                kv_held=cluster.kv_active_vec(),
                 recent_fulfill=fl, arrival_rate=rates)
 
         def close_epoch_window(rec: Optional[EpochRecord]) -> None:
@@ -315,13 +298,16 @@ class Simulator:
         # draining after the heap empties (a stage completion can push the
         # next stage — e.g. DU -> CU-UP — or work may resume after an
         # outage/reconfiguration ends)
-        while n_events < max_events:
-            t_comp, sid_comp = next_completion()
+        while True:
+            t_comp, sid_comp = core.next_completion(cluster, t)
             t_ev = heap[0][0] if heap else INF
             t_next = min(t_comp, t_ev)
             if not math.isfinite(t_next):
                 break
-            advance(t_next - t)
+            if n_events >= max_events:
+                truncated = True
+                break
+            core.advance(cluster, t, t_next - t)
             t = t_next
             n_events += 1
 
@@ -333,7 +319,7 @@ class Simulator:
                 if kind == "du":
                     req: Request = payload
                     sid = cluster.du_of(req.cell)
-                    cluster.queues[sid].push(Job(
+                    cluster.push_job(sid, Job(
                         req=req, rem_g=max(req.du_work_g, 1.0),
                         rem_c=max(req.du_work_c, 0.0),
                         abs_deadline=req.arrival + req.deadline))
@@ -343,7 +329,7 @@ class Simulator:
                     req = payload
                     sid = cluster.cuup_of(req.cell)
                     req.stage_entered = t
-                    cluster.queues[sid].push(Job(
+                    cluster.push_job(sid, Job(
                         req=req, rem_g=0.0,
                         rem_c=max(req.cuup_work_c, 1e-9),
                         abs_deadline=req.arrival + req.deadline))
@@ -363,7 +349,7 @@ class Simulator:
                 elif kind == "ai_enqueue":
                     req, sid = payload
                     req.stage_entered = t
-                    cluster.queues[sid].push(Job(
+                    cluster.push_job(sid, Job(
                         req=req, rem_g=max(req.ai_work_g, 1.0),
                         rem_c=max(req.ai_work_c, 0.0),
                         abs_deadline=req.arrival + req.deadline,
@@ -430,4 +416,4 @@ class Simulator:
         return SimResult(requests=requests, dropped=dropped,
                          migrations=migrations, epochs=epochs,
                          infeasible_events=cluster.infeasible_events,
-                         n_events=n_events)
+                         n_events=n_events, truncated=truncated)

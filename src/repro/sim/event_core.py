@@ -1,0 +1,264 @@
+"""Event cores: the simulator's per-event hot pair (next_completion, advance).
+
+Between events every instance serves the head of its FIFO at its allocated
+rate with strict stage ordering (GPU work first, then CPU — Eq. 1):
+
+  * ``next_completion`` — earliest time any head finishes BOTH stages.  A
+    head whose pending stage has zero allocation cannot complete and is
+    excluded (the next reallocation event unblocks it).
+  * ``advance`` — progress every served head by ``dt``, never crossing the
+    GPU→CPU stage boundary within an update: CPU work progresses only once
+    the GPU residual is exhausted, and nothing progresses while the GPU
+    stage is stalled (``rem_g > 0`` with ``alloc_g <= 0``).  This is the
+    fix for the historical divergence where CPU work progressed on heads
+    the completion scan skipped, silently desyncing progressed work from
+    the event schedule.
+
+Three interchangeable backends over the contiguous per-instance arrays
+owned by :class:`~repro.sim.cluster.ClusterState`:
+
+  * ``scalar`` — pure-Python reference loop (debug engine; the semantics
+    spec the others must match bit-for-bit),
+  * ``numpy``  — one masked argmin + one fused array update (default),
+  * ``jax``    — the same fused step jitted in float64 via
+    :mod:`repro.kernels.event_core` (optional; requires jax).
+
+The scalar and numpy cores are bit-for-bit equivalent by construction:
+both evaluate the identical IEEE-754 double expressions per instance
+(``rem/rate`` divisions, ``min`` clamps, first-index argmin tie-break).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.sim.cluster import ClusterState
+
+INF = float("inf")
+
+
+class ScalarEventCore:
+    """Reference implementation: explicit per-instance Python loops."""
+
+    name = "scalar"
+
+    def next_completion(self, cluster: ClusterState,
+                        t: float) -> Tuple[float, int]:
+        best_t, best_s = INF, -1
+        for sid in range(cluster.S):
+            if not cluster.head_mask[sid] or t < cluster.reconfig_until[sid]:
+                continue
+            g = cluster.alloc_g[sid]
+            c = cluster.alloc_c[sid]
+            rg = cluster.head_rem_g[sid]
+            rc = cluster.head_rem_c[sid]
+            dt = 0.0
+            if rg > 0.0:
+                if g <= 0.0:
+                    continue                     # GPU stage stalled
+                dt += rg / g
+            if rc > 0.0:
+                if c <= 0.0:
+                    continue                     # CPU stage would stall
+                dt += rc / c
+            if t + dt < best_t:
+                best_t, best_s = t + dt, sid
+        return best_t, best_s
+
+    def advance(self, cluster: ClusterState, t: float, dt: float) -> None:
+        if dt <= 0.0:
+            return
+        for sid in range(cluster.S):
+            if not cluster.head_mask[sid] or t < cluster.reconfig_until[sid]:
+                continue
+            g = cluster.alloc_g[sid]
+            c = cluster.alloc_c[sid]
+            rg = cluster.head_rem_g[sid]
+            rem_dt = dt
+            if rg > 0.0:
+                if g <= 0.0:
+                    continue                     # stalled: nothing moves
+                tg = min(rem_dt, rg / g)
+                cluster.head_rem_g[sid] = rg - g * tg
+                cluster.head_started[sid] = True
+                rem_dt = rem_dt - tg
+                if cluster.head_rem_g[sid] > 0.0:
+                    continue                     # GPU stage not finished
+            rc = cluster.head_rem_c[sid]
+            if rem_dt > 0.0 and rc > 0.0 and c > 0.0:
+                tc = min(rem_dt, rc / c)
+                cluster.head_rem_c[sid] = rc - c * tc
+                cluster.head_started[sid] = True
+
+
+class NumpyEventCore:
+    """Vectorized core: masked argmin + fused array update (default).
+
+    Every step is an ``out=``-targeted ufunc on preallocated [S] scratch —
+    the per-event cost is a fixed number of contiguous array passes with no
+    allocations, evaluating exactly the IEEE-754 expressions of the scalar
+    reference (same divisions, same ``min`` clamps, first-index argmin).
+
+    ``next_completion`` and ``advance`` share a prepare step (availability
+    mask + per-stage service times): the event loop always scans for the
+    next completion and then advances to it from the same state, so the
+    prepare result is cached per ``t`` and ``advance`` reuses it when the
+    times match.  ``advance`` invalidates the cache (it mutates the
+    residuals); a standalone ``advance`` at a fresh ``t`` re-prepares."""
+
+    name = "numpy"
+
+    def __init__(self) -> None:
+        self._S = -1
+        self._cache_t: Optional[float] = None
+
+    def _ensure_scratch(self, S: int) -> None:
+        if S != self._S:
+            self._S = S
+            self._cache_t = None
+            self._avail = np.empty(S, bool)   # head servable at t
+            self._b1 = np.empty(S, bool)      # rem_g > 0
+            self._b2 = np.empty(S, bool)      # rem_c > 0
+            self._bt = np.empty(S, bool)
+            self._bu = np.empty(S, bool)
+            self._dt_g = np.empty(S)          # rem_g / alloc_g (else 0)
+            self._dt_c = np.empty(S)          # rem_c / alloc_c (else 0)
+            self._tx = np.empty(S)
+            self._delta = np.empty(S)
+            self._rem = np.empty(S)
+
+    def _prepare(self, cluster: ClusterState, t: float) -> None:
+        np.less_equal(cluster.reconfig_until, t, out=self._avail)
+        np.logical_and(self._avail, cluster.head_mask, out=self._avail)
+        np.greater(cluster.head_rem_g, 0.0, out=self._b1)
+        np.greater(cluster.head_rem_c, 0.0, out=self._b2)
+        self._dt_g.fill(0.0)
+        self._dt_c.fill(0.0)
+        # a pending stage with zero rate divides to +inf: it can never win
+        # the completion argmin, and advance masks it out of the update
+        with np.errstate(divide="ignore", invalid="ignore"):
+            np.divide(cluster.head_rem_g, cluster.alloc_g,
+                      out=self._dt_g, where=self._b1)
+            np.divide(cluster.head_rem_c, cluster.alloc_c,
+                      out=self._dt_c, where=self._b2)
+        self._cache_t = t
+
+    def next_completion(self, cluster: ClusterState,
+                        t: float) -> Tuple[float, int]:
+        self._ensure_scratch(cluster.S)
+        self._prepare(cluster, t)
+        cand = self._tx
+        np.add(self._dt_g, self._dt_c, out=cand)
+        np.add(cand, t, out=cand)
+        np.logical_not(self._avail, out=self._bt)
+        np.copyto(cand, INF, where=self._bt)
+        sid = int(np.argmin(cand))
+        best = float(cand[sid])
+        if not np.isfinite(best):
+            return INF, -1
+        return best, sid
+
+    def advance(self, cluster: ClusterState, t: float, dt: float) -> None:
+        if dt <= 0.0:
+            return
+        self._ensure_scratch(cluster.S)
+        if self._cache_t != t:
+            self._prepare(cluster, t)
+        g = cluster.alloc_g
+        c = cluster.alloc_c
+        rg = cluster.head_rem_g
+        rc = cluster.head_rem_c
+        tx, delta, rem_dt = self._tx, self._delta, self._rem
+        run_g, btmp, baux = self._bt, self._bu, self._b1
+        np.greater(g, 0.0, out=run_g)
+        np.logical_and(run_g, self._b1, out=run_g)       # GPU stage serves:
+        np.logical_and(run_g, self._avail, out=run_g)    # rem_g>0, g>0, avail
+        np.minimum(self._dt_g, dt, out=tx)               # tg = min(dt, rg/g)
+        delta.fill(0.0)
+        np.multiply(g, tx, out=delta, where=run_g)       # dg
+        np.subtract(rg, delta, out=rg)                   # rem_g -= dg
+        np.subtract(dt, tx, out=rem_dt)                  # time left after GPU
+        # CPU progresses only once the GPU residual is exhausted (Eq. 1
+        # stage ordering) — which also excludes stalled heads (rem_g>0
+        # with alloc_g<=0 progressed nothing, so rem_g stays positive)
+        np.less_equal(rg, 0.0, out=btmp)
+        np.logical_and(btmp, self._avail, out=btmp)
+        np.logical_and(btmp, self._b2, out=btmp)         # rem_c > 0
+        np.greater(rem_dt, 0.0, out=baux)
+        np.logical_and(btmp, baux, out=btmp)
+        np.greater(c, 0.0, out=baux)
+        np.logical_and(btmp, baux, out=btmp)             # cpu_ok
+        np.minimum(self._dt_c, rem_dt, out=tx)           # tc = min(rem, rc/c)
+        delta.fill(0.0)
+        np.multiply(c, tx, out=delta, where=btmp)        # dc
+        np.subtract(rc, delta, out=rc)                   # rem_c -= dc
+        np.logical_or(run_g, btmp, out=run_g)            # any progress
+        np.logical_or(cluster.head_started, run_g,
+                      out=cluster.head_started)
+        self._cache_t = None                             # residuals changed
+
+
+class JaxEventCore:
+    """jax-jitted fused step (float64) from :mod:`repro.kernels.event_core`.
+
+    Every kernel call runs inside :func:`jax.experimental.enable_x64` — the
+    event schedule is a chain of IEEE-754 double expressions, and without
+    x64 the f64 state arrays would be silently downcast to f32, desyncing
+    this engine from the scalar/numpy pair within a handful of events.
+    Per-event host<->device transfers make this slower than numpy on CPU;
+    it exists as the accelerator-resident backend for batched multi-seed
+    simulation (the kernels-package growth path).
+    """
+
+    name = "jax"
+
+    def __init__(self) -> None:
+        from jax.experimental import enable_x64       # lazy: needs jax
+        from repro.kernels import event_core as kec
+        self._kernel = kec
+        self._x64 = enable_x64
+
+    def next_completion(self, cluster: ClusterState,
+                        t: float) -> Tuple[float, int]:
+        avail = cluster.head_mask & (cluster.reconfig_until <= t)
+        with self._x64():
+            best, sid = self._kernel.next_completion_jax(
+                cluster.head_rem_g, cluster.head_rem_c,
+                cluster.alloc_g, cluster.alloc_c, avail, t)
+            best = float(best)
+            sid = int(sid)
+        if not np.isfinite(best):
+            return INF, -1
+        return best, sid
+
+    def advance(self, cluster: ClusterState, t: float, dt: float) -> None:
+        if dt <= 0.0:
+            return
+        act = cluster.head_mask & (cluster.reconfig_until <= t)
+        with self._x64():
+            rg, rc, started = self._kernel.advance_jax(
+                cluster.head_rem_g, cluster.head_rem_c,
+                cluster.alloc_g, cluster.alloc_c, act, dt)
+            cluster.head_rem_g[:] = rg
+            cluster.head_rem_c[:] = rc
+            cluster.head_started |= np.asarray(started)
+
+
+ENGINES = ("numpy", "scalar", "jax")
+
+
+def make_event_core(engine: str):
+    """``engine`` -> event core instance (raises on unknown names)."""
+    if engine == "numpy":
+        return NumpyEventCore()
+    if engine == "scalar":
+        return ScalarEventCore()
+    if engine == "jax":
+        try:
+            return JaxEventCore()
+        except ImportError as err:
+            raise RuntimeError(
+                "engine='jax' needs jax installed; use engine='numpy'"
+            ) from err
+    raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")

@@ -166,3 +166,29 @@ def test_generic_active_set_equal_share():
     w = np.ones(4)
     alloc, feas, _ = active_set_np(w, np.zeros(4), 100.0, np.ones(4, bool))
     np.testing.assert_allclose(alloc, 25.0)
+
+
+@pytest.mark.parametrize("seed", range(40))
+@pytest.mark.parametrize("feas", (True, False))
+def test_compact_scalar_solver_matches_active_set_np(seed, feas):
+    """The simulator's per-node scalar solver (`_active_set_small`, the
+    deadline-aware hot path since the compact allocation rewrite) must
+    agree with the property-tested vector implementation.  Tolerance is
+    ulps: the scalar path sums sequentially, numpy pairwise."""
+    from repro.sim.cluster import _active_set_small
+
+    psi, omega, floors, cap, mask = _rand_inputs(seed, feas)
+    w = np.sqrt(np.where(mask, np.maximum(psi, 0.0), 0.0)
+                * np.where(mask, np.maximum(omega, 0.0), 0.0))
+    ref, _, _ = active_set_np(w, np.where(mask, floors, 0.0), float(cap),
+                              mask)
+    # the compact path only ever sees the busy (masked-in) instances
+    idx = np.nonzero(mask)[0]
+    small = _active_set_small([float(w[i]) for i in idx],
+                              [float(floors[i]) for i in idx], float(cap))
+    # tolerance scales with capacity: the infeasible-floor rescale leaves
+    # O(cap * 1e-16) residual dust (capacity minus the rounded floor sum)
+    # that the two implementations hand to different entries; a genuinely
+    # flipped pin differs by ~the whole allocation and still fails
+    np.testing.assert_allclose(np.array(small), ref[idx],
+                               rtol=1e-9, atol=float(cap) * 1e-12)
