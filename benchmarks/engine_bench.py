@@ -1,10 +1,16 @@
-"""Event-core benchmark: scalar reference vs vectorized numpy engine.
+"""Event-engine benchmark: solo cores + the batched multi-seed engine.
 
-Runs the ``dense-urban`` family at S >= 100 instances (the regime the
-vectorized core exists for) with both engines on identical workloads,
-checks they produce identical results, and records events/sec + wall
-clock to ``BENCH_pr2.json`` at the repo root so the perf trajectory is
-tracked from this PR on.
+Three sections, all on the ``dense-urban`` family (the S >= 100 regime the
+vectorized cores exist for), recorded to ``BENCH_pr3.json``:
+
+  * solo — scalar reference vs vectorized numpy engine on identical
+    workloads (the PR-2 comparison, kept so the trajectory is tracked),
+  * batched — ``Simulator.run_batch`` at B ∈ {1, 8, 32} seeds per block:
+    aggregate events/sec vs the B=1 solo numpy engine, with the batched
+    results fingerprint-checked against per-seed solo runs,
+  * sweep — a small fleet sweep executed batched (one process,
+    ``batch_seeds`` seeds per simulation) vs process-parallel workers:
+    end-to-end wall time including worker startup and scenario builds.
 
   PYTHONPATH=src python -m benchmarks.engine_bench            # full grid
   PYTHONPATH=src python -m benchmarks.engine_bench --smoke    # CI-sized
@@ -12,16 +18,24 @@ tracked from this PR on.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
+import os
 import time
 from typing import Dict, List
 
 from benchmarks import common
+from repro.eval import SweepSpec, run_sweep
 from repro.sim import Simulator, make_scenario, workload_for
 from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
 
-BENCH_PATH = common.ROOT / "BENCH_pr2.json"
+BENCH_PATH = common.ROOT / "BENCH_pr3.json"
+
+# (n_nodes, n_ai_requests): S = 3 * n_nodes for dense-urban
+SOLO_SMOKE_GRID = ((36, 1500),)
+SOLO_FULL_GRID = ((36, 4000), (240, 4000))
+BATCH_SIZES = (1, 8, 32)
 
 
 def _canon_summary(s: Dict) -> Dict:
@@ -30,12 +44,17 @@ def _canon_summary(s: Dict) -> Dict:
     return {k: None if isinstance(v, float) and math.isnan(v) else v
             for k, v in s.items()}
 
-# (n_nodes, n_ai_requests): S = 3 * n_nodes for dense-urban
-SMOKE_GRID = ((36, 1500), (480, 2500))
-FULL_GRID = ((36, 4000), (120, 4000), (240, 4000), (480, 4000))
+
+def _fingerprint(res) -> tuple:
+    return (_canon_summary(res.summary()), res.n_events,
+            sorted(res.dropped),
+            tuple((r.rid, r.finish) for r in res.requests))
 
 
-def bench_point(n_nodes: int, n_requests: int, repeats: int = 2) -> Dict:
+# --------------------------------------------------------------------------- #
+# solo: scalar reference vs numpy engine (PR-2 comparison)
+# --------------------------------------------------------------------------- #
+def bench_solo_point(n_nodes: int, n_requests: int, repeats: int = 2) -> Dict:
     sc = make_scenario("dense-urban", seed=0, n_nodes=n_nodes)
     reqs, _ = workload_for(sc, seed=1, n_ai_requests=n_requests)
     point: Dict = {"family": "dense-urban", "n_nodes": n_nodes,
@@ -50,8 +69,7 @@ def bench_point(n_nodes: int, n_requests: int, repeats: int = 2) -> Dict:
             res = sim.run(reqs, StaticPlacement(), DeadlineAwareAllocation())
             wall = min(wall, time.time() - t0)
         common.check_not_truncated([res.summary()], f"engine_bench:{engine}")
-        results[engine] = (_canon_summary(res.summary()), res.n_events,
-                           sorted(res.dropped))
+        results[engine] = _fingerprint(res)
         point[engine] = {"wall_s": round(wall, 3),
                          "events": res.n_events,
                          "events_per_sec": round(res.n_events / wall, 1)}
@@ -63,30 +81,139 @@ def bench_point(n_nodes: int, n_requests: int, repeats: int = 2) -> Dict:
     return point
 
 
+# --------------------------------------------------------------------------- #
+# batched: [B, S] lockstep blocks vs the B=1 solo numpy engine
+# --------------------------------------------------------------------------- #
+def bench_batched(n_nodes: int, n_requests: int,
+                  sizes=BATCH_SIZES, verify_b: int = 8) -> Dict:
+    sc = make_scenario("dense-urban", seed=0, n_nodes=n_nodes)
+    max_b = max(sizes)
+    workloads = [workload_for(sc, seed=1 + s, n_ai_requests=n_requests)[0]
+                 for s in range(max_b)]
+    sim = Simulator(sc)
+
+    # B=1 solo baseline (the engine a classic per-job sweep runs)
+    wall = float("inf")
+    for _ in range(2):
+        t0 = time.time()
+        solo_res = sim.run(workloads[0], StaticPlacement(),
+                           DeadlineAwareAllocation())
+        wall = min(wall, time.time() - t0)
+    common.check_not_truncated([solo_res.summary()], "engine_bench:solo")
+    solo_evps = solo_res.n_events / wall
+
+    out: Dict = {"family": "dense-urban", "n_nodes": n_nodes,
+                 "n_instances": len(sc["instances"]),
+                 "n_requests_per_seed": n_requests,
+                 "solo_numpy_evps": round(solo_evps, 1),
+                 "points": []}
+    for B in sizes:
+        methods = [(StaticPlacement(), DeadlineAwareAllocation())
+                   for _ in range(B)]
+        t0 = time.time()
+        results = sim.run_batch(workloads[:B],
+                                [m[0] for m in methods],
+                                [m[1] for m in methods])
+        bwall = time.time() - t0
+        common.check_not_truncated([r.summary() for r in results],
+                                   f"engine_bench:batch B={B}")
+        events = sum(r.n_events for r in results)
+        evps = events / bwall
+        out["points"].append({"B": B, "events": events,
+                              "wall_s": round(bwall, 3),
+                              "events_per_sec": round(evps, 1),
+                              "speedup_vs_solo": round(evps / solo_evps, 2)})
+        if B == 1 and _fingerprint(results[0]) != _fingerprint(solo_res):
+            raise RuntimeError("engine_bench: batched B=1 diverged from the "
+                               "solo numpy engine — equivalence broken")
+        if B == verify_b:
+            for s in range(B):
+                ref = sim.run(workloads[s], StaticPlacement(),
+                              DeadlineAwareAllocation())
+                if _fingerprint(results[s]) != _fingerprint(ref):
+                    raise RuntimeError(
+                        f"engine_bench: batched seed {1 + s} diverged from "
+                        "its per-seed solo run — equivalence broken")
+    out["batch_speedup_max_b"] = out["points"][-1]["speedup_vs_solo"]
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# sweep: batched single process vs process-parallel workers, end to end
+# --------------------------------------------------------------------------- #
+def bench_sweep(n_requests: int, n_seeds: int = 8) -> Dict:
+    spec = SweepSpec(methods=("haf-static",), scenarios=("dense-urban",),
+                     seeds=tuple(range(n_seeds)), n_ai_requests=n_requests,
+                     workers=max(1, min(4, os.cpu_count() or 1)))
+    t0 = time.time()
+    rows_p = [r for r in run_sweep(spec) if r is not None]
+    process_wall = time.time() - t0
+    common.check_not_truncated(rows_p, "engine_bench:sweep-process")
+
+    t0 = time.time()
+    rows_b = [r for r in run_sweep(dataclasses.replace(
+        spec, workers=1, batch_seeds=n_seeds)) if r is not None]
+    batched_wall = time.time() - t0
+    common.check_not_truncated(rows_b, "engine_bench:sweep-batched")
+
+    if len(rows_p) != n_seeds or len(rows_b) != n_seeds:
+        raise RuntimeError(
+            f"engine_bench: sweep jobs failed (process {len(rows_p)}/"
+            f"{n_seeds}, batched {len(rows_b)}/{n_seeds}) — wall times "
+            "would compare unequal work")
+    key = lambda r: (r["method"], r["scenario"], r["seed"])  # noqa: E731
+    for p, b in zip(sorted(rows_p, key=key), sorted(rows_b, key=key)):
+        if key(p) != key(b) or p["overall"] != b["overall"] \
+                or p["n_events"] != b["n_events"]:
+            raise RuntimeError("engine_bench: batched sweep rows diverged "
+                               "from process-parallel rows")
+    return {"n_jobs": n_seeds, "n_requests": n_requests,
+            "process_workers": spec.workers,
+            "process_wall_s": round(process_wall, 2),
+            "batched_wall_s": round(batched_wall, 2),
+            "speedup": round(process_wall / batched_wall, 2)}
+
+
 def main(smoke: bool = False) -> Dict:
-    grid = SMOKE_GRID if smoke else FULL_GRID
-    points: List[Dict] = []
-    for n_nodes, n_requests in grid:
-        p = bench_point(n_nodes, n_requests)
-        points.append(p)
+    solo_grid = SOLO_SMOKE_GRID if smoke else SOLO_FULL_GRID
+    solo_points: List[Dict] = []
+    for n_nodes, n_requests in solo_grid:
+        p = bench_solo_point(n_nodes, n_requests)
+        solo_points.append(p)
         print(f"engine,dense-urban,S={p['n_instances']},"
               f"scalar_evps={p['scalar']['events_per_sec']},"
               f"numpy_evps={p['numpy']['events_per_sec']},"
               f"speedup={p['speedup']}x", flush=True)
+
+    batched = bench_batched(36, 1200 if smoke else 4000)
+    for p in batched["points"]:
+        print(f"engine-batch,dense-urban,B={p['B']},"
+              f"evps={p['events_per_sec']},"
+              f"speedup_vs_solo={p['speedup_vs_solo']}x", flush=True)
+
+    sweep = bench_sweep(400 if smoke else 1500)
+    print(f"engine-sweep,dense-urban,jobs={sweep['n_jobs']},"
+          f"process_wall={sweep['process_wall_s']}s,"
+          f"batched_wall={sweep['batched_wall_s']}s,"
+          f"speedup={sweep['speedup']}x", flush=True)
+
     record = {
         "kind": "repro.bench.engine",
-        "pr": 2,
+        "pr": 3,
         "smoke": smoke,
         "default_engine": "numpy",
-        "points": points,
-        "max_speedup": max(p["speedup"] for p in points),
+        "solo_points": solo_points,
+        "batched": batched,
+        "sweep": sweep,
     }
     BENCH_PATH.write_text(json.dumps(record, indent=2, sort_keys=True))
     print(f"# record -> {BENCH_PATH}", flush=True)
-    at_scale = [p for p in points if p["n_instances"] >= 100]
-    best = max(p["speedup"] for p in at_scale)
-    if best < 5.0:
-        print(f"# WARNING: best speedup at S>=100 is {best}x (< 5x target)",
+    if batched["batch_speedup_max_b"] < 3.0:
+        print(f"# WARNING: batched B={BATCH_SIZES[-1]} aggregate speedup is "
+              f"{batched['batch_speedup_max_b']}x (< 3x target)", flush=True)
+    if sweep["speedup"] < 1.0:
+        print("# WARNING: batched sweep slower than process-parallel "
+              f"({sweep['batched_wall_s']}s vs {sweep['process_wall_s']}s)",
               flush=True)
     return record
 
@@ -94,6 +221,6 @@ def main(smoke: bool = False) -> Dict:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="two grid points, reduced request counts (CI)")
+                    help="reduced request counts (CI)")
     args = ap.parse_args()
     main(smoke=args.smoke)

@@ -19,7 +19,7 @@ def main() -> None:
                              "alloc", "fleet", "engine"))
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode (tiny request counts, 1 seed; the "
-                         "engine bench still records BENCH_pr2.json)")
+                         "engine bench still records BENCH_pr3.json)")
     args = ap.parse_args()
     t0 = time.time()
 

@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core.allocator_np import active_set_np
 from repro.core.placement import candidate_actions
-from repro.sim.cluster import ClusterState
+from repro.sim.cluster import (ClusterState, _active_set_rows,
+                               _pow2_at_least)
 from repro.sim.snapshot import EpochSnapshot
 from repro.sim.types import InstanceCategory, MigrationAction
 
@@ -31,40 +32,65 @@ from repro.sim.types import InstanceCategory, MigrationAction
 # allocation policies
 # --------------------------------------------------------------------------- #
 class _FloorsAllocationBase:
-    """Shared scaffolding: pull Eq. 13–15 inputs, apply per-node weights."""
+    """Shared scaffolding: compact per-node Eq. 13–15 inputs + weights.
 
-    def _weights_g(self, cluster, n, psi_g, psi_c, omega):  # pragma: no cover
+    Like the deadline-aware hot path, the baselines solve over the busy
+    instances of each dirty node only (``node_alloc_inputs``) instead of
+    materializing full ``[N, S]`` allocator inputs per event — idle and
+    unavailable instances get zero by construction, which is exactly what
+    the masked full-width solve produced.  The weight hooks receive the
+    compact per-busy-instance vectors aligned with ``sids``.
+    """
+
+    def _weights_g(self, cluster, n, sids, psi_g, psi_c,
+                   omega):  # pragma: no cover
         raise NotImplementedError
 
-    def _weights_c(self, cluster, n, psi_g, psi_c, omega):  # pragma: no cover
+    def _weights_c(self, cluster, n, sids, psi_g, psi_c,
+                   omega):  # pragma: no cover
         raise NotImplementedError
 
     def allocate(self, cluster: ClusterState, t: float, nodes=None) -> None:
-        psi_g, psi_c, omega, fg, fc, mask = cluster.allocator_inputs(t, nodes)
-        N, S = psi_g.shape
-        g_ns = np.zeros((N, S))
-        c_ns = np.zeros((N, S))
-        rows = range(N) if nodes is None else nodes
-        for n in rows:
-            wg = self._weights_g(cluster, n, psi_g[n], psi_c[n], omega[n])
-            wc = self._weights_c(cluster, n, psi_g[n], psi_c[n], omega[n])
-            g_ns[n], _, _ = active_set_np(wg, fg[n],
-                                          float(cluster.gpu_capacity[n]),
-                                          mask[n])
-            c_ns[n], _, _ = active_set_np(wc, fc[n],
-                                          float(cluster.cpu_capacity[n]),
-                                          mask[n])
-        cluster.apply_allocation(g_ns, c_ns, nodes)
+        if nodes is None:
+            cluster.alloc_g.fill(0.0)
+            cluster.alloc_c.fill(0.0)
+        else:
+            zero = [s for n in nodes for s in cluster._node_sids[n]]
+            if zero:
+                zi = np.asarray(zero, np.int64)
+                cluster.alloc_g[zi] = 0.0
+                cluster.alloc_c[zi] = 0.0
+        for n in (range(cluster.N) if nodes is None else nodes):
+            sids, psi_g, psi_c, omega, fg, fc = \
+                cluster.node_alloc_inputs(n, t)
+            if not sids:
+                continue
+            wg = self._weights_g(cluster, n, sids, psi_g, psi_c, omega)
+            wc = self._weights_c(cluster, n, sids, psi_g, psi_c, omega)
+            k = len(sids)
+            K = _pow2_at_least(k)
+            w = np.zeros((2, K))
+            fl = np.zeros((2, K))
+            w[0, :k] = wg
+            w[1, :k] = wc
+            fl[0, :k] = fg
+            fl[1, :k] = fc
+            alloc = _active_set_rows(
+                w, fl, np.array([float(cluster.gpu_capacity[n]),
+                                 float(cluster.cpu_capacity[n])]))
+            idx = np.asarray(sids, np.int64)
+            cluster.alloc_g[idx] = alloc[0, :k]
+            cluster.alloc_c[idx] = alloc[1, :k]
 
 
 class EqualShareAllocation(_FloorsAllocationBase):
     """Residual capacity split equally among instances with queued work."""
     name = "equal-share"
 
-    def _weights_g(self, cluster, n, psi_g, psi_c, omega):
+    def _weights_g(self, cluster, n, sids, psi_g, psi_c, omega):
         return (psi_g > 0).astype(float)
 
-    def _weights_c(self, cluster, n, psi_g, psi_c, omega):
+    def _weights_c(self, cluster, n, sids, psi_g, psi_c, omega):
         return (psi_c > 0).astype(float)
 
 
@@ -73,27 +99,33 @@ class MaxWeightAllocation(_FloorsAllocationBase):
     name = "maxweight"
 
     @staticmethod
-    def _winner(w):
-        out = np.zeros_like(w)
-        if np.any(w > 0):
-            out[int(np.argmax(w))] = 1.0
+    def _winner(sids, vals):
+        """One-hot at the max bid; ties break to the smallest sid, the
+        tie-break the full-width argmax had."""
+        out = np.zeros(len(vals))
+        best_i, best_v = -1, 0.0
+        for i in sorted(range(len(sids)), key=sids.__getitem__):
+            if vals[i] > best_v:
+                best_i, best_v = i, float(vals[i])
+        if best_i >= 0:
+            out[best_i] = 1.0
         return out
 
-    def _weights_g(self, cluster, n, psi_g, psi_c, omega):
-        return self._winner(omega * psi_g)
+    def _weights_g(self, cluster, n, sids, psi_g, psi_c, omega):
+        return self._winner(sids, omega * psi_g)
 
-    def _weights_c(self, cluster, n, psi_g, psi_c, omega):
-        return self._winner(omega * psi_c)
+    def _weights_c(self, cluster, n, sids, psi_g, psi_c, omega):
+        return self._winner(sids, omega * psi_c)
 
 
 class MarketAllocation(_FloorsAllocationBase):
     """Proportional market clearing: share ∝ bid = ω·Ψ (not the √ rule)."""
     name = "market"
 
-    def _weights_g(self, cluster, n, psi_g, psi_c, omega):
+    def _weights_g(self, cluster, n, sids, psi_g, psi_c, omega):
         return omega * psi_g
 
-    def _weights_c(self, cluster, n, psi_g, psi_c, omega):
+    def _weights_c(self, cluster, n, sids, psi_g, psi_c, omega):
         return omega * psi_c
 
 

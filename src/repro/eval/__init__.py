@@ -16,11 +16,13 @@ from repro.eval.policies import (haf_spec, make_method, method_names,
                                  normalize_method, register_method)
 from repro.eval.report import (aggregate, build_report, format_table,
                                write_report)
-from repro.eval.sweep import (SweepSpec, expand_jobs, normalize_scenario,
-                              run_job, run_sweep)
+from repro.eval.sweep import (SweepSpec, attach_scenarios, expand_jobs,
+                              normalize_scenario, run_batch_jobs, run_job,
+                              run_sweep, scenario_for_job)
 
 __all__ = [
-    "SweepSpec", "expand_jobs", "normalize_scenario", "run_job", "run_sweep",
+    "SweepSpec", "attach_scenarios", "expand_jobs", "normalize_scenario",
+    "run_batch_jobs", "run_job", "run_sweep", "scenario_for_job",
     "haf_spec", "make_method", "method_names", "normalize_method",
     "register_method",
     "aggregate", "build_report", "format_table", "write_report",

@@ -63,9 +63,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="override the load point for every scenario")
     ap.add_argument("--workers", type=int,
                     default=max(min(4, (os.cpu_count() or 1)), 1))
+    ap.add_argument("--batch", type=int, default=1, metavar="B",
+                    help="fan up to B seeds of each (scenario, method) cell "
+                         "into one batched [B, S] simulation (one process, "
+                         "one scenario build) instead of B separate runs")
     ap.add_argument("--engine", default="numpy",
-                    choices=("numpy", "scalar", "jax"),
-                    help="event core backend (scalar = debug reference)")
+                    choices=("numpy", "scalar", "jax", "pallas"),
+                    help="event core backend (scalar = debug reference; "
+                         "pallas = batched kernel, needs --batch > 1)")
     ap.add_argument("--epoch-interval", type=float, default=5.0)
     ap.add_argument("--max-events", type=int, default=5_000_000,
                     help="per-run event budget; hitting it marks the run "
@@ -96,6 +101,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not seeds:
         ap.error("--seeds needs a count >= 1 (e.g. 3 -> seeds 0,1,2) "
                  "or an explicit list (e.g. 0,2,5)")
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
+    if args.engine == "pallas" and args.batch <= 1:
+        ap.error("--engine pallas is the batched kernel backend; "
+                 "pass --batch > 1 to use it")
     requests = args.requests
     if args.smoke:
         seeds = seeds[:1] or [0]
@@ -112,11 +122,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         max_events=args.max_events,
         workers=args.workers,
         engine=args.engine,
+        batch_seeds=args.batch,
     )
     n_jobs = len(spec.methods) * len(spec.scenarios) * len(spec.seeds)
+    batched = f", batch={spec.batch_seeds}" if spec.batch_seeds > 1 else ""
     print(f"# sweep: {len(spec.methods)} methods x {len(spec.scenarios)} "
           f"scenarios x {len(spec.seeds)} seeds = {n_jobs} runs "
-          f"({spec.workers} workers)", flush=True)
+          f"({spec.workers} workers{batched})", flush=True)
     t0 = time.time()
     rows = run_sweep(spec, verbose=True)
     report = build_report(spec, rows)

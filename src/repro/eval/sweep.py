@@ -7,6 +7,19 @@ the ``spawn`` start method (fork is unsafe once jax has initialized) —
 spawn re-imports ``__main__``, so call a ``workers > 1`` sweep from a real
 module or script (guarded by ``if __name__ == "__main__"``), not from a
 REPL/stdin; use ``workers=1`` there.
+
+Two executions paths:
+
+  * classic — one simulator run per job.  The normalized scenario dict is
+    built **once** per (scenario, params, overrides) group in the parent
+    and attached to the jobs, so workers skip the ``make_scenario``
+    rebuild every job used to pay.
+  * batched (``batch_seeds > 1``) — jobs are grouped by (scenario,
+    method) cell and up to ``batch_seeds`` seeds fan into ONE
+    ``Simulator.run_batch`` call: one process, one scenario build, one
+    ``[B, S]`` lockstep simulation instead of B process spawns + B
+    scenario rebuilds.  Rows are identical to the classic path
+    (the batched engine is discrete-outcome identical per seed).
 """
 from __future__ import annotations
 
@@ -35,7 +48,8 @@ class SweepSpec:
     max_events: int = 5_000_000
     workers: int = 1
     scenario_seed: int = 0                  # topology seed (workload varies)
-    engine: str = "numpy"                   # event core: numpy | scalar | jax
+    engine: str = "numpy"                   # numpy | scalar | jax | pallas
+    batch_seeds: int = 1                    # >1: fan seeds into run_batch
 
 
 def normalize_scenario(spec: ScenarioSpec) -> Dict:
@@ -70,17 +84,16 @@ def expand_jobs(spec: SweepSpec) -> List[Dict]:
     return jobs
 
 
-def run_job(job: Dict) -> Dict:
-    """One simulator run; returns a flat, JSON-ready result row."""
-    from repro.sim import Simulator
-    from repro.sim.scenarios import make_scenario, workload_for
+def scenario_for_job(job: Dict) -> Dict:
+    """Realize the job's scenario (family + params + global overrides)."""
+    from repro.sim.scenarios import make_scenario
+    from repro.sim.scenarios.registry import REGISTRY
 
     params = dict(job["scenario_params"])
     # global overrides reach the family itself when it takes them (so
     # families that derive structure from the trace length — e.g. outage
     # windows — stay consistent with the realized workload); families
     # without the knob still get the workload-level override below
-    from repro.sim.scenarios.registry import REGISTRY
     sig = inspect.signature(REGISTRY[job["family"]]) \
         if job["family"] in REGISTRY else None
     for key in ("n_ai_requests", "rho"):
@@ -89,18 +102,90 @@ def run_job(job: Dict) -> Dict:
                 or any(p.kind is p.VAR_KEYWORD
                        for p in sig.parameters.values())):
             params[key] = job[key]
-    sc = make_scenario(job["family"], seed=job["scenario_seed"], **params)
+    return make_scenario(job["family"], seed=job["scenario_seed"], **params)
 
+
+def _scenario_key(job: Dict) -> tuple:
+    return (job["family"], repr(sorted(job["scenario_params"].items())),
+            job["scenario_seed"], job.get("n_ai_requests"), job.get("rho"))
+
+
+def attach_scenarios(jobs: List[Dict]) -> None:
+    """Build each distinct scenario ONCE and attach it to its jobs.
+
+    Workers then deserialize the ready-made dict instead of re-running
+    ``make_scenario`` per job (topology builds dominate worker startup on
+    large families).  The scenario dict is read-only to the engine, so
+    sharing one object across same-cell jobs in-process is safe.
+    """
+    cache: Dict[tuple, Dict] = {}
+    for job in jobs:
+        key = _scenario_key(job)
+        if key not in cache:
+            cache[key] = scenario_for_job(job)
+        job["scenario"] = cache[key]
+
+
+def run_job(job: Dict) -> Dict:
+    """One simulator run; returns a flat, JSON-ready result row."""
+    from repro.sim import Simulator
+    from repro.sim.scenarios import workload_for
+
+    engine = job.get("engine", "numpy")
+    if engine == "pallas":
+        raise ValueError("engine='pallas' is batch-only; "
+                         "set batch_seeds > 1 (CLI: --batch)")
+    sc = job.get("scenario") or scenario_for_job(job)
     requests, info = workload_for(sc, seed=job["seed"],
                                   n_ai_requests=job.get("n_ai_requests"),
                                   rho=job.get("rho"))
     placement, allocation, rr = make_method(job["method"],
                                             **job["method_params"])
     sim = Simulator(sc, epoch_interval=job["epoch_interval"],
-                    engine=job.get("engine", "numpy"))
+                    engine=engine)
     t0 = time.time()
     res = sim.run(requests, placement, allocation, rr_dispatch=rr,
                   max_events=job["max_events"])
+    return _result_row(job, res, requests, info, time.time() - t0)
+
+
+def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
+    """One batched simulator run over same-cell jobs differing in seed.
+
+    Builds the scenario once, realizes every seed's workload, and fans
+    them into ``Simulator.run_batch`` — per-row results are identical to
+    ``run_job`` per job; ``wall_s`` is the batch wall time divided evenly.
+    """
+    from repro.sim import Simulator
+    from repro.sim.scenarios import workload_for
+
+    base = jobs[0]
+    sc = base.get("scenario") or scenario_for_job(base)
+    workloads, infos = [], []
+    for job in jobs:
+        reqs, info = workload_for(sc, seed=job["seed"],
+                                  n_ai_requests=job.get("n_ai_requests"),
+                                  rho=job.get("rho"))
+        workloads.append(reqs)
+        infos.append(info)
+    methods = [make_method(job["method"], **job["method_params"])
+               for job in jobs]
+    rr = methods[0][2]
+    sim = Simulator(sc, epoch_interval=base["epoch_interval"],
+                    engine=base.get("engine", "numpy"))
+    t0 = time.time()
+    results = sim.run_batch(workloads,
+                            [m[0] for m in methods],
+                            [m[1] for m in methods],
+                            rr_dispatch=rr,
+                            max_events=base["max_events"])
+    wall = time.time() - t0
+    return [dict(_result_row(job, res, reqs, info, wall / len(jobs)),
+                 batch=len(jobs))
+            for job, res, reqs, info in zip(jobs, results, workloads, infos)]
+
+
+def _result_row(job: Dict, res, requests, info: Dict, wall: float) -> Dict:
     row = dict(res.summary())
     row.update({
         "method": job["method_label"],
@@ -113,9 +198,25 @@ def run_job(job: Dict) -> Dict:
         "engine": job.get("engine", "numpy"),
         "infeasible_events": res.infeasible_events,
         "horizon_s": info.get("horizon", 0.0),
-        "wall_s": time.time() - t0,
+        "wall_s": wall,
     })
     return row
+
+
+def _batch_groups(jobs: List[Dict], batch_seeds: int) -> List[List[int]]:
+    """Group job indices by everything-but-seed, chunked to batch size."""
+    cells: Dict[tuple, List[int]] = {}
+    for i, job in enumerate(jobs):
+        key = (_scenario_key(job), job["scenario_label"], job["method"],
+               job["method_label"], repr(sorted(job["method_params"].items(),
+                                               key=lambda kv: kv[0])),
+               job["epoch_interval"], job["max_events"], job["engine"])
+        cells.setdefault(key, []).append(i)
+    groups = []
+    for idxs in cells.values():
+        for lo in range(0, len(idxs), batch_seeds):
+            groups.append(idxs[lo:lo + batch_seeds])
+    return groups
 
 
 def run_sweep(spec: SweepSpec, verbose: bool = False
@@ -124,19 +225,22 @@ def run_sweep(spec: SweepSpec, verbose: bool = False
 
     A failing job does not abort the sweep: its slot is ``None`` (reported
     loudly) and the surviving rows still aggregate.  Raises only when every
-    job failed.
+    job failed.  With ``batch_seeds > 1`` jobs sharing a (scenario, method)
+    cell run as one batched simulation per chunk of seeds.
     """
     jobs = expand_jobs(spec)
+    attach_scenarios(jobs)
     rows: List[Optional[Dict]] = [None] * len(jobs)
 
     def note(i: int, done: int) -> None:
         if verbose and rows[i] is not None:
             r = rows[i]
             trunc = " TRUNCATED" if r.get("truncated") else ""
+            batch = f" b={r['batch']}" if r.get("batch") else ""
             print(f"# [{done}/{len(jobs)}] {r['method']}"
                   f" @ {r['scenario']} seed={r['seed']}"
                   f" overall={r['overall']:.4f}"
-                  f" wall={r['wall_s']:.1f}s{trunc}", flush=True)
+                  f" wall={r['wall_s']:.1f}s{batch}{trunc}", flush=True)
 
     def failed(i: int, err: Exception) -> None:
         job = jobs[i]
@@ -144,7 +248,55 @@ def run_sweep(spec: SweepSpec, verbose: bool = False
               f" @ {job['scenario_label']} seed={job['seed']}:"
               f" {type(err).__name__}: {err}", flush=True)
 
-    if spec.workers <= 1 or len(jobs) <= 1:
+    def batch_group_fallback(idxs: List[int], err: Exception) -> None:
+        """A failed group retries job-by-job (single-replica batches), so
+        one pathological seed costs one row — the same failing-job
+        isolation the classic path gives — not the whole cell.  The
+        group-level error is reported first: a B>1-only failure must not
+        hide behind a successful fallback."""
+        job = jobs[idxs[0]]
+        print(f"# BATCH GROUP FAILED ({len(idxs)} jobs, "
+              f"{job['method_label']} @ {job['scenario_label']}): "
+              f"{type(err).__name__}: {err} — retrying per job", flush=True)
+        for i in idxs:
+            try:
+                rows[i] = run_batch_jobs([jobs[i]])[0]
+            except Exception as err:        # noqa: BLE001
+                failed(i, err)
+
+    if spec.batch_seeds > 1:
+        groups = _batch_groups(jobs, spec.batch_seeds)
+        done = 0
+        if spec.workers <= 1 or len(groups) <= 1:
+            for idxs in groups:
+                try:
+                    for i, row in zip(idxs,
+                                      run_batch_jobs([jobs[i]
+                                                      for i in idxs])):
+                        rows[i] = row
+                except Exception as err:    # noqa: BLE001
+                    batch_group_fallback(idxs, err)
+                done += len(idxs)
+                for i in idxs:
+                    note(i, done)
+        else:
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=spec.workers,
+                                     mp_context=ctx) as pool:
+                futures = {pool.submit(run_batch_jobs,
+                                       [jobs[i] for i in idxs]): idxs
+                           for idxs in groups}
+                for fut in as_completed(futures):
+                    idxs = futures[fut]
+                    try:
+                        for i, row in zip(idxs, fut.result()):
+                            rows[i] = row
+                    except Exception as err:    # noqa: BLE001
+                        batch_group_fallback(idxs, err)
+                    done += len(idxs)
+                    for i in idxs:
+                        note(i, done)
+    elif spec.workers <= 1 or len(jobs) <= 1:
         for i, job in enumerate(jobs):
             try:
                 rows[i] = run_job(job)

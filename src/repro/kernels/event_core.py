@@ -10,10 +10,12 @@ numpy; this backend is held to identical discrete outcomes).  Callers must run i
 deliberately NOT flipped globally so the rest of the process keeps jax's
 default dtypes.  On CPU the per-event dispatch makes
 this slower than numpy; the backend exists as the accelerator-resident
-growth path — batching the step across seeds/replicas turns the [S]
-vectors into [B, S] blocks, at which point the same expressions become a
-Pallas TPU kernel alongside :mod:`repro.kernels.alloc_active_set` (lane
-reductions over the padded instance dimension).
+growth path.  :func:`event_step_jax` is the batched form: the [S]
+vectors become [B, S] blocks (B seeds of one scenario×method cell in
+lockstep, one fused device call per tick), and the same expressions are
+a Pallas TPU kernel in :mod:`repro.kernels.event_step` alongside
+:mod:`repro.kernels.alloc_active_set` (lane reductions over the padded
+instance dimension).
 
 Like every module in this package, importing it requires jax; the
 simulator only imports it when ``engine="jax"`` is selected.
@@ -67,3 +69,42 @@ def advance_jax(rem_g: jax.Array, rem_c: jax.Array,
     tc = jnp.where(cpu_ok, jnp.minimum(rem_dt, rem_c / alloc_c), 0.0)
     dc = jnp.where(cpu_ok, alloc_c * tc, 0.0)
     return rg_new, rem_c - dc, run_g | cpu_ok
+
+
+@jax.jit
+def event_step_jax(rem_g: jax.Array, rem_c: jax.Array,
+                   alloc_g: jax.Array, alloc_c: jax.Array,
+                   avail: jax.Array, t: jax.Array, t_ev: jax.Array,
+                   live: jax.Array):
+    """Fused batched step over ``[B, S]`` blocks: per-row completion scan
+    + advance-to-next-event, with per-replica clocks ``t[b]`` and heap
+    heads ``t_ev[b]``.  Rows with ``live[b]`` down (drained replicas or
+    replicas at their event budget) advance by ``dt = 0``.
+
+    Returns ``(rem_g', rem_c', started, t_comp [B], sid [B])`` — the
+    single device round-trip per lockstep tick of ``Simulator.run_batch``.
+    This is the jnp form of the Pallas kernel in
+    :mod:`repro.kernels.event_step`; both evaluate the expressions of the
+    numpy batched core elementwise.
+    """
+    t_col = t[:, None]
+    dt_g = jnp.where(rem_g > 0.0, rem_g / alloc_g, 0.0)
+    dt_c = jnp.where(rem_c > 0.0, rem_c / alloc_c, 0.0)
+    cand = jnp.where(avail, t_col + (dt_g + dt_c), INF)
+    sid = jnp.argmin(cand, axis=1)
+    t_comp = jnp.take_along_axis(cand, sid[:, None], axis=1)[:, 0]
+
+    t_next = jnp.minimum(t_comp, t_ev)
+    dt = jnp.where(live & jnp.isfinite(t_next), t_next - t, 0.0)[:, None]
+    gpu_need = rem_g > 0.0
+    run_g = avail & gpu_need & (alloc_g > 0.0) & (dt > 0.0)
+    stalled = avail & gpu_need & (alloc_g <= 0.0)
+    tg = jnp.where(run_g, jnp.minimum(dt, rem_g / alloc_g), 0.0)
+    dg = jnp.where(run_g, alloc_g * tg, 0.0)
+    rg_new = rem_g - dg
+    rem_dt = jnp.where(run_g, dt - tg, dt)
+    cpu_ok = (avail & ~stalled & (rg_new <= 0.0) & (rem_dt > 0.0)
+              & (rem_c > 0.0) & (alloc_c > 0.0))
+    tc = jnp.where(cpu_ok, jnp.minimum(rem_dt, rem_c / alloc_c), 0.0)
+    dc = jnp.where(cpu_ok, alloc_c * tc, 0.0)
+    return rg_new, rem_c - dc, run_g | cpu_ok, t_comp, sid

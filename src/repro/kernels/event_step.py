@@ -1,0 +1,131 @@
+"""The batched event-engine step as a Pallas TPU kernel.
+
+One grid row per replica: the kernel fuses the per-row completion scan
+(masked min + first-index argmin over the padded instance lanes) with the
+advance-to-next-event update (Eq. 1 stage ordering), so one kernel launch
+moves the whole ``[B, S]`` block of a ``Simulator.run_batch`` tick.  The
+replica clocks ``t[b]`` and heap heads ``t_ev[b]`` ride along as scalar
+blocks, making the kernel self-contained: the host only drains the
+per-replica discrete events between launches.
+
+On TPU the instance dimension is padded to a lane multiple (128) with
+unavailable lanes (``avail = 0`` -> candidate ``+inf``), and all
+reductions are lane reductions, mirroring
+:mod:`repro.kernels.alloc_active_set`.  Off-TPU the kernel runs in
+interpret mode (the CPU fallback used by the equivalence tests), where it
+keeps float64 and is held to the same discrete-outcome bar as the jnp
+backend in :mod:`repro.kernels.event_core`.
+
+Like every module in this package, importing it requires jax.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import CompilerParams
+
+LANES = 128
+
+
+def _event_step_kernel(rem_g_ref, rem_c_ref, ag_ref, ac_ref, avail_ref,
+                       t_ref, tev_ref, live_ref,
+                       rg_out, rc_out, started_out, tcomp_out, sid_out):
+    rg = rem_g_ref[...]                               # [1, S]
+    rc = rem_c_ref[...]
+    ag = ag_ref[...]
+    ac = ac_ref[...]
+    avail = avail_ref[...] > 0
+    t = t_ref[0, 0]
+    t_ev = tev_ref[0, 0]
+    live = live_ref[0, 0] > 0
+
+    # completion scan: a pending stage with zero rate divides to +inf and
+    # can never win the min — such heads wait for a reallocation event
+    dt_g = jnp.where(rg > 0.0, rg / ag, 0.0)
+    dt_c = jnp.where(rc > 0.0, rc / ac, 0.0)
+    cand = jnp.where(avail, t + (dt_g + dt_c), jnp.inf)
+    t_comp = jnp.min(cand)
+    lane = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+    sid = jnp.min(jnp.where(cand == t_comp, lane, cand.shape[-1]))
+
+    # advance to the earlier of (completion, heap head); dead rows freeze
+    t_next = jnp.minimum(t_comp, t_ev)
+    dt = jnp.where(live & jnp.isfinite(t_next), t_next - t, 0.0)
+
+    gpu_need = rg > 0.0
+    run_g = avail & gpu_need & (ag > 0.0) & (dt > 0.0)
+    stalled = avail & gpu_need & (ag <= 0.0)
+    tg = jnp.where(run_g, jnp.minimum(dt, rg / ag), 0.0)
+    rg_new = rg - jnp.where(run_g, ag * tg, 0.0)
+    rem_dt = jnp.where(run_g, dt - tg, dt)
+    cpu_ok = (avail & ~stalled & (rg_new <= 0.0) & (rem_dt > 0.0)
+              & (rc > 0.0) & (ac > 0.0))
+    tc = jnp.where(cpu_ok, jnp.minimum(rem_dt, rc / ac), 0.0)
+
+    rg_out[...] = rg_new
+    rc_out[...] = rc - jnp.where(cpu_ok, ac * tc, 0.0)
+    started_out[...] = (run_g | cpu_ok).astype(jnp.int32)
+    tcomp_out[0, 0] = t_comp
+    sid_out[0, 0] = sid
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _event_step_call(rem_g, rem_c, alloc_g, alloc_c, avail, t, t_ev, live,
+                     *, interpret: bool):
+    B, S = rem_g.shape
+    dtype = rem_g.dtype
+    row = pl.BlockSpec((1, S), lambda b: (b, 0))
+    scalar = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    return pl.pallas_call(
+        _event_step_kernel,
+        grid=(B,),
+        in_specs=[row, row, row, row, row, scalar, scalar, scalar],
+        out_specs=[row, row, row, scalar, scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S), dtype),
+            jax.ShapeDtypeStruct((B, S), dtype),
+            jax.ShapeDtypeStruct((B, S), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(rem_g, rem_c, alloc_g, alloc_c, avail, t, t_ev, live)
+
+
+def event_step(rem_g, rem_c, alloc_g, alloc_c, avail, t, t_ev, live,
+               interpret: bool = True):
+    """Pad the instance dimension to a lane multiple and run the kernel.
+
+    Returns ``(rem_g', rem_c', started, t_comp [B], sid [B])`` with the
+    padding stripped — the same contract as
+    :func:`repro.kernels.event_core.event_step_jax`.
+    """
+    rem_g = jnp.asarray(rem_g)
+    B, S = rem_g.shape
+    S_pad = max(-(-S // LANES) * LANES, LANES)
+    pad = S_pad - S
+
+    def padf(x, value=0.0):
+        x = jnp.asarray(x, rem_g.dtype)
+        return jnp.pad(x, ((0, 0), (0, pad)), constant_values=value) \
+            if pad else x
+
+    avail_i = jnp.pad(jnp.asarray(avail, jnp.int32), ((0, 0), (0, pad))) \
+        if pad else jnp.asarray(avail, jnp.int32)
+    # padded lanes: avail=0 makes their candidates +inf; alloc=1 keeps the
+    # divisions finite so no NaNs leak into the lane min
+    rg, rc, started, t_comp, sid = _event_step_call(
+        padf(rem_g), padf(rem_c), padf(alloc_g, 1.0), padf(alloc_c, 1.0),
+        avail_i,
+        jnp.asarray(t, rem_g.dtype)[:, None],
+        jnp.asarray(t_ev, rem_g.dtype)[:, None],
+        jnp.asarray(live, jnp.int32)[:, None],
+        interpret=bool(interpret))
+    return (rg[:, :S], rc[:, :S], started[:, :S] > 0,
+            t_comp[:, 0], sid[:, 0])

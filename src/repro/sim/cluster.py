@@ -7,10 +7,27 @@ Performance notes (the simulator re-allocates on every event):
     :meth:`pop_job` and advanced wholesale by the event cores — so
     ``next_completion`` is one masked argmin and ``advance`` one fused
     array update (see :mod:`repro.sim.event_core`),
-  * per-instance deadline vectors are cached numpy arrays rebuilt only when
-    the queue changes, so urgency ω(t) is one vectorized op per instance,
+  * queue deadlines live in an inf-padded ``[S, L]`` matrix (``dl_pad``)
+    so urgency ω(t) and the RAN floors gather as fused array passes over
+    the busy instances of a node — or, batched, over every dirty node of
+    every replica at once (:func:`deadline_allocate_block`),
   * expired not-yet-started requests are dropped lazily (bounds queue length
     and models admission control; counted as unfulfilled).
+
+Batched multi-seed runs stack B same-scenario replicas into ``[B, S]``
+blocks (:class:`ClusterBlock`): each replica's arrays become row views of
+the block, so the per-replica queue mutators keep writing scalar slots
+while the batched event core and the batched allocator advance the whole
+block in fused steps.  Bit-for-bit identity between the solo and batched
+paths rests on two invariants:
+
+  * every gathered element evaluates the *same scalar IEEE-754
+    expressions* whether it sits in a per-node ``[k]`` vector or a
+    cross-replica ``[P]`` vector (elementwise ufuncs are positionwise),
+  * all reductions over padded axes use the pairwise halving
+    :func:`_tree_sum`, whose result is invariant to the amount of
+    zero-contribution padding — so replicas sharing a wider padded L (or
+    problems sharing a wider padded K) cannot drift by ulps.
 
 The ``Job`` objects in each FIFO remain the request-level record, but while
 a job is at the head of its queue the *arrays* are authoritative for its
@@ -20,7 +37,6 @@ onto the object before handing it to the engine.
 from __future__ import annotations
 
 import dataclasses
-import math
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -35,15 +51,46 @@ FLOOR_MARGIN = 0.9   # finish RAN work 10% before the earliest deadline:
                      # serving exactly at the floor rate would complete at
                      # the deadline edge, losing ties to transport jitter
 
+_DL_PAD0 = 4         # initial padded deadline columns (kept a power of two)
+
+_CAT_DU = 0          # category codes for vectorized floor dispatch
+_CAT_CUUP = 1
+_CAT_AI = 2
+
+
+def _tree_sum(x: np.ndarray) -> np.ndarray:
+    """Sum over the (power-of-two) last axis by pairwise halving.
+
+    Unlike ``np.sum`` (whose pairwise blocking depends on the axis
+    length), the halving tree gives a result *invariant to trailing
+    zero-contribution padding*: folding an all-zero upper half returns
+    the lower half unchanged, so a row padded from L to 2L sums to the
+    identical double.  This is what lets solo runs (per-replica padded
+    width) and batched runs (shared widest width) stay bit-identical.
+    """
+    while x.shape[-1] > 1:
+        h = x.shape[-1] // 2
+        x = x[..., :h] + x[..., h:]
+    return x[..., 0]
+
+
+def _pow2_at_least(n: int) -> int:
+    k = 1
+    while k < n:
+        k <<= 1
+    return k
+
 
 def _active_set_small(w: List[float], floors: List[float],
                       capacity: float) -> List[float]:
     """Floors-respecting proportional share (Eq. 17–19) on a few scalars.
 
     Semantics of :func:`repro.core.allocator_np.active_set_np`, but over the
-    handful of busy instances on ONE node as plain Python floats — the
-    simulator re-allocates per event, and full-S vector solves per node are
-    exactly the O(S)-per-event cost the event loop must not pay.
+    handful of busy instances on ONE node as plain Python floats.  Kept as
+    the readable scalar reference (and for its parity test against the
+    vector implementation); the engine paths run the row-vectorized
+    :func:`_active_set_rows` so many (node, resource) problems solve in
+    one padded pass.
     """
     k = len(w)
     floor_sum = 0.0
@@ -83,6 +130,52 @@ def _active_set_small(w: List[float], floors: List[float],
             for i in range(k)]
 
 
+def _active_set_rows(w: np.ndarray, floors: np.ndarray,
+                     caps: np.ndarray) -> np.ndarray:
+    """Eq. 17–19 active-set fixed point over ``[P, K]`` problem rows.
+
+    Each row is one (node, resource) problem, zero-padded to the shared
+    power-of-two K (padding has ``w = 0`` so it starts pinned at floor 0
+    and never contributes).  The pinned set grows monotonically and extra
+    iterations are idempotent, so early-breaking when no row grew cannot
+    desync a row across calls that batch it with different companions —
+    the per-row result depends only on the row's real entries.
+    """
+    P, K = w.shape
+    if not floors.any():
+        # no floors anywhere (no busy RAN heads): the fixed point is the
+        # plain proportional share in one step.  Exact shortcut: with all
+        # floors 0 the pinned set is w <= 0 immediately and never grows
+        # (prop >= 0 is never < 0), rem = caps - 0.0 = caps, and pinned
+        # entries share w * rem / denom = 0 = their floor.
+        denom = np.maximum(_tree_sum(w), EPS_ALLOC)
+        rem = np.maximum(caps - 0.0, 0.0)
+        return w * rem[:, None] / denom[:, None]
+    floor_sum = _tree_sum(floors)
+    infeas = (floor_sum > caps + 1e-6) & (floor_sum > 0.0)
+    scale = np.ones(P)
+    np.divide(caps, floor_sum, out=scale, where=infeas)
+    floors_eff = floors * scale[:, None]
+
+    pinned = w <= 0.0
+    for _ in range(K):
+        rem = caps - _tree_sum(np.where(pinned, floors_eff, 0.0))
+        np.maximum(rem, 0.0, out=rem)
+        denom = _tree_sum(np.where(pinned, 0.0, w))
+        np.maximum(denom, EPS_ALLOC, out=denom)
+        prop = w * rem[:, None] / denom[:, None]
+        grow = (prop < floors_eff) & ~pinned
+        if not grow.any():
+            break
+        pinned |= grow
+    rem = caps - _tree_sum(np.where(pinned, floors_eff, 0.0))
+    np.maximum(rem, 0.0, out=rem)
+    denom = _tree_sum(np.where(pinned, 0.0, w))
+    np.maximum(denom, EPS_ALLOC, out=denom)
+    share = w * rem[:, None] / denom[:, None]
+    return np.where(pinned, floors_eff, share)
+
+
 @dataclasses.dataclass
 class Job:
     """A request's residency at one instance (one service stage)."""
@@ -95,43 +188,19 @@ class Job:
 
 
 class InstQueue:
-    """FIFO of jobs at one (node, instance) with a cached deadline vector.
+    """FIFO of jobs at one (node, instance).
 
-    Aggregates (Ψ) and head state live on :class:`ClusterState` arrays;
-    the queue only owns the job order and the deadline cache for ω(t).
+    Aggregates (Ψ), head state, and the padded deadline matrix live on
+    :class:`ClusterState` arrays; the queue only owns the job order.
     """
 
-    __slots__ = ("jobs", "_deadlines", "_dirty")
+    __slots__ = ("jobs",)
 
     def __init__(self) -> None:
         self.jobs: deque = deque()
-        self._deadlines = np.empty(0, np.float64)
-        self._dirty = False
 
     def head(self) -> Optional[Job]:
         return self.jobs[0] if self.jobs else None
-
-    def deadlines(self) -> np.ndarray:
-        if self._dirty:
-            self._deadlines = np.fromiter(
-                (j.abs_deadline for j in self.jobs), np.float64,
-                count=len(self.jobs))
-            self._dirty = False
-        return self._deadlines
-
-    def omega(self, t: float) -> float:
-        """Urgency Σ 1/max(τ − (t − a), ε)  (Eq. 14)."""
-        if not self.jobs:
-            return 0.0
-        rem = self.deadlines() - t
-        np.maximum(rem, EPS_URGENCY, out=rem)
-        np.reciprocal(rem, out=rem)
-        return float(rem.sum())
-
-    def min_deadline_remaining(self, t: float) -> float:
-        if not self.jobs:
-            return np.inf
-        return float(self.deadlines().min() - t)
 
     def __len__(self) -> int:
         return len(self.jobs)
@@ -174,6 +243,12 @@ class ClusterState:
         self.head_mask = np.zeros(self.S, bool)      # queue non-empty
         self.head_started = np.zeros(self.S, bool)   # head has progressed
 
+        # inf-padded per-queue deadline matrix (power-of-two columns) —
+        # urgency ω(t) / earliest deadlines gather as fused array passes
+        self.dl_cols = _DL_PAD0
+        self.dl_pad = np.full((self.S, _DL_PAD0), np.inf)
+        self._block: Optional["ClusterBlock"] = None
+
         self._du_by_cell: Dict[int, int] = {}
         self._cuup_by_cell: Dict[int, int] = {}
         for s in instances:
@@ -184,18 +259,26 @@ class ClusterState:
         self._cat_sids: Dict[InstanceCategory, List[int]] = {}
         for s in instances:
             self._cat_sids.setdefault(s.category, []).append(s.sid)
+        self._cat_code = np.array(
+            [_CAT_DU if s.category == InstanceCategory.DU
+             else _CAT_CUUP if s.category == InstanceCategory.CUUP
+             else _CAT_AI for s in instances], np.int8)
         self._node_sids: List[List[int]] = [[] for _ in range(self.N)]
         for sid in range(self.S):
             self._node_sids[self.placement[sid]].append(sid)
         # instance weights by sid (vectorized VRAM accounting, Eq. 4)
         self._weights = np.array([s.weight_bytes for s in instances])
 
-        # expected downstream CU-UP processing time α̂^down (EMA per cell)
+        # expected downstream CU-UP processing time α̂^down (EMA per cell),
+        # mirrored into a per-DU-sid vector for the fused floor gather
         self._cuup_time_ema = {c: 5e-4 for c in self._cuup_by_cell}
+        self._alpha_down = np.zeros(self.S)
+        for cell, du_sid in self._du_by_cell.items():
+            self._alpha_down[du_sid] = self._cuup_time_ema.get(cell, 5e-4)
 
     # ------------------------------------------------------------------ #
-    # queue mutation (the ONLY writers of the head/Ψ arrays besides the
-    # event cores' advance)
+    # queue mutation (the ONLY writers of the head/Ψ/deadline arrays
+    # besides the event cores' advance)
     # ------------------------------------------------------------------ #
     def _promote_head(self, sid: int) -> None:
         q = self.queues[sid]
@@ -215,11 +298,23 @@ class ClusterState:
             self.head_mask[sid] = True
             self.head_started[sid] = job.started
 
+    def _grow_dl(self) -> None:
+        if self._block is not None:
+            self._block.grow_dl()
+            return
+        new = np.full((self.S, self.dl_cols * 2), np.inf)
+        new[:, :self.dl_cols] = self.dl_pad
+        self.dl_pad = new
+        self.dl_cols *= 2
+
     def push_job(self, sid: int, job: Job) -> None:
         q = self.queues[sid]
         q.jobs.append(job)
-        q._dirty = True
-        if len(q.jobs) == 1:
+        cnt = len(q.jobs)
+        if cnt > self.dl_cols:
+            self._grow_dl()
+        self.dl_pad[sid, cnt - 1] = job.abs_deadline
+        if cnt == 1:
             self._promote_head(sid)
         else:
             self.tail_psi_g[sid] += job.rem_g
@@ -229,7 +324,11 @@ class ClusterState:
         """Remove the head; syncs its live residuals back onto the Job."""
         q = self.queues[sid]
         job = q.jobs.popleft()
-        q._dirty = True
+        cnt = len(q.jobs)
+        row = self.dl_pad[sid]
+        if cnt:
+            row[:cnt] = row[1:cnt + 1]          # FIFO left shift
+        row[cnt] = np.inf
         job.rem_g = float(self.head_rem_g[sid])
         job.rem_c = float(self.head_rem_c[sid])
         job.started = bool(self.head_started[sid])
@@ -311,11 +410,42 @@ class ClusterState:
         mask[self.placement[avail], np.nonzero(avail)[0]] = True
         return mask
 
+    def _servable_sids(self, n: int, t: float) -> List[int]:
+        hm = self.head_mask
+        ru = self.reconfig_until
+        return [s for s in self._node_sids[n] if hm[s] and t >= ru[s]]
+
+    def node_alloc_inputs(self, n: int, t: float):
+        """Compact allocator inputs (Eq. 13–15) over one node's servable heads.
+
+        Returns ``(sids, psi_g, psi_c, omega, floors_g, floors_c)`` with
+        the arrays aligned to ``sids`` (residency order); increments
+        ``infeasible_events`` for every floor whose deadline slack is
+        already gone.  This is the single source of the floor/urgency
+        semantics: the deadline-aware solve, the [N, S] allocator-input
+        build, and the compact baselines all feed from here (the batched
+        allocator evaluates the same elementwise expressions via
+        :func:`_alloc_floor_math`), so the semantics cannot desync.
+        """
+        sids = self._servable_sids(n, t)
+        if not sids:
+            return sids, None, None, None, None, None
+        idx = np.asarray(sids, np.int64)
+        psi_g, psi_c, omega, fg, fc, infeas = _alloc_floor_math(
+            self.dl_pad[idx], t,
+            self.tail_psi_g[idx] + self.head_rem_g[idx],
+            self.tail_psi_c[idx] + self.head_rem_c[idx],
+            self._cat_code[idx], self._alpha_down[idx], self.delta,
+            self.gpu_capacity[n], self.cpu_capacity[n])
+        self.infeasible_events += int(np.count_nonzero(infeas))
+        return sids, psi_g, psi_c, omega, fg, fc
+
     def allocator_inputs(self, t: float, nodes: Optional[List[int]] = None):
         """Build (psi_g, psi_c, omega, floors_g, floors_c, mask) as [N, S].
 
-        ``nodes`` restricts the (expensive) per-instance aggregation to the
-        given node rows — the event loop's incremental-reallocation path.
+        ``nodes`` restricts the per-node aggregation to the given rows.
+        This is the snapshot/baseline-facing view; the deadline-aware hot
+        path solves compactly without materializing [N, S].
         """
         N, S = self.N, self.S
         psi_g = np.zeros((N, S))
@@ -324,106 +454,45 @@ class ClusterState:
         floors_g = np.zeros((N, S))
         floors_c = np.zeros((N, S))
         mask = self.residency_mask(t)
-
-        if nodes is None:
-            sids = np.nonzero(self.head_mask)[0]
-        else:
-            sids = [s for n in nodes for s in self._node_sids[n]
-                    if self.head_mask[s]]
-        for sid in sids:
-            n = self.placement[sid]
-            if not mask[n, sid]:
+        for n in (range(N) if nodes is None else nodes):
+            sids, pg, pc, om, fg, fc = self.node_alloc_inputs(n, t)
+            if not sids:
                 continue
-            (psi_g[n, sid], psi_c[n, sid], omega[n, sid],
-             floors_g[n, sid], floors_c[n, sid]) = self._sid_alloc_inputs(
-                sid, t, float(self.gpu_capacity[n]),
-                float(self.cpu_capacity[n]))
+            psi_g[n, sids] = pg
+            psi_c[n, sids] = pc
+            omega[n, sids] = om
+            floors_g[n, sids] = fg
+            floors_c[n, sids] = fc
         return psi_g, psi_c, omega, floors_g, floors_c, mask
-
-    def _sid_alloc_inputs(self, sid: int, t: float, gpu_cap: float,
-                          cpu_cap: float):
-        """(Ψ^g, Ψ^c, ω, floor_g, floor_c) for one servable head (Eq. 13–15).
-
-        The single source of the RAN capacity-floor formula — both the
-        [N, S] allocator-input build (baselines, snapshots) and the compact
-        per-node deadline-aware solve feed from here, so the floor/urgency
-        semantics (and the infeasibility count) cannot desync."""
-        q = self.queues[sid]
-        psi_g = max(self.psi_g_of(sid), 0.0)
-        psi_c = max(self.psi_c_of(sid), 0.0)
-        omega = q.omega(t)
-        fg = fc = 0.0
-        # RAN capacity floors (Eq. 15) on the dominant resource
-        category = self.instances[sid].category
-        if category == InstanceCategory.DU:
-            alpha_down = self._cuup_time_ema.get(self.instances[sid].cell,
-                                                 5e-4)
-            rem = q.min_deadline_remaining(t) - self.delta - alpha_down
-            rem *= FLOOR_MARGIN
-            if rem <= 0.0:
-                self.infeasible_events += 1
-            fg = min(psi_g / max(rem, EPS_FLOOR), gpu_cap)
-        elif category == InstanceCategory.CUUP:
-            rem = q.min_deadline_remaining(t) * FLOOR_MARGIN
-            if rem <= 0.0:
-                self.infeasible_events += 1
-            fc = min(psi_c / max(rem, EPS_FLOOR), cpu_cap)
-        return psi_g, psi_c, omega, fg, fc
 
     def apply_allocation(self, g_ns: np.ndarray, c_ns: np.ndarray,
                          nodes: Optional[List[int]] = None) -> None:
-        """Collapse [N, S] node-major allocation onto per-instance vectors."""
+        """Collapse [N, S] node-major allocation onto per-instance vectors.
+
+        Writes in place: in batched runs the allocation vectors are row
+        views of the block, so rebinding would silently detach them.
+        """
         if nodes is None:
-            self.alloc_g = g_ns[self.placement, np.arange(self.S)]
-            self.alloc_c = c_ns[self.placement, np.arange(self.S)]
+            self.alloc_g[:] = g_ns[self.placement, np.arange(self.S)]
+            self.alloc_c[:] = c_ns[self.placement, np.arange(self.S)]
             return
         for n in nodes:
             for sid in self._node_sids[n]:
                 self.alloc_g[sid] = g_ns[n, sid]
                 self.alloc_c[sid] = c_ns[n, sid]
 
-    def _deadline_alloc_node(self, n: int, t: float) -> None:
-        """Compact per-node closed form (Eq. 16–19) over busy instances only.
-
-        One pass gathers the node's servable heads (Ψ, ω, RAN floors) into
-        scalar lists, :func:`_active_set_small` shares each resource, and
-        idle/unavailable instances get zero — O(busy-on-node), not O(S)."""
-        gpu_cap = float(self.gpu_capacity[n])
-        cpu_cap = float(self.cpu_capacity[n])
-        busy: List[int] = []
-        w_g: List[float] = []
-        w_c: List[float] = []
-        fl_g: List[float] = []
-        fl_c: List[float] = []
-        for sid in self._node_sids[n]:
-            if not self.head_mask[sid] or t < self.reconfig_until[sid]:
-                self.alloc_g[sid] = 0.0
-                self.alloc_c[sid] = 0.0
-                continue
-            psi_g, psi_c, omega, fg, fc = self._sid_alloc_inputs(
-                sid, t, gpu_cap, cpu_cap)
-            busy.append(sid)
-            w_g.append(math.sqrt(omega * psi_g))            # Eq. 17
-            w_c.append(math.sqrt(omega * psi_c))
-            fl_g.append(fg)
-            fl_c.append(fc)
-        if not busy:
-            return
-        g = _active_set_small(w_g, fl_g, gpu_cap)
-        c = _active_set_small(w_c, fl_c, cpu_cap)
-        for i, sid in enumerate(busy):
-            self.alloc_g[sid] = g[i]
-            self.alloc_c[sid] = c[i]
-
     def default_allocate(self, t: float,
                          nodes: Optional[List[int]] = None) -> None:
         """The paper's allocation layer (closed-form active-set, Eq. 18)."""
-        for n in (range(self.N) if nodes is None else nodes):
-            self._deadline_alloc_node(n, t)
+        deadline_allocate_solo(self, t, nodes)
 
     def observe_cuup_time(self, cell: int, elapsed: float) -> None:
         ema = self._cuup_time_ema.get(cell, elapsed)
-        self._cuup_time_ema[cell] = 0.9 * ema + 0.1 * elapsed
+        new = 0.9 * ema + 0.1 * elapsed
+        self._cuup_time_ema[cell] = new
+        du_sid = self._du_by_cell.get(cell)
+        if du_sid is not None:
+            self._alpha_down[du_sid] = new
 
     # ------------------------------------------------------------------ #
     # routing: smallest-backlog among the service's replicas (paper §II)
@@ -461,3 +530,270 @@ class ClusterState:
             "omega": omega.sum(axis=0),
             "queue_len": np.array([len(q) for q in self.queues], np.int64),
         }
+
+
+# --------------------------------------------------------------------------- #
+# shared floor/urgency math (the elementwise core of Eq. 13–15)
+# --------------------------------------------------------------------------- #
+def _alloc_floor_math(D, t, psi_g_raw, psi_c_raw, cat, alpha, delta,
+                      gcap, ccap):
+    """(Ψ^g, Ψ^c, ω, floor_g, floor_c, infeasible-mask) for gathered heads.
+
+    ``D`` is the inf-padded deadline rows ``[P, L]``; every other input is
+    ``[P]`` (or a scalar broadcast).  Pure elementwise expressions plus
+    the padding-invariant tree sum — a gathered element computes the
+    identical doubles whether it arrived via the per-node solo path or
+    the cross-replica batched path.  The returned mask flags elements
+    whose RAN floor slack was already gone (Eq. 15 infeasibility).
+    """
+    rem = D - (t[:, None] if isinstance(t, np.ndarray) else t)
+    np.maximum(rem, EPS_URGENCY, out=rem)
+    np.reciprocal(rem, out=rem)                  # Eq. 14 contributions
+    omega = _tree_sum(rem)
+    psi_g = np.maximum(psi_g_raw, 0.0)
+    psi_c = np.maximum(psi_c_raw, 0.0)
+    if gcap is None:                             # caller saw no RAN heads
+        return psi_g, psi_c, omega, None, None, None
+    min_rem = D.min(axis=1) - t
+    fg = np.zeros(len(omega))
+    fc = np.zeros(len(omega))
+    infeas = np.zeros(len(omega), bool)
+    du = cat == _CAT_DU
+    if du.any():
+        rem_f = (min_rem[du] - delta - alpha[du]) * FLOOR_MARGIN
+        infeas[du] = rem_f <= 0.0
+        fg[du] = np.minimum(psi_g[du] / np.maximum(rem_f, EPS_FLOOR),
+                            gcap[du] if isinstance(gcap, np.ndarray)
+                            else gcap)
+        del rem_f
+    cu = cat == _CAT_CUUP
+    if cu.any():
+        rem_f = min_rem[cu] * FLOOR_MARGIN
+        infeas[cu] = rem_f <= 0.0
+        fc[cu] = np.minimum(psi_c[cu] / np.maximum(rem_f, EPS_FLOOR),
+                            ccap[cu] if isinstance(ccap, np.ndarray)
+                            else ccap)
+    return psi_g, psi_c, omega, fg, fc, infeas
+
+
+def _solve_and_scatter(probs, psi_g, psi_c, omega, fg, fc, caps_g, caps_c,
+                       write_g, write_c):
+    """Pad the gathered problems to [2P, K], solve, scatter via callbacks.
+
+    ``probs`` holds (lo, hi) element ranges per (node, resource-pair)
+    problem; ``write_g``/``write_c`` receive the flat per-element
+    allocation vectors aligned with the gather order.
+    """
+    P = len(probs)
+    K = _pow2_at_least(max(hi - lo for lo, hi in probs))
+    w_flat_g = np.sqrt(omega * psi_g)             # Eq. 17
+    w_flat_c = np.sqrt(omega * psi_c)
+    w = np.zeros((2 * P, K))
+    fl = np.zeros((2 * P, K))
+    rows = np.empty(len(psi_g), np.int64)
+    cols = np.empty(len(psi_g), np.int64)
+    for p, (lo, hi) in enumerate(probs):
+        rows[lo:hi] = p
+        cols[lo:hi] = np.arange(hi - lo)
+    w[rows, cols] = w_flat_g
+    w[rows + P, cols] = w_flat_c
+    # all-zero floor vectors leave fl untouched: identical to scattering
+    # zeros, and it lets the solver take its floors-free shortcut
+    if fg is not None and fg.any():
+        fl[rows, cols] = fg
+    if fc is not None and fc.any():
+        fl[rows + P, cols] = fc
+    caps = np.concatenate([caps_g, caps_c])
+    alloc = _active_set_rows(w, fl, caps)
+    write_g(alloc[rows, cols])
+    write_c(alloc[rows + P, cols])
+
+
+def _collect_node_problems(cluster: ClusterState, t, nodes, full: bool,
+                           probs, node_of, ss) -> None:
+    """Append (lo, hi) problem ranges + sids for a replica's dirty nodes.
+
+    ``full`` means every node re-solves: the caller already zeroed the
+    whole allocation vector, so only nodes that actually own a servable
+    head are visited (found with one vectorized scan) — identical final
+    state to visiting all N nodes, since idle nodes contribute nothing.
+    """
+    if full:
+        busy = cluster.head_mask & (cluster.reconfig_until <= t)
+        hit = np.nonzero(busy)[0]
+        if not len(hit):
+            return
+        for n in np.unique(cluster.placement[hit]):
+            sids = [s for s in cluster._node_sids[n] if busy[s]]
+            probs.append((len(ss), len(ss) + len(sids)))
+            node_of.append(int(n))
+            ss.extend(sids)
+    else:
+        for n in nodes:
+            sids = cluster._servable_sids(n, t)
+            if sids:
+                probs.append((len(ss), len(ss) + len(sids)))
+                node_of.append(n)
+                ss.extend(sids)
+
+
+def deadline_allocate_solo(cluster: ClusterState, t: float,
+                           nodes=None) -> None:
+    """Deadline-aware allocation over ``nodes`` (``None`` = all) of one
+    replica: one gather across every servable head of the dirty nodes,
+    one padded active-set solve for all (node, resource) problems, one
+    scatter.
+    """
+    probs: List[Tuple[int, int]] = []
+    node_of: List[int] = []
+    ss: List[int] = []
+    if nodes is None:
+        cluster.alloc_g.fill(0.0)
+        cluster.alloc_c.fill(0.0)
+    else:
+        zero = [s for n in nodes for s in cluster._node_sids[n]]
+        if zero:
+            zi = np.asarray(zero, np.int64)
+            cluster.alloc_g[zi] = 0.0
+            cluster.alloc_c[zi] = 0.0
+    _collect_node_problems(cluster, t, nodes, nodes is None,
+                           probs, node_of, ss)
+    if not ss:
+        return
+    idx = np.asarray(ss, np.int64)
+    cat = cluster._cat_code[idx]
+    if (cat != _CAT_AI).any():
+        nn = np.repeat(node_of, [hi - lo for lo, hi in probs])
+        gcap, ccap = cluster.gpu_capacity[nn], cluster.cpu_capacity[nn]
+        alpha = cluster._alpha_down[idx]
+    else:                       # pure-AI gather: no floors to build
+        gcap = ccap = alpha = None
+    psi_g, psi_c, omega, fg, fc, infeas = _alloc_floor_math(
+        cluster.dl_pad[idx], t,
+        cluster.tail_psi_g[idx] + cluster.head_rem_g[idx],
+        cluster.tail_psi_c[idx] + cluster.head_rem_c[idx],
+        cat, alpha, cluster.delta, gcap, ccap)
+    if infeas is not None:
+        cluster.infeasible_events += int(np.count_nonzero(infeas))
+    _solve_and_scatter(
+        probs, psi_g, psi_c, omega, fg, fc,
+        cluster.gpu_capacity[node_of], cluster.cpu_capacity[node_of],
+        lambda g: cluster.alloc_g.__setitem__(idx, g),
+        lambda c: cluster.alloc_c.__setitem__(idx, c))
+
+
+def deadline_allocate_block(block: "ClusterBlock", t_vec: np.ndarray,
+                            node_lists) -> None:
+    """Cross-replica deadline-aware allocation in one fused gather/solve.
+
+    ``node_lists[b]`` is the sequence of node ids replica ``b`` must
+    re-solve this event (``None`` = full re-solve, ``()`` = skip).
+    Discrete-outcome identical to calling :func:`deadline_allocate_solo`
+    per replica: every gathered element evaluates the same scalar
+    expressions, reductions are padding-invariant tree sums, and the
+    active-set rows are independent.
+    """
+    clusters = block.clusters
+    zb: List[int] = []
+    zs: List[int] = []
+    probs: List[Tuple[int, int]] = []
+    prob_cap_n: List[int] = []
+    bb: List[int] = []
+    ss: List[int] = []
+    for b, nodes in enumerate(node_lists):
+        if nodes is not None and not nodes:
+            continue
+        cl = clusters[b]
+        t = t_vec[b]
+        if nodes is None:
+            cl.alloc_g.fill(0.0)
+            cl.alloc_c.fill(0.0)
+        else:
+            for n in nodes:
+                row = cl._node_sids[n]
+                zb.extend([b] * len(row))
+                zs.extend(row)
+        _collect_node_problems(cl, t, nodes, nodes is None,
+                               probs, prob_cap_n, ss)
+        bb.extend([b] * (len(ss) - len(bb)))
+    if zs:
+        block.alloc_g[zb, zs] = 0.0
+        block.alloc_c[zb, zs] = 0.0
+    if not ss:
+        return
+    bi = np.asarray(bb, np.int64)
+    si = np.asarray(ss, np.int64)
+    cl0 = clusters[0]
+    cat = cl0._cat_code[si]
+    if (cat != _CAT_AI).any():
+        nn = np.repeat(prob_cap_n, [hi - lo for lo, hi in probs])
+        gcap, ccap = cl0.gpu_capacity[nn], cl0.cpu_capacity[nn]
+        alpha = block.alpha_down[bi, si]
+    else:                       # pure-AI gather: no floors to build
+        gcap = ccap = alpha = None
+    psi_g, psi_c, omega, fg, fc, infeas = _alloc_floor_math(
+        block.dl_pad[bi, si], t_vec[bi],
+        block.tail_psi_g[bi, si] + block.head_rem_g[bi, si],
+        block.tail_psi_c[bi, si] + block.head_rem_c[bi, si],
+        cat, alpha, cl0.delta, gcap, ccap)
+    if infeas is not None and infeas.any():
+        for b in bi[infeas]:
+            clusters[b].infeasible_events += 1
+    _solve_and_scatter(
+        probs, psi_g, psi_c, omega, fg, fc,
+        cl0.gpu_capacity[prob_cap_n], cl0.cpu_capacity[prob_cap_n],
+        lambda g: block.alloc_g.__setitem__((bi, si), g),
+        lambda c: block.alloc_c.__setitem__((bi, si), c))
+
+
+# --------------------------------------------------------------------------- #
+# batched multi-seed block
+# --------------------------------------------------------------------------- #
+class ClusterBlock:
+    """Contiguous ``[B, S]`` state over B same-scenario replicas.
+
+    Stacks each replica's per-instance arrays into block rows and rebinds
+    the :class:`ClusterState` attributes as views, so queue mutators keep
+    writing scalar slots while the batched event core and
+    :func:`deadline_allocate_block` advance the whole block in fused
+    array steps.  The deadline matrix is ``[B, S, L]`` with a shared
+    power-of-two L; :func:`_tree_sum` padding invariance keeps ω
+    identical to each replica's solo value.
+    """
+
+    ARRAYS = ("head_rem_g", "head_rem_c", "head_deadline", "head_kv",
+              "head_mask", "head_started", "alloc_g", "alloc_c",
+              "reconfig_until", "tail_psi_g", "tail_psi_c", "_alpha_down")
+
+    def __init__(self, clusters: Sequence[ClusterState]):
+        assert clusters, "a batch needs at least one replica"
+        S = clusters[0].S
+        assert all(cl.S == S for cl in clusters), \
+            "batched replicas must share one scenario topology"
+        self.clusters = list(clusters)
+        self.B = len(clusters)
+        self.S = S
+        for name in self.ARRAYS:
+            blk = np.stack([getattr(cl, name) for cl in clusters])
+            setattr(self, name.lstrip("_"), blk)
+            for b, cl in enumerate(clusters):
+                setattr(cl, name, blk[b])
+        L = max(cl.dl_cols for cl in clusters)
+        self.dl_cols = L
+        self.dl_pad = np.full((self.B, S, L), np.inf)
+        for b, cl in enumerate(clusters):
+            self.dl_pad[b, :, :cl.dl_cols] = cl.dl_pad
+            cl.dl_pad = self.dl_pad[b]
+            cl.dl_cols = L
+            cl._block = self
+
+    def grow_dl(self) -> None:
+        """Double the padded deadline width for every replica at once."""
+        L2 = self.dl_cols * 2
+        new = np.full((self.B, self.S, L2), np.inf)
+        new[:, :, :self.dl_cols] = self.dl_pad
+        self.dl_pad = new
+        self.dl_cols = L2
+        for b, cl in enumerate(self.clusters):
+            cl.dl_pad = new[b]
+            cl.dl_cols = L2

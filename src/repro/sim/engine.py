@@ -11,29 +11,43 @@ queue at its allocated rate with strict stage ordering (GPU work first,
 then CPU — Eq. 1), so the next completion time is computable in closed
 form and nothing happens between events.  The per-event hot pair
 (``next_completion``/``advance``) runs on an interchangeable event core
-(``engine="numpy" | "scalar" | "jax"``, see :mod:`repro.sim.event_core`):
-the vectorized numpy core is the default; the scalar loop is the
-bit-for-bit reference kept as a debug engine.  Expired not-yet-started
-requests are dropped when they reach the head (admission control; counted
-as unfulfilled).
+(``engine="numpy" | "scalar" | "jax"``, see :mod:`repro.sim.event_core`).
+Expired not-yet-started requests are dropped when they reach the head
+(admission control; counted as unfulfilled).
+
+Two drivers share one per-replica event machine (:class:`_Replica`):
+
+  * :meth:`Simulator.run` — the classic single-trace loop,
+  * :meth:`Simulator.run_batch` — B independent replicas (seeds of one
+    scenario × method cell) advance in lockstep over ``[B, S]`` blocks:
+    each replica keeps its own clock ``t[b]`` and event heap, while
+    ``next_completion`` becomes one masked argmin per block row and
+    ``advance`` one fused update over the whole block
+    (:func:`repro.sim.event_core.make_batched_event_core`), and the
+    deadline-aware reallocations of every replica solve in one
+    cross-replica gather (:func:`repro.sim.cluster.deadline_allocate_block`).
+    Discrete outcomes are identical to running each seed solo.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import math
-from typing import Callable, Dict, List, Optional, Protocol, Tuple
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
-from repro.sim.cluster import ClusterState, Job
-from repro.sim.event_core import make_event_core
+from repro.sim.cluster import (ClusterBlock, ClusterState, Job,
+                               deadline_allocate_block)
+from repro.sim.event_core import make_batched_event_core, make_event_core
 from repro.sim.snapshot import EpochSnapshot
 from repro.sim.types import (InstanceCategory, MigrationAction, Request,
                              RequestClass)
 
 INF = float("inf")
 NAN = float("nan")
+
+REALLOC_REFRESH = 0.25   # urgency drift: full re-solve at least 4 Hz
 
 
 class PlacementPolicy(Protocol):
@@ -132,6 +146,292 @@ class CommittedMigration(MigrationAction):
     category: InstanceCategory = InstanceCategory.SMALL_AI
 
 
+class _Replica:
+    """One trace's event machinery: heap, handlers, windows, realloc cadence.
+
+    Everything *except* the ``next_completion``/``advance`` hot pair lives
+    here, so the solo and batched drivers execute literally the same
+    per-event Python — the precondition for batched runs being
+    discrete-outcome identical to per-seed runs.
+    """
+
+    __slots__ = ("sc", "epoch_interval", "drop_expired", "cluster",
+                 "requests", "placement", "allocation", "rr_counter",
+                 "service_sids", "ran_packet", "delta", "heap", "seq",
+                 "dropped", "migrations", "epochs", "win", "arrivals_win",
+                 "current_rec", "t", "n_events", "truncated", "dirty",
+                 "last_full", "epoch_hook", "done")
+
+    def __init__(self, sc: Dict, epoch_interval: float, drop_expired: bool,
+                 requests: List[Request], placement: PlacementPolicy,
+                 allocation: AllocationPolicy, rr_dispatch: bool,
+                 epoch_hook: Optional[Callable]):
+        self.sc = sc
+        self.epoch_interval = epoch_interval
+        self.drop_expired = drop_expired
+        # clone: requests carry mutable runtime state; runs must not interact
+        self.requests = [dataclasses.replace(r) for r in requests]
+        self.placement = placement
+        self.allocation = allocation
+        self.epoch_hook = epoch_hook
+        self.cluster = ClusterState(sc["nodes"], sc["instances"],
+                                    sc["placement"], sc["transport_delay"])
+        # replica sets as int arrays: route_ai is one vectorized argmin
+        self.service_sids: Dict[str, np.ndarray] = {
+            k: np.asarray(v, np.int64)
+            for k, v in sc["service_sids"].items()}
+        self.ran_packet = sc["ran_packet_delay"]
+        self.delta = sc["transport_delay"]
+
+        # bulk heap construction: heapify is O(n) vs n pushes O(n log n)
+        entries: List[Tuple[float, int, str, object]] = []
+        horizon = max(r.arrival for r in self.requests) if self.requests \
+            else 0.0
+        n_epochs = int(horizon / epoch_interval) + 3
+        for k in range(1, n_epochs):
+            entries.append((k * epoch_interval, len(entries), "epoch", k))
+        for r in self.requests:
+            if r.cls == RequestClass.RAN:
+                entries.append((r.arrival, len(entries), "du", r))
+            else:
+                entries.append((r.arrival + self.ran_packet,
+                                len(entries), "ai_route", r))
+        # node availability windows (scenario fault injection): everything
+        # resident on the node at t0 goes dark until t1
+        for node, t0, t1 in sc.get("outages", ()):
+            entries.append((float(t0), len(entries), "outage",
+                            (int(node), float(t1))))
+        heapq.heapify(entries)
+        self.heap = entries
+        self.seq = len(entries)
+
+        self.dropped: set = set()
+        self.migrations: List[Tuple[float, MigrationAction]] = []
+        self.epochs: List[EpochRecord] = []
+        self.rr_counter = [0] if rr_dispatch else None
+        # per-interval outcome accumulators (for the critic label r_k)
+        self.win = {RequestClass.LARGE_AI: [0, 0],
+                    RequestClass.SMALL_AI: [0, 0],
+                    RequestClass.RAN: [0, 0]}
+        self.arrivals_win: Dict[str, int] = {}
+        self.current_rec: Optional[EpochRecord] = None
+
+        self.t = 0.0
+        self.n_events = 0
+        self.truncated = False
+        self.done = False
+        allocation.allocate(self.cluster, self.t)
+        self.dirty: set = set()
+        self.last_full = 0.0
+
+    # ------------------------------------------------------------------ #
+    def push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self.heap, (t, self.seq, kind, payload))
+        self.seq += 1
+
+    def mark(self, sid: int) -> None:
+        self.dirty.add(int(self.cluster.placement[sid]))
+
+    def record_outcome(self, req: Request, ok: bool) -> None:
+        w = self.win[req.cls]
+        w[0] += int(ok)
+        w[1] += 1
+
+    def finish_request(self, req: Request, t: float) -> None:
+        req.finish = t
+        self.record_outcome(req, req.fulfilled())
+
+    def drop_request(self, req: Request) -> None:
+        self.dropped.add(req.rid)
+        self.record_outcome(req, False)
+
+    def cleanup_drops(self) -> None:
+        if not self.drop_expired:
+            return
+        cluster, t = self.cluster, self.t
+        expired = (cluster.head_mask & ~cluster.head_started
+                   & (cluster.head_deadline <= t))
+        for sid in np.nonzero(expired)[0]:
+            while (cluster.head_mask[sid]
+                   and not cluster.head_started[sid]
+                   and cluster.head_deadline[sid] <= t):
+                job = cluster.pop_job(sid)
+                self.drop_request(job.req)
+                self.mark(sid)
+
+    def handle_completion(self, sid: int) -> None:
+        cluster, t = self.cluster, self.t
+        job = cluster.pop_job(sid)
+        job.rem_g = job.rem_c = 0.0
+        req = job.req
+        inst = cluster.instances[sid]
+        if inst.category == InstanceCategory.DU:
+            # RAN chain: DU done -> transport -> CU-UP
+            cu_sid = cluster.cuup_of(req.cell)
+            hops = cluster.hops(cluster.placement[sid],
+                                cluster.placement[cu_sid])
+            self.push(t + hops * self.delta, "cuup", req)
+        elif inst.category == InstanceCategory.CUUP:
+            self.finish_request(req, t)
+            cluster.observe_cuup_time(req.cell, t - req.stage_entered)
+        else:                                   # AI service done
+            self.finish_request(req, t)
+
+    def build_snapshot(self, epoch: int) -> EpochSnapshot:
+        cluster, t = self.cluster, self.t
+        util = cluster.utilization(t)
+        fl = {}
+        for cls, w in self.win.items():
+            fl[cls.value] = (w[0] / w[1]) if w[1] else 1.0
+        rates = {k: v / self.epoch_interval
+                 for k, v in self.arrivals_win.items()}
+        return EpochSnapshot(
+            t=t, epoch=epoch, nodes=cluster.nodes,
+            instances=cluster.instances,
+            placement=cluster.placement.copy(),
+            reconfig_until=cluster.reconfig_until.copy(),
+            gpu_util=util["gpu_util"], cpu_util=util["cpu_util"],
+            ran_floor_g=util["ran_floor_g"],
+            ran_floor_c=util["ran_floor_c"],
+            vram_used=util["vram_used"],
+            vram_headroom=util["vram_headroom"],
+            queue_len=util["queue_len"], psi_g=util["psi_g"],
+            psi_c=util["psi_c"], omega=util["omega"],
+            alloc_g=cluster.alloc_g.copy(),
+            alloc_c=cluster.alloc_c.copy(),
+            kv_held=cluster.kv_active_vec(),
+            recent_fulfill=fl, arrival_rate=rates)
+
+    def close_epoch_window(self, rec: Optional[EpochRecord]) -> None:
+        win = self.win
+        if rec is not None:
+            counts = (win[RequestClass.LARGE_AI][1],
+                      win[RequestClass.SMALL_AI][1],
+                      win[RequestClass.RAN][1])
+            rec.fulfill = tuple(
+                (win[c][0] / win[c][1]) if win[c][1] else 1.0
+                for c in (RequestClass.LARGE_AI, RequestClass.SMALL_AI,
+                          RequestClass.RAN))
+            rec.counts = counts
+        for w in win.values():
+            w[0] = w[1] = 0
+        self.arrivals_win.clear()
+
+    def handle_timed(self) -> None:
+        """Pop and dispatch the earliest heap event (arrivals, epochs,
+        stage hand-offs, outages, migration completions)."""
+        cluster, t, sc = self.cluster, self.t, self.sc
+        _, _, kind, payload = heapq.heappop(self.heap)
+        if kind == "du":
+            req: Request = payload
+            sid = cluster.du_of(req.cell)
+            cluster.push_job(sid, Job(
+                req=req, rem_g=max(req.du_work_g, 1.0),
+                rem_c=max(req.du_work_c, 0.0),
+                abs_deadline=req.arrival + req.deadline))
+            self.arrivals_win["ran"] = self.arrivals_win.get("ran", 0) + 1
+            self.mark(sid)
+        elif kind == "cuup":
+            req = payload
+            sid = cluster.cuup_of(req.cell)
+            req.stage_entered = t
+            cluster.push_job(sid, Job(
+                req=req, rem_g=0.0,
+                rem_c=max(req.cuup_work_c, 1e-9),
+                abs_deadline=req.arrival + req.deadline))
+            self.mark(sid)
+        elif kind == "ai_route":
+            req = payload
+            sids = self.service_sids[req.service]
+            sid = cluster.route_ai(sids, t, self.rr_counter)
+            req.target_sid = sid
+            # transport: DU node -> AI node hops
+            du_node = cluster.placement[cluster.du_of(req.cell)]
+            ai_node = cluster.placement[sid]
+            hops = cluster.hops(du_node, ai_node)
+            self.push(t + hops * self.delta, "ai_enqueue", (req, sid))
+            self.arrivals_win[req.service] = \
+                self.arrivals_win.get(req.service, 0) + 1
+        elif kind == "ai_enqueue":
+            req, sid = payload
+            req.stage_entered = t
+            cluster.push_job(sid, Job(
+                req=req, rem_g=max(req.ai_work_g, 1.0),
+                rem_c=max(req.ai_work_c, 0.0),
+                abs_deadline=req.arrival + req.deadline,
+                kv_bytes=req.kv_bytes))
+            self.mark(sid)
+        elif kind == "epoch":
+            k: int = payload
+            self.close_epoch_window(self.current_rec)
+            snap = self.build_snapshot(k)
+            action = self.placement.decide(snap)
+            shortlist = getattr(self.placement, "last_shortlist", [])
+            if action is not None:
+                ok = (cluster.migration_feasible(action)
+                      and cluster.available(action.sid, t))
+                if ok:
+                    inst = cluster.instances[action.sid]
+                    committed = CommittedMigration(
+                        sid=action.sid, src=action.src,
+                        dst=action.dst, category=inst.category)
+                    cluster.apply_migration(committed, t)
+                    # landing on a node mid-outage: the instance
+                    # stays dark until the node itself returns
+                    until = t + inst.reconfig_s
+                    for node, o0, o1 in sc.get("outages", ()):
+                        if int(node) == action.dst and o0 <= t < o1:
+                            until = max(until, float(o1))
+                    cluster.reconfig_until[action.sid] = until
+                    self.migrations.append((t, committed))
+                    self.push(until, "mig_done", action.sid)
+                else:
+                    action = None
+            self.current_rec = EpochRecord(
+                epoch=k, t=t, snapshot=snap, action=action,
+                shortlist=list(shortlist))
+            self.epochs.append(self.current_rec)
+            if self.epoch_hook is not None:
+                self.epoch_hook(self.current_rec, cluster)
+        elif kind == "mig_done":
+            self.mark(payload)   # availability flip triggers realloc
+        elif kind == "outage":
+            node, until = payload
+            for sid in range(cluster.S):
+                if cluster.placement[sid] == node:
+                    cluster.reconfig_until[sid] = max(
+                        cluster.reconfig_until[sid], until)
+                    self.mark(sid)
+            self.push(until, "outage_end", node)
+        elif kind == "outage_end":
+            for sid in range(cluster.S):
+                if cluster.placement[sid] == payload:
+                    self.mark(sid)   # back online: trigger realloc
+        if kind == "epoch":
+            self.dirty.update(range(cluster.N))
+
+    def realloc_nodes(self):
+        """Post-event reallocation scope: ``None`` = full re-solve,
+        a list = just those nodes, ``()`` = nothing to do."""
+        if self.t - self.last_full >= REALLOC_REFRESH \
+                or len(self.dirty) >= self.cluster.N:
+            self.last_full = self.t
+            self.dirty.clear()
+            return None
+        if self.dirty:
+            nodes = sorted(self.dirty)
+            self.dirty.clear()
+            return nodes
+        return ()
+
+    def result(self) -> SimResult:
+        self.close_epoch_window(self.current_rec)
+        return SimResult(requests=self.requests, dropped=self.dropped,
+                         migrations=self.migrations, epochs=self.epochs,
+                         infeasible_events=self.cluster.infeasible_events,
+                         n_events=self.n_events, truncated=self.truncated)
+
+
 class Simulator:
     def __init__(self, scenario: Dict, epoch_interval: float = 5.0,
                  drop_expired: bool = False, seed: int = 0,
@@ -141,7 +441,12 @@ class Simulator:
         self.drop_expired = drop_expired
         self.seed = seed
         self.engine = engine
-        make_event_core(engine)                # fail fast on unknown names
+        # fail fast on unknown names; "pallas" is batch-only, so it
+        # validates against the batched registry and run() rejects it
+        if engine == "pallas":
+            make_batched_event_core(engine)
+        else:
+            make_event_core(engine)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: List[Request],
@@ -150,270 +455,143 @@ class Simulator:
             rr_dispatch: bool = False,
             max_events: int = 5_000_000,
             epoch_hook: Optional[Callable] = None) -> SimResult:
-        # clone: requests carry mutable runtime state; runs must not interact
-        requests = [dataclasses.replace(r) for r in requests]
-        sc = self.scenario
-        cluster = ClusterState(sc["nodes"], sc["instances"], sc["placement"],
-                               sc["transport_delay"])
+        if self.engine == "pallas":
+            raise ValueError(
+                "engine='pallas' is the batched [B, S] kernel backend; "
+                "use run_batch, or engine='numpy' for single traces")
+        rep = _Replica(self.scenario, self.epoch_interval, self.drop_expired,
+                       requests, placement, allocation, rr_dispatch,
+                       epoch_hook)
         # per-run core: the numpy backend carries mutable scratch + a
         # prepare cache, so sharing one across overlapping runs (threads,
         # nested runs from an epoch_hook) would cross-contaminate state
         core = make_event_core(self.engine)
-        # replica sets as int arrays: route_ai is one vectorized argmin
-        service_sids: Dict[str, np.ndarray] = {
-            k: np.asarray(v, np.int64)
-            for k, v in sc["service_sids"].items()}
-        ran_packet = sc["ran_packet_delay"]
-        delta = sc["transport_delay"]
-
-        heap: List[Tuple[float, int, str, object]] = []
-        seq = 0
-
-        def push(t: float, kind: str, payload) -> None:
-            nonlocal seq
-            heapq.heappush(heap, (t, seq, kind, payload))
-            seq += 1
-
-        horizon = max(r.arrival for r in requests) if requests else 0.0
-        n_epochs = int(horizon / self.epoch_interval) + 3
-        for k in range(1, n_epochs):
-            push(k * self.epoch_interval, "epoch", k)
-
-        for r in requests:
-            if r.cls == RequestClass.RAN:
-                push(r.arrival, "du", r)
-            else:
-                push(r.arrival + ran_packet, "ai_route", r)
-
-        # node availability windows (scenario fault injection): everything
-        # resident on the node at t0 goes dark until t1
-        for node, t0, t1 in sc.get("outages", ()):
-            push(float(t0), "outage", (int(node), float(t1)))
-
-        dropped: set = set()
-        migrations: List[Tuple[float, MigrationAction]] = []
-        epochs: List[EpochRecord] = []
-        rr_counter = [0] if rr_dispatch else None
-
-        # per-interval outcome accumulators (for the critic label r_k)
-        win = {RequestClass.LARGE_AI: [0, 0], RequestClass.SMALL_AI: [0, 0],
-               RequestClass.RAN: [0, 0]}
-        arrivals_win: Dict[str, int] = {}
-
-        def record_outcome(req: Request, ok: bool) -> None:
-            w = win[req.cls]
-            w[0] += int(ok)
-            w[1] += 1
-
-        def finish_request(req: Request, t: float) -> None:
-            req.finish = t
-            record_outcome(req, req.fulfilled())
-
-        def drop_request(req: Request) -> None:
-            dropped.add(req.rid)
-            record_outcome(req, False)
-
-        t = 0.0
-        n_events = 0
-        truncated = False
-        allocation.allocate(cluster, t)
-        dirty: set = set()
-        last_full = 0.0
-        realloc_refresh = 0.25   # urgency drift: full re-solve at least 4 Hz
-
-        def mark(sid: int) -> None:
-            dirty.add(int(cluster.placement[sid]))
-
-        def cleanup_drops() -> None:
-            if not self.drop_expired:
-                return
-            expired = (cluster.head_mask & ~cluster.head_started
-                       & (cluster.head_deadline <= t))
-            for sid in np.nonzero(expired)[0]:
-                while (cluster.head_mask[sid]
-                       and not cluster.head_started[sid]
-                       and cluster.head_deadline[sid] <= t):
-                    job = cluster.pop_job(sid)
-                    drop_request(job.req)
-                    mark(sid)
-
-        def handle_completion(sid: int) -> None:
-            job = cluster.pop_job(sid)
-            job.rem_g = job.rem_c = 0.0
-            req = job.req
-            inst = cluster.instances[sid]
-            if inst.category == InstanceCategory.DU:
-                # RAN chain: DU done -> transport -> CU-UP
-                cu_sid = cluster.cuup_of(req.cell)
-                hops = cluster.hops(cluster.placement[sid],
-                                    cluster.placement[cu_sid])
-                push(t + hops * delta, "cuup", req)
-            elif inst.category == InstanceCategory.CUUP:
-                finish_request(req, t)
-                cluster.observe_cuup_time(req.cell, t - req.stage_entered)
-            else:                                   # AI service done
-                finish_request(req, t)
-
-        def build_snapshot(epoch: int) -> EpochSnapshot:
-            util = cluster.utilization(t)
-            fl = {}
-            for cls, w in win.items():
-                fl[cls.value] = (w[0] / w[1]) if w[1] else 1.0
-            rates = {k: v / self.epoch_interval
-                     for k, v in arrivals_win.items()}
-            return EpochSnapshot(
-                t=t, epoch=epoch, nodes=cluster.nodes,
-                instances=cluster.instances,
-                placement=cluster.placement.copy(),
-                reconfig_until=cluster.reconfig_until.copy(),
-                gpu_util=util["gpu_util"], cpu_util=util["cpu_util"],
-                ran_floor_g=util["ran_floor_g"],
-                ran_floor_c=util["ran_floor_c"],
-                vram_used=util["vram_used"],
-                vram_headroom=util["vram_headroom"],
-                queue_len=util["queue_len"], psi_g=util["psi_g"],
-                psi_c=util["psi_c"], omega=util["omega"],
-                alloc_g=cluster.alloc_g.copy(),
-                alloc_c=cluster.alloc_c.copy(),
-                kv_held=cluster.kv_active_vec(),
-                recent_fulfill=fl, arrival_rate=rates)
-
-        def close_epoch_window(rec: Optional[EpochRecord]) -> None:
-            if rec is not None:
-                counts = (win[RequestClass.LARGE_AI][1],
-                          win[RequestClass.SMALL_AI][1],
-                          win[RequestClass.RAN][1])
-                rec.fulfill = tuple(
-                    (win[c][0] / win[c][1]) if win[c][1] else 1.0
-                    for c in (RequestClass.LARGE_AI, RequestClass.SMALL_AI,
-                              RequestClass.RAN))
-                rec.counts = counts
-            for w in win.values():
-                w[0] = w[1] = 0
-            arrivals_win.clear()
-
-        current_rec: Optional[EpochRecord] = None
+        cluster = rep.cluster
+        heap = rep.heap
 
         # single loop over timed events AND queue completions: it must keep
         # draining after the heap empties (a stage completion can push the
         # next stage — e.g. DU -> CU-UP — or work may resume after an
         # outage/reconfiguration ends)
         while True:
-            t_comp, sid_comp = core.next_completion(cluster, t)
+            t_comp, sid_comp = core.next_completion(cluster, rep.t)
             t_ev = heap[0][0] if heap else INF
             t_next = min(t_comp, t_ev)
             if not math.isfinite(t_next):
                 break
-            if n_events >= max_events:
-                truncated = True
+            if rep.n_events >= max_events:
+                rep.truncated = True
                 break
-            core.advance(cluster, t, t_next - t)
-            t = t_next
-            n_events += 1
+            core.advance(cluster, rep.t, t_next - rep.t)
+            rep.t = t_next
+            rep.n_events += 1
 
             if t_comp <= t_ev:
-                mark(sid_comp)
-                handle_completion(sid_comp)
+                rep.mark(sid_comp)
+                rep.handle_completion(sid_comp)
             else:
-                _, _, kind, payload = heapq.heappop(heap)
-                if kind == "du":
-                    req: Request = payload
-                    sid = cluster.du_of(req.cell)
-                    cluster.push_job(sid, Job(
-                        req=req, rem_g=max(req.du_work_g, 1.0),
-                        rem_c=max(req.du_work_c, 0.0),
-                        abs_deadline=req.arrival + req.deadline))
-                    arrivals_win["ran"] = arrivals_win.get("ran", 0) + 1
-                    mark(sid)
-                elif kind == "cuup":
-                    req = payload
-                    sid = cluster.cuup_of(req.cell)
-                    req.stage_entered = t
-                    cluster.push_job(sid, Job(
-                        req=req, rem_g=0.0,
-                        rem_c=max(req.cuup_work_c, 1e-9),
-                        abs_deadline=req.arrival + req.deadline))
-                    mark(sid)
-                elif kind == "ai_route":
-                    req = payload
-                    sids = service_sids[req.service]
-                    sid = cluster.route_ai(sids, t, rr_counter)
-                    req.target_sid = sid
-                    # transport: DU node -> AI node hops
-                    du_node = cluster.placement[cluster.du_of(req.cell)]
-                    ai_node = cluster.placement[sid]
-                    hops = cluster.hops(du_node, ai_node)
-                    push(t + hops * delta, "ai_enqueue", (req, sid))
-                    arrivals_win[req.service] = \
-                        arrivals_win.get(req.service, 0) + 1
-                elif kind == "ai_enqueue":
-                    req, sid = payload
-                    req.stage_entered = t
-                    cluster.push_job(sid, Job(
-                        req=req, rem_g=max(req.ai_work_g, 1.0),
-                        rem_c=max(req.ai_work_c, 0.0),
-                        abs_deadline=req.arrival + req.deadline,
-                        kv_bytes=req.kv_bytes))
-                    mark(sid)
-                elif kind == "epoch":
-                    k: int = payload
-                    close_epoch_window(current_rec)
-                    snap = build_snapshot(k)
-                    action = placement.decide(snap)
-                    shortlist = getattr(placement, "last_shortlist", [])
-                    if action is not None:
-                        ok = (cluster.migration_feasible(action)
-                              and cluster.available(action.sid, t))
-                        if ok:
-                            inst = cluster.instances[action.sid]
-                            committed = CommittedMigration(
-                                sid=action.sid, src=action.src,
-                                dst=action.dst, category=inst.category)
-                            cluster.apply_migration(committed, t)
-                            # landing on a node mid-outage: the instance
-                            # stays dark until the node itself returns
-                            until = t + inst.reconfig_s
-                            for node, o0, o1 in sc.get("outages", ()):
-                                if int(node) == action.dst and o0 <= t < o1:
-                                    until = max(until, float(o1))
-                            cluster.reconfig_until[action.sid] = until
-                            migrations.append((t, committed))
-                            push(until, "mig_done", action.sid)
-                        else:
-                            action = None
-                    current_rec = EpochRecord(
-                        epoch=k, t=t, snapshot=snap, action=action,
-                        shortlist=list(shortlist))
-                    epochs.append(current_rec)
-                    if epoch_hook is not None:
-                        epoch_hook(current_rec, cluster)
-                elif kind == "mig_done":
-                    mark(payload)   # availability flip triggers realloc
-                elif kind == "outage":
-                    node, until = payload
-                    for sid in range(cluster.S):
-                        if cluster.placement[sid] == node:
-                            cluster.reconfig_until[sid] = max(
-                                cluster.reconfig_until[sid], until)
-                            mark(sid)
-                    push(until, "outage_end", node)
-                elif kind == "outage_end":
-                    for sid in range(cluster.S):
-                        if cluster.placement[sid] == payload:
-                            mark(sid)   # back online: trigger realloc
-                if kind == "epoch":
-                    dirty.update(range(cluster.N))
+                rep.handle_timed()
 
-            cleanup_drops()
-            if t - last_full >= realloc_refresh or len(dirty) >= cluster.N:
-                allocation.allocate(cluster, t)
-                last_full = t
-            elif dirty:
-                allocation.allocate(cluster, t, sorted(dirty))
-            dirty.clear()
+            rep.cleanup_drops()
+            nodes = rep.realloc_nodes()
+            if nodes is None:
+                allocation.allocate(cluster, rep.t)
+            elif nodes:
+                allocation.allocate(cluster, rep.t, nodes)
 
-        close_epoch_window(current_rec)
-        return SimResult(requests=requests, dropped=dropped,
-                         migrations=migrations, epochs=epochs,
-                         infeasible_events=cluster.infeasible_events,
-                         n_events=n_events, truncated=truncated)
+        return rep.result()
+
+    # ------------------------------------------------------------------ #
+    def run_batch(self, workloads: Sequence[List[Request]],
+                  placements: Sequence[PlacementPolicy],
+                  allocations: Sequence[AllocationPolicy],
+                  rr_dispatch: bool = False,
+                  max_events: int = 5_000_000,
+                  epoch_hooks: Optional[Sequence[Optional[Callable]]] = None,
+                  engine: Optional[str] = None) -> List[SimResult]:
+        """Advance B independent replicas of this scenario in lockstep.
+
+        ``workloads[b]`` / ``placements[b]`` / ``allocations[b]`` belong to
+        replica ``b`` (policy objects are stateful — pass one instance per
+        replica).  The per-event hot pair runs once per tick over the
+        whole ``[B, S]`` block; event handling, heaps, and epoch logic
+        stay per-replica, so every replica's discrete outcome is
+        identical to a solo ``run`` with the same seed.  ``engine``
+        overrides the batched core (``numpy | scalar | jax | pallas``);
+        the default reuses the simulator's engine name.
+        """
+        B = len(workloads)
+        if len(placements) != B or len(allocations) != B \
+                or (epoch_hooks is not None and len(epoch_hooks) != B):
+            raise ValueError(
+                "run_batch needs one placement/allocation (and epoch_hook, "
+                f"when given) per replica: got {B} workloads, "
+                f"{len(placements)} placements, {len(allocations)} "
+                "allocations")
+        hooks = epoch_hooks if epoch_hooks is not None else [None] * B
+        reps = [_Replica(self.scenario, self.epoch_interval,
+                         self.drop_expired, workloads[b], placements[b],
+                         allocations[b], rr_dispatch, hooks[b])
+                for b in range(B)]
+        block = ClusterBlock([rep.cluster for rep in reps])
+        core = make_batched_event_core(engine or self.engine)
+        # the cross-replica allocation gather is exact only for the
+        # paper's allocator; other policies re-solve per replica (the
+        # same code path a solo run uses)
+        fast_alloc = all(type(a) is DeadlineAwareAllocation
+                         for a in allocations)
+
+        t_vec = np.zeros(B)
+        t_ev = np.array([rep.heap[0][0] if rep.heap else INF
+                         for rep in reps])
+        can_step = np.zeros(B, bool)
+        n_live = B
+        node_lists: List = [()] * B
+
+        while n_live:
+            for b, rep in enumerate(reps):
+                can_step[b] = not rep.done and rep.n_events < max_events
+            t_comp, sids = core.step(block, t_vec, t_ev, can_step)
+            t_next = np.minimum(t_comp, t_ev)
+            finite = np.isfinite(t_next)
+            np.copyto(t_vec, t_next, where=can_step & finite)
+
+            any_alloc = False
+            for b, rep in enumerate(reps):
+                node_lists[b] = ()
+                if rep.done:
+                    continue
+                if not finite[b]:
+                    rep.done = True            # drained: clean end
+                    n_live -= 1
+                    continue
+                if not can_step[b]:
+                    rep.truncated = True       # finite work left at budget
+                    rep.done = True
+                    n_live -= 1
+                    continue
+                rep.t = float(t_next[b])
+                rep.n_events += 1
+                if t_comp[b] <= t_ev[b]:
+                    sid = int(sids[b])
+                    rep.mark(sid)
+                    rep.handle_completion(sid)
+                else:
+                    rep.handle_timed()
+                rep.cleanup_drops()
+                nodes = rep.realloc_nodes()
+                if nodes == ():
+                    pass
+                elif fast_alloc:
+                    node_lists[b] = nodes          # None = full re-solve
+                    any_alloc = True
+                elif nodes is None:
+                    rep.allocation.allocate(rep.cluster, rep.t)
+                else:
+                    rep.allocation.allocate(rep.cluster, rep.t, nodes)
+                t_ev[b] = rep.heap[0][0] if rep.heap else INF
+
+            if any_alloc:
+                deadline_allocate_block(block, t_vec, node_lists)
+
+        return [rep.result() for rep in reps]

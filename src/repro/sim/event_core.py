@@ -26,6 +26,15 @@ owned by :class:`~repro.sim.cluster.ClusterState`:
 The scalar and numpy cores are bit-for-bit equivalent by construction:
 both evaluate the identical IEEE-754 double expressions per instance
 (``rem/rate`` divisions, ``min`` clamps, first-index argmin tie-break).
+
+Batched multi-seed runs (``Simulator.run_batch``) use the *batched*
+cores below (``make_batched_event_core``): B replicas' arrays stack into
+one ``[B, S]`` :class:`~repro.sim.cluster.ClusterBlock` and the whole
+block advances per lockstep tick — ``numpy`` (elementwise-identical to
+the solo pair, so batched outcomes are bit-for-bit the solo outcomes),
+``scalar`` (per-row reference), ``jax`` (one fused jitted device call
+per tick), and ``pallas`` (the fused step as a TPU kernel,
+:mod:`repro.kernels.event_step`, interpret-mode on CPU).
 """
 from __future__ import annotations
 
@@ -262,3 +271,203 @@ def make_event_core(engine: str):
                 "engine='jax' needs jax installed; use engine='numpy'"
             ) from err
     raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")
+
+
+# --------------------------------------------------------------------------- #
+# batched cores: B replicas advance as one [B, S] block
+# --------------------------------------------------------------------------- #
+class NumpyBatchedEventCore:
+    """[B, S] fused step: per-row masked argmin + one block-wide advance.
+
+    ``step`` mirrors the solo pair exactly — it evaluates the identical
+    IEEE-754 expressions per (replica, instance) element that
+    :class:`NumpyEventCore` evaluates per instance — so a replica's event
+    schedule in a batch is bit-for-bit the schedule of its solo run.
+    Rows whose ``can`` flag is down (drained or at the event budget)
+    contribute ``dt = 0`` and are left untouched, matching the solo
+    core's early return on ``dt <= 0``.
+    """
+
+    name = "numpy"
+
+    def __init__(self) -> None:
+        self._shape = None
+
+    def _ensure_scratch(self, B: int, S: int) -> None:
+        if self._shape != (B, S):
+            self._shape = (B, S)
+            self._avail = np.empty((B, S), bool)
+            self._b1 = np.empty((B, S), bool)     # rem_g > 0
+            self._b2 = np.empty((B, S), bool)     # rem_c > 0
+            self._bt = np.empty((B, S), bool)
+            self._bu = np.empty((B, S), bool)
+            self._dt_g = np.empty((B, S))
+            self._dt_c = np.empty((B, S))
+            self._cand = np.empty((B, S))
+            self._tx = np.empty((B, S))
+            self._delta = np.empty((B, S))
+            self._rem = np.empty((B, S))
+            self._rows = np.arange(B)
+
+    def step(self, block, t_vec: np.ndarray, t_ev: np.ndarray,
+             can: np.ndarray):
+        """One lockstep tick.  Returns ``(t_comp [B], sid [B])`` and
+        advances every ``can`` row with a finite next event in place."""
+        B, S = block.B, block.S
+        self._ensure_scratch(B, S)
+        g, c = block.alloc_g, block.alloc_c
+        rg, rc = block.head_rem_g, block.head_rem_c
+        avail, b1, b2 = self._avail, self._b1, self._b2
+        t_col = t_vec[:, None]
+
+        # prepare: availability + per-stage service times (shared by the
+        # completion scan and the advance, like the solo prepare cache)
+        np.less_equal(block.reconfig_until, t_col, out=avail)
+        np.logical_and(avail, block.head_mask, out=avail)
+        np.greater(rg, 0.0, out=b1)
+        np.greater(rc, 0.0, out=b2)
+        self._dt_g.fill(0.0)
+        self._dt_c.fill(0.0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            np.divide(rg, g, out=self._dt_g, where=b1)
+            np.divide(rc, c, out=self._dt_c, where=b2)
+
+        # next completion: one masked argmin per row
+        cand = self._cand
+        np.add(self._dt_g, self._dt_c, out=cand)
+        np.add(cand, t_col, out=cand)
+        np.logical_not(avail, out=self._bt)
+        np.copyto(cand, INF, where=self._bt)
+        sid = np.argmin(cand, axis=1)
+        t_comp = cand[self._rows, sid]
+
+        # advance every live row to its own next event time
+        t_next = np.minimum(t_comp, t_ev)
+        dt = np.where(can & np.isfinite(t_next), t_next - t_vec, 0.0)
+        dt_col = dt[:, None]
+        tx, delta, rem_dt = self._tx, self._delta, self._rem
+        run_g, btmp, baux = self._bt, self._bu, self._b1
+        np.greater(g, 0.0, out=run_g)
+        np.logical_and(run_g, b1, out=run_g)             # GPU stage serves:
+        np.logical_and(run_g, avail, out=run_g)          # rem_g>0, g>0, avail
+        np.logical_and(run_g, dt_col > 0.0, out=run_g)   # row is advancing
+        np.minimum(self._dt_g, dt_col, out=tx)           # tg = min(dt, rg/g)
+        delta.fill(0.0)
+        np.multiply(g, tx, out=delta, where=run_g)       # dg
+        np.subtract(rg, delta, out=rg)                   # rem_g -= dg
+        np.subtract(dt_col, tx, out=rem_dt)              # time left after GPU
+        # CPU progresses only once the GPU residual is exhausted (Eq. 1
+        # stage ordering) — which also excludes stalled heads
+        np.less_equal(rg, 0.0, out=btmp)
+        np.logical_and(btmp, avail, out=btmp)
+        np.logical_and(btmp, b2, out=btmp)               # rem_c > 0
+        np.greater(rem_dt, 0.0, out=baux)
+        np.logical_and(btmp, baux, out=btmp)
+        np.greater(c, 0.0, out=baux)
+        np.logical_and(btmp, baux, out=btmp)             # cpu_ok
+        np.minimum(self._dt_c, rem_dt, out=tx)           # tc = min(rem, rc/c)
+        delta.fill(0.0)
+        np.multiply(c, tx, out=delta, where=btmp)        # dc
+        np.subtract(rc, delta, out=rc)                   # rem_c -= dc
+        np.logical_or(run_g, btmp, out=run_g)            # any progress
+        np.logical_or(block.head_started, run_g,
+                      out=block.head_started)
+        return t_comp, sid
+
+
+class ScalarBatchedEventCore:
+    """Reference batched core: the scalar solo pair per replica row."""
+
+    name = "scalar"
+
+    def __init__(self) -> None:
+        self._core = ScalarEventCore()
+
+    def step(self, block, t_vec, t_ev, can):
+        B = block.B
+        t_comp = np.full(B, INF)
+        sid = np.full(B, -1, np.int64)
+        for b, cl in enumerate(block.clusters):
+            t = float(t_vec[b])
+            tc, s = self._core.next_completion(cl, t)
+            t_comp[b] = tc
+            sid[b] = s
+            if can[b]:
+                t_next = min(tc, float(t_ev[b]))
+                if np.isfinite(t_next):
+                    self._core.advance(cl, t, t_next - t)
+        return t_comp, sid
+
+
+class JaxBatchedEventCore:
+    """jax-jitted fused [B, S] step (float64) — the accelerator-resident
+    growth path.  Discrete outcomes match the numpy batched core; event
+    times may differ by ulps (XLA multiply-add fusion)."""
+
+    name = "jax"
+    _interpret = None            # PallasBatchedEventCore overrides
+
+    def __init__(self) -> None:
+        from jax.experimental import enable_x64       # lazy: needs jax
+        from repro.kernels import event_core as kec
+        self._kernel = kec
+        self._x64 = enable_x64
+
+    def _call(self, rg, rc, g, c, avail, t_vec, t_ev, can):
+        return self._kernel.event_step_jax(rg, rc, g, c, avail,
+                                           t_vec, t_ev, can)
+
+    def step(self, block, t_vec, t_ev, can):
+        avail = block.head_mask & (block.reconfig_until <= t_vec[:, None])
+        with self._x64():
+            rg, rc, started, t_comp, sid = self._call(
+                block.head_rem_g, block.head_rem_c,
+                block.alloc_g, block.alloc_c, avail, t_vec, t_ev, can)
+            block.head_rem_g[...] = np.asarray(rg)
+            block.head_rem_c[...] = np.asarray(rc)
+            block.head_started |= np.asarray(started)
+            return np.asarray(t_comp), np.asarray(sid, np.int64)
+
+
+class PallasBatchedEventCore(JaxBatchedEventCore):
+    """The [B, S] step as a Pallas kernel (one grid row per replica).
+
+    Compiled on TPU; everywhere else it runs in interpret mode, which
+    keeps float64 and therefore the same discrete-outcome bar as the jax
+    core.  See :mod:`repro.kernels.event_step`.
+    """
+
+    name = "pallas"
+
+    def __init__(self) -> None:
+        import jax
+        super().__init__()
+        from repro.kernels import event_step as kes
+        self._step_kernel = kes
+        self._interpret = jax.default_backend() != "tpu"
+
+    def _call(self, rg, rc, g, c, avail, t_vec, t_ev, can):
+        return self._step_kernel.event_step(rg, rc, g, c, avail,
+                                            t_vec, t_ev, can,
+                                            interpret=self._interpret)
+
+
+BATCH_ENGINES = ("numpy", "scalar", "jax", "pallas")
+
+
+def make_batched_event_core(engine: str):
+    """``engine`` -> batched event core (raises on unknown names)."""
+    if engine == "numpy":
+        return NumpyBatchedEventCore()
+    if engine == "scalar":
+        return ScalarBatchedEventCore()
+    if engine in ("jax", "pallas"):
+        try:
+            return JaxBatchedEventCore() if engine == "jax" \
+                else PallasBatchedEventCore()
+        except ImportError as err:
+            raise RuntimeError(
+                f"engine={engine!r} needs jax installed; "
+                "use engine='numpy'") from err
+    raise ValueError(
+        f"unknown batched engine {engine!r}; known: {BATCH_ENGINES}")

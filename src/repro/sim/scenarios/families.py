@@ -135,19 +135,21 @@ def flash_crowd(seed: int = 0, n_spikes: int = 3, magnitude: float = 4.0,
 
 # --------------------------------------------------------------------------- #
 @register("heavy-tail")
-def heavy_tail(seed: int = 0, fraction: float = 0.2, alpha: float = 1.2,
-               cap: float = 30.0, rho: float = 0.9,
-               n_ai_requests: int = 5000) -> Dict:
-    """Heavy-tailed request sizes: a seeded ``fraction`` of AI requests
-    carry a Pareto(α) work multiplier (capped) — a few requests dominate
-    the backlog, stressing the urgency-weighted allocator."""
+def heavy_tail(seed: int = 0, alpha: float = 1.2, cap: float = 8.0,
+               rho: float = 0.9, n_ai_requests: int = 5000) -> Dict:
+    """Heavy-tailed request sizes: AI request lengths are sampled from a
+    capped Pareto(α) directly (mean-matched to the default lognormal law
+    so ρ keeps its meaning, with the cap extending ``cap×`` past the
+    lognormal clip) — a few requests dominate the backlog, stressing the
+    urgency-weighted allocator."""
     sc = paper_scenario()
-    return _finish(sc, "heavy-tail", seed,
-                   {"fraction": fraction, "alpha": alpha, "cap": cap,
-                    "rho": rho},
-                   rho, n_ai_requests,
-                   heavy_tail={"fraction": float(fraction),
-                               "alpha": float(alpha), "cap": float(cap)})
+    sc = _finish(sc, "heavy-tail", seed,
+                 {"alpha": alpha, "cap": cap, "rho": rho},
+                 rho, n_ai_requests)
+    sc["workload"].update(ai_length_kind="pareto",
+                          ai_length_alpha=float(alpha),
+                          ai_length_cap=float(cap))
+    return sc
 
 
 # --------------------------------------------------------------------------- #

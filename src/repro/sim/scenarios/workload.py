@@ -10,8 +10,11 @@ adds the time/size structure the non-stationary families need:
     cumulative intensity), yielding an inhomogeneous Poisson process with
     intensity λ·m(t) — ``diurnal`` (sinusoidal m) and ``flash-crowd``
     (piecewise-constant spike windows).
-  * ``heavy_tail`` scales a seeded fraction of AI request sizes by a
-    Pareto multiplier (heavy-tailed Φ^g / γ_q).
+  * heavy-tailed sizes come straight from the base generator: the recipe
+    sets ``ai_length_kind="pareto"`` and the request *lengths* are drawn
+    from a mean-matched capped Pareto (heavy-tailed Φ^g / γ_q) — the
+    legacy ``heavy_tail`` post-hoc work-multiplier recipe is still
+    honored for hand-built scenario dicts.
 
 Everything is deterministic in (scenario, seed): the recipe is data, the
 randomness comes only from seeded generators.
@@ -29,7 +32,8 @@ from repro.sim.workload import (WorkloadConfig, generate_workload,
 # WorkloadConfig fields a scenario recipe may set
 _CFG_KEYS = ("rho", "n_ai_requests", "large_fraction", "ran_per_ai",
              "urllc_fraction", "ran_burst_prob", "n_cells", "ai_capacity",
-             "large_deadline", "small_deadline")
+             "large_deadline", "small_deadline",
+             "ai_length_kind", "ai_length_alpha", "ai_length_cap")
 _TUPLE_KEYS = ("large_deadline", "small_deadline")
 
 _HEAVY_TAIL_STREAM = 0x48545F      # rng stream tag ("HT_")

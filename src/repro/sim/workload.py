@@ -64,6 +64,13 @@ class WorkloadConfig:
     ran_burst_prob: float = 0.12     # P(arrival is a 2–3 request burst)
     seed: int = 0
     n_cells: int = 6
+    # AI request-length law: "lognormal" (Azure-trace default) or "pareto"
+    # (heavy-tailed lengths sampled directly: mean-matched to the lognormal
+    # spec so ρ keeps its meaning, capped at ai_length_cap × the lognormal
+    # hi clip so the tail genuinely extends past it)
+    ai_length_kind: str = "lognormal"
+    ai_length_alpha: float = 1.2     # Pareto tail index (α > 1)
+    ai_length_cap: float = 8.0       # cap multiplier on the hi clip
     # deadlines (paper: "100 ms – a few seconds" for Q^e)
     large_deadline: Tuple[float, float] = (1.0, 4.0)
     small_deadline: Tuple[float, float] = (0.1, 0.3)
@@ -83,9 +90,45 @@ def _lognormal_len(rng, mu, sigma, lo, hi, size):
     return np.clip(x, lo, hi).astype(np.int64)
 
 
+def _pareto_scale(spec, alpha: float) -> float:
+    """Pareto scale x_m = mean·(α−1)/α — the single source of the
+    mean-matching rule that keeps λ and ρ calibrated when the length law
+    swaps from lognormal to Pareto."""
+    if alpha <= 1.0:
+        raise ValueError(
+            f"ai_length_alpha must be > 1 (got {alpha}): at α <= 1 the "
+            "Pareto mean diverges and the λ/ρ calibration is undefined")
+    return mean_tokens(spec) * (alpha - 1.0) / alpha
+
+
+def _pareto_len(rng, spec, alpha, cap, size):
+    """Lengths drawn from a capped Pareto(α) matched to the spec mean.
+
+    The mean-matched scale makes the uncapped mean equal the (clipped)
+    lognormal mean; the cap extends ``cap×`` past the lognormal hi clip —
+    the tail the post-hoc work-multiplier used to fake.
+    """
+    _mu, _sigma, lo, hi = spec
+    xm = _pareto_scale(spec, alpha)
+    x = xm * (1.0 + rng.pareto(alpha, size))
+    return np.clip(x, lo, hi * cap).astype(np.int64)
+
+
 def mean_tokens(spec) -> float:
     mu, sigma, lo, hi = spec
     return float(np.clip(math.exp(mu + sigma ** 2 / 2), lo, hi))
+
+
+def mean_tokens_cfg(spec, cfg: WorkloadConfig) -> float:
+    """Mean length under the configured law (capped-Pareto closed form)."""
+    if cfg.ai_length_kind != "pareto":
+        return mean_tokens(spec)
+    _mu, _sigma, _lo, hi = spec
+    alpha = cfg.ai_length_alpha
+    xm = _pareto_scale(spec, alpha)
+    c = hi * cfg.ai_length_cap
+    # E[min(X, c)] for X ~ Pareto(α, x_m)
+    return xm * (alpha - (xm / c) ** (alpha - 1.0)) / (alpha - 1.0)
 
 
 def mean_request_work(models: Dict[str, List[ServiceWorkModel]],
@@ -93,8 +136,10 @@ def mean_request_work(models: Dict[str, List[ServiceWorkModel]],
     """Mix-weighted mean Φ^g (W̄ in the ρ definition)."""
     large = np.mean([m.flops_per_token for m in models["large"]])
     small = np.mean([m.flops_per_token for m in models["small"]])
-    w_l = large * (mean_tokens(LARGE_PROMPT) + mean_tokens(LARGE_OUTPUT))
-    w_s = small * (mean_tokens(SMALL_PROMPT) + mean_tokens(SMALL_OUTPUT))
+    w_l = large * (mean_tokens_cfg(LARGE_PROMPT, cfg)
+                   + mean_tokens_cfg(LARGE_OUTPUT, cfg))
+    w_s = small * (mean_tokens_cfg(SMALL_PROMPT, cfg)
+                   + mean_tokens_cfg(SMALL_OUTPUT, cfg))
     return cfg.large_fraction * w_l + (1 - cfg.large_fraction) * w_s
 
 
@@ -116,10 +161,20 @@ def generate_workload(cfg: WorkloadConfig,
     is_large = rng.random(cfg.n_ai_requests) < cfg.large_fraction
     cells = rng.integers(0, cfg.n_cells, cfg.n_ai_requests)
 
-    lp = _lognormal_len(rng, *LARGE_PROMPT, cfg.n_ai_requests)
-    lo = _lognormal_len(rng, *LARGE_OUTPUT, cfg.n_ai_requests)
-    sp = _lognormal_len(rng, *SMALL_PROMPT, cfg.n_ai_requests)
-    so = _lognormal_len(rng, *SMALL_OUTPUT, cfg.n_ai_requests)
+    pareto = cfg.ai_length_kind == "pareto"
+    if pareto:
+        a, c = cfg.ai_length_alpha, cfg.ai_length_cap
+        lp = _pareto_len(rng, LARGE_PROMPT, a, c, cfg.n_ai_requests)
+        lo = _pareto_len(rng, LARGE_OUTPUT, a, c, cfg.n_ai_requests)
+        sp = _pareto_len(rng, SMALL_PROMPT, a, c, cfg.n_ai_requests)
+        so = _pareto_len(rng, SMALL_OUTPUT, a, c, cfg.n_ai_requests)
+        mean_l = mean_tokens(LARGE_PROMPT) + mean_tokens(LARGE_OUTPUT)
+        mean_s = mean_tokens(SMALL_PROMPT) + mean_tokens(SMALL_OUTPUT)
+    else:
+        lp = _lognormal_len(rng, *LARGE_PROMPT, cfg.n_ai_requests)
+        lo = _lognormal_len(rng, *LARGE_OUTPUT, cfg.n_ai_requests)
+        sp = _lognormal_len(rng, *SMALL_PROMPT, cfg.n_ai_requests)
+        so = _lognormal_len(rng, *SMALL_OUTPUT, cfg.n_ai_requests)
 
     for i in range(cfg.n_ai_requests):
         if is_large[i]:
@@ -127,11 +182,15 @@ def generate_workload(cfg: WorkloadConfig,
             flops, cpu, kv = model.work(rng, int(lp[i]), int(lo[i]))
             deadline = rng.uniform(*cfg.large_deadline)
             cls = RequestClass.LARGE_AI
+            if pareto:        # KV grows sublinearly with context length
+                kv *= min((int(lp[i]) + int(lo[i])) / mean_l, 4.0)
         else:
             model = models["small"][rng.integers(len(models["small"]))]
             flops, cpu, kv = model.work(rng, int(sp[i]), int(so[i]))
             deadline = rng.uniform(*cfg.small_deadline)
             cls = RequestClass.SMALL_AI
+            if pareto:
+                kv *= min((int(sp[i]) + int(so[i])) / mean_s, 4.0)
         requests.append(Request(
             rid=rid, cls=cls, arrival=float(arrivals[i]), deadline=deadline,
             cell=int(cells[i]), ai_work_g=flops, ai_work_c=cpu, kv_bytes=kv,

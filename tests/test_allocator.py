@@ -192,3 +192,96 @@ def test_compact_scalar_solver_matches_active_set_np(seed, feas):
     # flipped pin differs by ~the whole allocation and still fails
     np.testing.assert_allclose(np.array(small), ref[idx],
                                rtol=1e-9, atol=float(cap) * 1e-12)
+
+
+@pytest.mark.parametrize("seed", range(30))
+@pytest.mark.parametrize("feas", (True, False))
+def test_row_solver_matches_active_set_np(seed, feas):
+    """`_active_set_rows` (the padded multi-problem engine solver) must
+    agree with the property-tested vector implementation row by row,
+    regardless of how much zero padding the batching added."""
+    from repro.sim.cluster import _active_set_rows, _pow2_at_least
+
+    psi, omega, floors, cap, mask = _rand_inputs(seed, feas)
+    w = np.sqrt(np.where(mask, np.maximum(psi, 0.0), 0.0)
+                * np.where(mask, np.maximum(omega, 0.0), 0.0))
+    ref, _, _ = active_set_np(w, np.where(mask, floors, 0.0), float(cap),
+                              mask)
+    idx = np.nonzero(mask)[0]
+    k = len(idx)
+    for K in (_pow2_at_least(k), 2 * _pow2_at_least(k)):   # pad-invariance
+        wr = np.zeros((1, K))
+        fr = np.zeros((1, K))
+        wr[0, :k] = w[idx]
+        fr[0, :k] = floors[idx]
+        rows = _active_set_rows(wr, fr, np.array([float(cap)]))
+        np.testing.assert_allclose(rows[0, :k], ref[idx],
+                                   rtol=1e-9, atol=float(cap) * 1e-12)
+
+
+@pytest.mark.parametrize("policy", ("equal-share", "maxweight", "market"))
+def test_compact_baselines_match_full_width_reference(policy):
+    """The compact busy-instances-per-node baselines must reproduce the
+    historical full-[N, S] `allocator_inputs` + `active_set_np` path
+    (ulp-level: tree sums vs pairwise sums)."""
+    from repro.core.baselines import (EqualShareAllocation,
+                                     MarketAllocation, MaxWeightAllocation)
+    from repro.sim import make_scenario, workload_for
+    from repro.sim.cluster import ClusterState, Job
+
+    sc = make_scenario("paper", n_ai_requests=60)
+    reqs, _ = workload_for(sc, seed=3)
+    cluster = ClusterState(sc["nodes"], sc["instances"], sc["placement"],
+                           sc["transport_delay"])
+    # enqueue a mixed backlog across DU / CU-UP / AI instances
+    for i, r in enumerate(reqs[:40]):
+        if r.cls.value == "RAN":
+            sid = cluster.du_of(r.cell)
+            cluster.push_job(sid, Job(req=r, rem_g=max(r.du_work_g, 1.0),
+                                      rem_c=0.0,
+                                      abs_deadline=r.arrival + r.deadline))
+        else:
+            sid = sc["service_sids"][r.service][i % 2]
+            cluster.push_job(sid, Job(req=r, rem_g=max(r.ai_work_g, 1.0),
+                                      rem_c=max(r.ai_work_c, 0.0),
+                                      abs_deadline=r.arrival + r.deadline))
+    t = 0.05
+    alloc_cls = {"equal-share": EqualShareAllocation,
+                 "maxweight": MaxWeightAllocation,
+                 "market": MarketAllocation}[policy]
+
+    # full-width reference: the pre-compact implementation
+    psi_g, psi_c, omega, fg, fc, mask = cluster.allocator_inputs(t)
+    N, S = psi_g.shape
+    g_ref = np.zeros((N, S))
+    c_ref = np.zeros((N, S))
+
+    def full_weights(psi_row, other_row, omega_row):
+        if policy == "equal-share":
+            return (psi_row > 0).astype(float)
+        if policy == "market":
+            return omega_row * psi_row
+        out = np.zeros_like(psi_row)                       # maxweight
+        w = omega_row * psi_row
+        if np.any(w > 0):
+            out[int(np.argmax(w))] = 1.0
+        return out
+
+    for n in range(N):
+        wg = full_weights(psi_g[n], psi_c[n], omega[n])
+        wc = full_weights(psi_c[n], psi_g[n], omega[n])
+        g_ref[n], _, _ = active_set_np(wg, fg[n],
+                                       float(cluster.gpu_capacity[n]),
+                                       mask[n])
+        c_ref[n], _, _ = active_set_np(wc, fc[n],
+                                       float(cluster.cpu_capacity[n]),
+                                       mask[n])
+    g_ref = g_ref[cluster.placement, np.arange(S)]
+    c_ref = c_ref[cluster.placement, np.arange(S)]
+
+    alloc_cls().allocate(cluster, t)
+    cap = float(cluster.gpu_capacity.max())
+    np.testing.assert_allclose(cluster.alloc_g, g_ref, rtol=1e-9,
+                               atol=cap * 1e-12)
+    np.testing.assert_allclose(cluster.alloc_c, c_ref, rtol=1e-9,
+                               atol=float(cluster.cpu_capacity.max()) * 1e-9)

@@ -41,13 +41,15 @@ def _fingerprint(res: SimResult):
 
 
 def _run(engine: str, family: str, seed: int, method: str = "haf-static",
-         drop_expired: bool = False, n_requests: int = 120):
+         drop_expired: bool = False, n_requests: int = 120,
+         max_events: int = 5_000_000):
     sc = make_scenario(family, seed=0)
     reqs, _ = workload_for(sc, seed=seed, n_ai_requests=n_requests)
     from repro.eval import make_method
     placement, allocation, rr = make_method(method)
     sim = Simulator(sc, engine=engine, drop_expired=drop_expired)
-    return sim.run(reqs, placement, allocation, rr_dispatch=rr)
+    return sim.run(reqs, placement, allocation, rr_dispatch=rr,
+                   max_events=max_events)
 
 
 @pytest.mark.parametrize("seed", SEEDS)
@@ -94,6 +96,130 @@ def test_jax_matches_scalar(family):
 def test_unknown_engine_rejected():
     with pytest.raises(ValueError, match="unknown engine"):
         Simulator(paper_scenario(), engine="fortran")
+
+
+# --------------------------------------------------------------------------- #
+# batched multi-seed engine: run_batch must be discrete-outcome identical
+# to per-seed solo runs (summaries, finish times, migrations, drops)
+# --------------------------------------------------------------------------- #
+BATCH_SEEDS = (0, 1, 2)
+
+
+def _run_batch(family: str, seeds, method: str = "haf-static",
+               drop_expired: bool = False, n_requests: int = 120,
+               max_events: int = 5_000_000, engine: str = "numpy"):
+    from repro.eval import make_method
+    from repro.sim.scenarios import workload_for as wf
+
+    sc = make_scenario(family, seed=0)
+    workloads = [wf(sc, seed=s, n_ai_requests=n_requests)[0] for s in seeds]
+    methods = [make_method(method) for _ in seeds]
+    sim = Simulator(sc, drop_expired=drop_expired)
+    return sim.run_batch(workloads, [m[0] for m in methods],
+                         [m[1] for m in methods],
+                         rr_dispatch=methods[0][2],
+                         max_events=max_events, engine=engine)
+
+
+@pytest.mark.parametrize("family", ("paper", "dense-urban", "flash-crowd",
+                                    "node-outage"))
+def test_run_batch_matches_per_seed_numpy(family):
+    solos = [_fingerprint(_run("numpy", family, s)) for s in BATCH_SEEDS]
+    batch = [_fingerprint(r) for r in _run_batch(family, BATCH_SEEDS)]
+    assert batch == solos
+
+
+def test_run_batch_matches_with_migrations():
+    """Lyapunov placement migrates AND uses a non-deadline allocator, so
+    this also covers the per-replica allocation fallback path."""
+    solos = [_fingerprint(_run("numpy", "skewed-hetero", s,
+                               method="lyapunov")) for s in BATCH_SEEDS]
+    batch = [_fingerprint(r) for r in
+             _run_batch("skewed-hetero", BATCH_SEEDS, method="lyapunov")]
+    assert batch == solos
+
+
+def test_run_batch_fast_allocator_survives_migrations():
+    """Migrations permute each replica's placement/_node_sids mid-run while
+    the deadline-aware allocator keeps using the cross-replica gather (the
+    fast path) — the HAF production combination.  A scripted migration
+    makes the replicas' topologies diverge from epoch 1 on."""
+    from repro.core.controller import ScriptedPlacement
+    from repro.sim.engine import DeadlineAwareAllocation
+    from repro.sim.scenarios import workload_for as wf
+
+    sc = make_scenario("paper", seed=0)
+    workloads = [wf(sc, seed=s, n_ai_requests=150)[0] for s in BATCH_SEEDS]
+    script = {1: ("large0", 1), 3: ("small0", 2)}
+
+    solos = []
+    for reqs in workloads:
+        res = Simulator(sc).run(reqs, ScriptedPlacement(script),
+                                DeadlineAwareAllocation())
+        solos.append(res)
+    batch = Simulator(sc).run_batch(
+        workloads,
+        [ScriptedPlacement(script) for _ in BATCH_SEEDS],
+        [DeadlineAwareAllocation() for _ in BATCH_SEEDS])
+    assert any(len(r.migrations) >= 1 for r in solos)   # scenario really moves
+    assert [_fingerprint(r) for r in batch] == \
+        [_fingerprint(r) for r in solos]
+
+
+def test_run_batch_matches_with_drops():
+    solos = [_fingerprint(_run("numpy", "flash-crowd", s, drop_expired=True,
+                               n_requests=300)) for s in BATCH_SEEDS]
+    batch = [_fingerprint(r) for r in
+             _run_batch("flash-crowd", BATCH_SEEDS, drop_expired=True,
+                        n_requests=300)]
+    assert batch == solos
+
+
+def test_run_batch_b1_degenerate():
+    """B=1 is the solo engine in a [1, S] coat."""
+    solo = _fingerprint(_run("numpy", "paper", 0))
+    batch = _run_batch("paper", (0,))
+    assert len(batch) == 1
+    assert _fingerprint(batch[0]) == solo
+
+
+def test_run_batch_truncation_matches_per_seed():
+    """Each replica hits max_events on its own clock; the truncated flag
+    and the partial outcomes must match the solo runs exactly."""
+    solos = [_run("numpy", "paper", s, max_events=400) for s in BATCH_SEEDS]
+    batch = _run_batch("paper", BATCH_SEEDS, max_events=400)
+    for solo, b in zip(solos, batch):
+        assert solo.truncated and b.truncated
+        assert _fingerprint(solo) == _fingerprint(b)
+
+
+def test_run_batch_scalar_core_matches():
+    solos = [_fingerprint(_run("numpy", "paper", s)) for s in BATCH_SEEDS]
+    batch = [_fingerprint(r) for r in
+             _run_batch("paper", BATCH_SEEDS, engine="scalar")]
+    assert batch == solos
+
+
+@pytest.mark.parametrize("engine", ("jax", "pallas"))
+def test_run_batch_jax_and_pallas_cores(engine):
+    """The device cores are held to the jax bar: identical discrete
+    outcomes, finish times to ~1 ulp (XLA may fuse multiply-adds)."""
+    pytest.importorskip("jax")
+    solos = [_run("numpy", "paper", s) for s in BATCH_SEEDS]
+    batch = _run_batch("paper", BATCH_SEEDS, engine=engine)
+    for solo, b in zip(solos, batch):
+        assert _fingerprint(solo)[:4] == _fingerprint(b)[:4]
+        fa = np.array([r.finish for r in solo.requests])
+        fb = np.array([r.finish for r in b.requests])
+        np.testing.assert_allclose(fb, fa, rtol=0, atol=1e-9)
+        assert [r.target_sid for r in solo.requests] == \
+            [r.target_sid for r in b.requests]
+
+
+def test_run_batch_unknown_engine_rejected():
+    from repro.sim.event_core import make_batched_event_core
+    with pytest.raises(ValueError, match="unknown batched engine"):
+        make_batched_event_core("fortran")
 
 
 # --------------------------------------------------------------------------- #

@@ -102,3 +102,50 @@ def test_parallel_equals_serial():
 def test_unknown_method_raises():
     with pytest.raises(KeyError, match="unknown method"):
         make_method("definitely-not-a-method")
+
+
+def test_batched_sweep_equals_serial(mini_rows):
+    """batch_seeds groups (scenario, method) cells into run_batch calls;
+    the per-row results must equal the classic per-job path."""
+    batched = run_sweep(dataclasses.replace(MINI, batch_seeds=2))
+    key = lambda r: (r["method"], r["scenario"], r["seed"])  # noqa: E731
+    for s, b in zip(sorted(mini_rows, key=key), sorted(batched, key=key)):
+        assert s["overall"] == b["overall"]
+        assert s["n_events"] == b["n_events"]
+        assert s["mig_total"] == b["mig_total"]
+        assert b["batch"] == 2
+
+
+def test_batched_sweep_partial_batches():
+    """Seed counts that don't divide batch_seeds still cover every job."""
+    spec = SweepSpec(methods=("haf-static",), scenarios=("paper",),
+                     seeds=(0, 1, 2), n_ai_requests=100, batch_seeds=2)
+    rows = run_sweep(spec)
+    assert sorted(r["seed"] for r in rows) == [0, 1, 2]
+    assert sorted(r["batch"] for r in rows) == [1, 2, 2]
+
+
+def test_attach_scenarios_builds_each_cell_once(monkeypatch):
+    """The classic path serializes one scenario per group instead of
+    re-running make_scenario in every job."""
+    import repro.eval.sweep as sweep_mod
+
+    spec = SweepSpec(methods=("haf-static", "round-robin"),
+                     scenarios=("paper",), seeds=(0, 1),
+                     n_ai_requests=100)
+    jobs = sweep_mod.expand_jobs(spec)
+    calls = []
+    real = sweep_mod.scenario_for_job
+
+    def counting(job):
+        calls.append(job["family"])
+        return real(job)
+
+    monkeypatch.setattr(sweep_mod, "scenario_for_job", counting)
+    sweep_mod.attach_scenarios(jobs)
+    assert len(calls) == 1                      # 4 jobs, 1 scenario build
+    assert all("scenario" in j for j in jobs)
+    # run_job must reuse the attached dict, not rebuild
+    row = sweep_mod.run_job(jobs[0])
+    assert len(calls) == 1
+    assert 0.0 <= row["overall"] <= 1.0

@@ -99,11 +99,34 @@ def test_flash_crowd_spikes_bunch_arrivals():
 
 
 def test_heavy_tail_inflates_some_requests():
+    """Lengths are Pareto-sampled directly: the size tail extends far past
+    the lognormal clip while the mean load stays ρ-calibrated."""
     base = make_scenario("paper", n_ai_requests=1500)
-    tail = make_scenario("heavy-tail", seed=0, fraction=0.3, cap=50.0,
+    tail = make_scenario("heavy-tail", seed=0, alpha=1.1, cap=8.0,
                          n_ai_requests=1500)
+    assert tail["workload"]["ai_length_kind"] == "pareto"
     rb, _ = workload_for(base, seed=0)
     rt, _ = workload_for(tail, seed=0)
+    wb = np.array([r.ai_work_g for r in rb if r.cls.is_ai])
+    wt = np.array([r.ai_work_g for r in rt if r.cls.is_ai])
+    assert wt.max() > 3.0 * wb.max()
+    # heavy tail, comparable body: the mean stays within a small factor of
+    # the lognormal mean (λ is calibrated against the capped-Pareto mean,
+    # so ρ keeps its time-averaged meaning)...
+    assert 0.3 * wb.mean() < wt.mean() < 3.0 * wb.mean()
+    # ...while the tail mass dominates far beyond the lognormal max
+    assert (wt > wb.max()).sum() >= 3
+
+
+def test_heavy_tail_posthoc_recipe_still_honored():
+    """Hand-built scenario dicts with the legacy post-hoc multiplier
+    recipe keep working (back-compat for stored scenarios)."""
+    sc = dict(make_scenario("paper", n_ai_requests=800))
+    sc["workload"] = dict(sc["workload"],
+                          heavy_tail={"fraction": 0.3, "alpha": 1.2,
+                                      "cap": 30.0})
+    rb, _ = workload_for(make_scenario("paper", n_ai_requests=800), seed=0)
+    rt, _ = workload_for(sc, seed=0)
     wb = np.array([r.ai_work_g for r in rb if r.cls.is_ai])
     wt = np.array([r.ai_work_g for r in rt if r.cls.is_ai])
     assert wt.max() > 3.0 * wb.max()
