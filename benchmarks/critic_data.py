@@ -1,29 +1,148 @@
-"""Critic offline-training benchmark: data harvest + supervised regression
-(§III-B).  Produces the frozen artifacts used by tests/benchmarks/serving.
+"""Critic offline-training benchmark (§III-B at fleet scale).
+
+Multi-family data harvest (batched ``[B, S]`` exploration + counterfactual
+probes via :func:`repro.core.datagen.harvest_families`), supervised
+regression of the deployed critic on the pooled samples, and a
+**held-out-family generalization check**: for each family a leave-one-out
+critic (trained on every OTHER family) gates HAF on the held-out family,
+against HAF-NoCritic — measuring whether the migration gating transfers to
+scenario dynamics the critic never saw.
+
+  PYTHONPATH=src python -m benchmarks.critic_data            # full
+  PYTHONPATH=src python -m benchmarks.critic_data --smoke    # CI-sized
+
+Artifacts: ``critic.json`` (pooled all-family critic — the artifact every
+other benchmark loads), ``critic_wo_<family>.json`` (leave-one-out),
+``critic_samples.pkl`` (per-family sample dict),
+``critic_holdout.json`` (the generalization table).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import pickle
 import time
+from typing import Dict, List, Optional, Sequence
 
 from benchmarks import common
 from repro.core.critic import train_critic
-from repro.core.datagen import harvest
+from repro.core.datagen import (DEFAULT_FAMILIES, harvest_families,
+                                merge_samples)
+from repro.eval import SweepSpec, build_report, haf_spec, run_sweep
+
+SMOKE_HARVEST = dict(
+    bulk_runs=((1.0, 2), (0.75, 5)), bulk_requests=250, probe_requests=250,
+    probe_epochs_pre=(1, 2), probe_epochs_post=(3,), batch_size=16)
+FULL_HARVEST = dict(batch_size=16)
 
 
-def main(retrain: bool = True) -> None:
+def _train(samples: List, epochs: int, path) -> str:
+    critic = train_critic(samples, epochs=epochs, seed=0)
+    critic.save(str(path))
+    return str(path)
+
+
+def holdout_eval(families: Sequence[str], per_family: Dict[str, List], *,
+                 epochs: int, seeds: Sequence[int], requests: int,
+                 agent: str = common.DEFAULT_AGENT) -> List[Dict]:
+    """Leave-one-out gating generalization, one row per held-out family.
+
+    The held-out critic gates the same stand-in agent HAF-NoCritic runs
+    bare; both sweep the held-out family with batched seeds.  The signal
+    mirrors Table II: the critic should prune migrations (``mig``) without
+    giving up fulfillment (``overall``) — on dynamics it never trained on.
+    """
+    rows = []
+    for family in families:
+        path = _train(merge_samples(per_family, exclude=(family,)),
+                      epochs, common.ARTIFACTS / f"critic_wo_{family}.json")
+        spec = SweepSpec(
+            methods=(haf_spec(agent=agent, critic_path=path,
+                              label="HAF+critic(held-out)"),
+                     haf_spec(agent=agent, critic_path=None,
+                              label="HAF-NoCritic")),
+            scenarios=(family,),
+            seeds=tuple(seeds),
+            n_ai_requests=requests,
+            workers=1,
+            batch_seeds=max(len(seeds), 1),
+        )
+        cells = build_report(spec, run_sweep(spec))["aggregate"]
+        by = {c["method"]: c for c in cells}
+        crit = by["HAF+critic(held-out)"]
+        nc = by["HAF-NoCritic"]
+        row = {
+            "family": family,
+            "n_train_samples": sum(len(v) for k, v in per_family.items()
+                                   if k != family),
+            "overall_critic": crit["overall"]["mean"],
+            "overall_nocritic": nc["overall"]["mean"],
+            "mig_critic": crit["mig_total"]["mean"],
+            "mig_nocritic": nc["mig_total"]["mean"],
+        }
+        rows.append(row)
+        print(f"critic-holdout,{family},"
+              f"overall={row['overall_critic']:.4f}"
+              f"/nc={row['overall_nocritic']:.4f},"
+              f"mig={row['mig_critic']:.1f}/nc={row['mig_nocritic']:.1f}",
+              flush=True)
+    return rows
+
+
+def main(smoke: bool = False,
+         families: Optional[Sequence[str]] = None,
+         holdout: bool = True) -> Dict:
+    families = tuple(families or (DEFAULT_FAMILIES[:3] if smoke
+                                  else DEFAULT_FAMILIES))
+    harvest_kw = dict(SMOKE_HARVEST if smoke else FULL_HARVEST)
+    epochs = 150 if smoke else 2000
+
     t0 = time.time()
-    samples = harvest(common.scenario(), verbose=False)
+    per_family = harvest_families(families, verbose=not smoke, **harvest_kw)
     t_h = time.time() - t0
+    common.ARTIFACTS.mkdir(parents=True, exist_ok=True)
     with open(common.ARTIFACTS / "critic_samples.pkl", "wb") as f:
-        pickle.dump(samples, f)
+        pickle.dump(per_family, f)
+    pooled = merge_samples(per_family)
+    print(f"critic,harvest,families={len(families)},"
+          f"n_samples={len(pooled)},wall_s={t_h:.1f}", flush=True)
+
     t0 = time.time()
-    critic = train_critic(samples, epochs=2000, seed=0)
+    _train(pooled, epochs, common.critic_path())
     t_t = time.time() - t0
-    critic.save(str(common.ARTIFACTS / "critic.json"))
-    print(f"critic,harvest,n_samples={len(samples)},wall_s={t_h:.1f}")
-    print(f"critic,train,epochs=2000,wall_s={t_t:.1f}")
+    print(f"critic,train,epochs={epochs},wall_s={t_t:.1f}", flush=True)
+
+    record: Dict = {
+        "kind": "repro.bench.critic_data",
+        "smoke": smoke,
+        "families": list(families),
+        "n_samples": {k: len(v) for k, v in per_family.items()},
+        "train_epochs": epochs,
+        "harvest_wall_s": round(t_h, 1),
+        "train_wall_s": round(t_t, 1),
+    }
+    if holdout:
+        t0 = time.time()
+        record["holdout"] = holdout_eval(
+            families, per_family, epochs=epochs,
+            seeds=(0,) if smoke else (0, 1, 2),
+            requests=150 if smoke else 1500)
+        record["holdout_wall_s"] = round(time.time() - t0, 1)
+    out = common.ARTIFACTS / "critic_holdout.json"
+    out.write_text(json.dumps(record, indent=2, sort_keys=True))
+    print(f"# record -> {out}", flush=True)
+    return record
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny harvests, few epochs, 1 seed")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated scenario families to harvest")
+    ap.add_argument("--no-holdout", action="store_true",
+                    help="skip the held-out-family generalization sweep")
+    args = ap.parse_args()
+    fams = [f.strip() for f in args.families.split(",")] \
+        if args.families else None
+    main(smoke=args.smoke, families=fams, holdout=not args.no_holdout)

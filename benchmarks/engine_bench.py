@@ -1,13 +1,17 @@
 """Event-engine benchmark: solo cores + the batched multi-seed engine.
 
-Three sections, all on the ``dense-urban`` family (the S >= 100 regime the
-vectorized cores exist for), recorded to ``BENCH_pr3.json``:
+Four sections recorded to ``BENCH_pr4.json``:
 
   * solo — scalar reference vs vectorized numpy engine on identical
-    workloads (the PR-2 comparison, kept so the trajectory is tracked),
+    ``dense-urban`` workloads (the PR-2 comparison, kept so the
+    trajectory is tracked), plus the ``paper``-family single trace where
+    the tiny-gather scalar allocator fast path applies,
   * batched — ``Simulator.run_batch`` at B ∈ {1, 8, 32} seeds per block:
     aggregate events/sec vs the B=1 solo numpy engine, with the batched
     results fingerprint-checked against per-seed solo runs,
+  * haf — the full agentic stack (stand-in agent + critic gating) solo vs
+    batched: the slow-timescale epoch pipeline dispatches grouped
+    decides, so HAF cells batch like the baselines (fingerprint-checked),
   * sweep — a small fleet sweep executed batched (one process,
     ``batch_seeds`` seeds per simulation) vs process-parallel workers:
     end-to-end wall time including worker startup and scenario builds.
@@ -25,17 +29,20 @@ import os
 import time
 from typing import Dict, List
 
+import numpy as np
+
 from benchmarks import common
 from repro.eval import SweepSpec, run_sweep
 from repro.sim import Simulator, make_scenario, workload_for
 from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
 
-BENCH_PATH = common.ROOT / "BENCH_pr3.json"
+BENCH_PATH = common.ROOT / "BENCH_pr4.json"
 
 # (n_nodes, n_ai_requests): S = 3 * n_nodes for dense-urban
 SOLO_SMOKE_GRID = ((36, 1500),)
 SOLO_FULL_GRID = ((36, 4000), (240, 4000))
 BATCH_SIZES = (1, 8, 32)
+HAF_BATCH_SIZES = (1, 8)
 
 
 def _canon_summary(s: Dict) -> Dict:
@@ -139,6 +146,71 @@ def bench_batched(n_nodes: int, n_requests: int,
 
 
 # --------------------------------------------------------------------------- #
+# haf: the agentic stack (agent + critic) solo vs batched epoch pipeline
+# --------------------------------------------------------------------------- #
+def _bench_critic():
+    """A micro-critic trained on synthetic samples: the bench measures the
+    epoch pipeline's throughput, not gating quality, and must stay
+    self-contained (it runs before the critic_data benchmark)."""
+    from repro.core.critic import train_critic
+    from repro.core.features import FEATURE_DIM
+
+    rng = np.random.default_rng(0)
+    samples = [(rng.normal(size=FEATURE_DIM).astype(np.float32),
+                rng.uniform(size=3).astype(np.float32),
+                np.ones(3, np.float32)) for _ in range(40)]
+    return train_critic(samples, epochs=30, hidden=16, seed=0)
+
+
+def bench_haf(n_requests: int, sizes=HAF_BATCH_SIZES) -> Dict:
+    from repro.core import HAFPlacement, make_agent
+
+    critic = _bench_critic()
+    sc = make_scenario("paper", seed=0)
+    max_b = max(sizes)
+    workloads = [workload_for(sc, seed=1 + s, n_ai_requests=n_requests)[0]
+                 for s in range(max_b)]
+    sim = Simulator(sc)
+
+    def placement(b=0):
+        return HAFPlacement(make_agent(common.DEFAULT_AGENT), critic=critic)
+
+    solo_results = []
+    wall = 0.0
+    for wl in workloads:
+        t0 = time.time()
+        solo_results.append(sim.run(wl, placement(),
+                                    DeadlineAwareAllocation()))
+        wall += time.time() - t0
+    common.check_not_truncated([r.summary() for r in solo_results],
+                               "engine_bench:haf-solo")
+    solo_evps = sum(r.n_events for r in solo_results) / wall
+    out: Dict = {"family": "paper", "method": "HAF(stand-in+critic)",
+                 "n_requests_per_seed": n_requests,
+                 "solo_evps": round(solo_evps, 1),
+                 "migrations": sum(len(r.migrations)
+                                   for r in solo_results),
+                 "points": []}
+    for B in sizes:
+        t0 = time.time()
+        results = sim.run_batch(workloads[:B], placement,
+                                lambda b: DeadlineAwareAllocation())
+        bwall = time.time() - t0
+        evps = sum(r.n_events for r in results) / bwall
+        out["points"].append({"B": B, "wall_s": round(bwall, 3),
+                              "events_per_sec": round(evps, 1),
+                              "speedup_vs_solo": round(evps / solo_evps,
+                                                       2)})
+        for s in range(B):
+            if _fingerprint(results[s]) != _fingerprint(solo_results[s]):
+                raise RuntimeError(
+                    f"engine_bench: batched HAF seed {1 + s} diverged from "
+                    "its per-seed solo run — agentic equivalence broken")
+    out["haf_batch_speedup"] = out["points"][-1]["speedup_vs_solo"]
+    return out
+
+
+# --------------------------------------------------------------------------- #
 # sweep: batched single process vs process-parallel workers, end to end
 # --------------------------------------------------------------------------- #
 def bench_sweep(n_requests: int, n_seeds: int = 8) -> Dict:
@@ -174,6 +246,35 @@ def bench_sweep(n_requests: int, n_seeds: int = 8) -> Dict:
             "speedup": round(process_wall / batched_wall, 2)}
 
 
+def bench_solo_paper(n_requests: int) -> Dict:
+    """paper-family single trace: the tiny-gather regime the scalar
+    allocator fast path targets (ROADMAP solo-regression recovery)."""
+    import repro.sim.cluster as cluster_mod
+
+    sc = make_scenario("paper", seed=0)
+    reqs, _ = workload_for(sc, seed=1, n_ai_requests=n_requests)
+    sim = Simulator(sc)
+    point: Dict = {"family": "paper", "n_requests": len(reqs)}
+    saved = cluster_mod.SCALAR_GATHER_MAX
+    try:
+        for tag, mx in (("vector_only", -1), ("fast_path", saved)):
+            cluster_mod.SCALAR_GATHER_MAX = mx
+            wall = float("inf")
+            for _ in range(3):
+                t0 = time.time()
+                res = sim.run(reqs, StaticPlacement(),
+                              DeadlineAwareAllocation())
+                wall = min(wall, time.time() - t0)
+            point[tag] = {"wall_s": round(wall, 3),
+                          "events_per_sec": round(res.n_events / wall, 1)}
+    finally:
+        cluster_mod.SCALAR_GATHER_MAX = saved
+    point["fast_path_speedup"] = round(
+        point["fast_path"]["events_per_sec"]
+        / point["vector_only"]["events_per_sec"], 2)
+    return point
+
+
 def main(smoke: bool = False) -> Dict:
     solo_grid = SOLO_SMOKE_GRID if smoke else SOLO_FULL_GRID
     solo_points: List[Dict] = []
@@ -185,9 +286,21 @@ def main(smoke: bool = False) -> Dict:
               f"numpy_evps={p['numpy']['events_per_sec']},"
               f"speedup={p['speedup']}x", flush=True)
 
+    solo_paper = bench_solo_paper(1500 if smoke else 4000)
+    print(f"engine-solo,paper,"
+          f"vector_evps={solo_paper['vector_only']['events_per_sec']},"
+          f"fastpath_evps={solo_paper['fast_path']['events_per_sec']},"
+          f"speedup={solo_paper['fast_path_speedup']}x", flush=True)
+
     batched = bench_batched(36, 1200 if smoke else 4000)
     for p in batched["points"]:
         print(f"engine-batch,dense-urban,B={p['B']},"
+              f"evps={p['events_per_sec']},"
+              f"speedup_vs_solo={p['speedup_vs_solo']}x", flush=True)
+
+    haf = bench_haf(600 if smoke else 2000)
+    for p in haf["points"]:
+        print(f"engine-haf,paper,B={p['B']},"
               f"evps={p['events_per_sec']},"
               f"speedup_vs_solo={p['speedup_vs_solo']}x", flush=True)
 
@@ -199,11 +312,13 @@ def main(smoke: bool = False) -> Dict:
 
     record = {
         "kind": "repro.bench.engine",
-        "pr": 3,
+        "pr": 4,
         "smoke": smoke,
         "default_engine": "numpy",
         "solo_points": solo_points,
+        "solo_paper": solo_paper,
         "batched": batched,
+        "haf": haf,
         "sweep": sweep,
     }
     BENCH_PATH.write_text(json.dumps(record, indent=2, sort_keys=True))
@@ -211,6 +326,9 @@ def main(smoke: bool = False) -> Dict:
     if batched["batch_speedup_max_b"] < 3.0:
         print(f"# WARNING: batched B={BATCH_SIZES[-1]} aggregate speedup is "
               f"{batched['batch_speedup_max_b']}x (< 3x target)", flush=True)
+    if haf["haf_batch_speedup"] < 1.5:
+        print(f"# WARNING: batched HAF B={HAF_BATCH_SIZES[-1]} speedup is "
+              f"{haf['haf_batch_speedup']}x (< 1.5x target)", flush=True)
     if sweep["speedup"] < 1.0:
         print("# WARNING: batched sweep slower than process-parallel "
               f"({sweep['batched_wall_s']}s vs {sweep['process_wall_s']}s)",

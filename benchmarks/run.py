@@ -16,10 +16,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=(None, "table2", "table3", "fig2", "roofline",
-                             "alloc", "fleet", "engine"))
+                             "alloc", "fleet", "engine", "critic"))
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode (tiny request counts, 1 seed; the "
-                         "engine bench still records BENCH_pr3.json)")
+                         "engine bench still records BENCH_pr4.json and "
+                         "the critic harvest+holdout path still runs)")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -34,6 +35,9 @@ def main() -> None:
     if args.only in (None, "alloc"):
         from benchmarks import alloc_microbench
         alloc_microbench.main()
+    if args.only in (None, "critic"):
+        from benchmarks import critic_data
+        critic_data.main(smoke=args.smoke)
     if args.only in (None, "table3"):
         from benchmarks import table3_baselines
         table3_baselines.main()

@@ -11,20 +11,28 @@ unchanged.
 
 The stand-in scoring mirrors the prompt's ordered priorities: P1 protect RAN
 floors, P2 relieve AI contention toward headroom, P3 charge the R_s outage.
+It is vectorized over the candidate set (:meth:`HeuristicAgent.
+score_candidates` evaluates all |M_k| migrations as one ``[C]`` numpy pass),
+and :meth:`Agent.shortlist_batch` is the epoch-pipeline entry point: the
+batched engine hands every replica's (snapshot, candidates) at once.
+Stand-ins shortlist each replica from the vectorized scorer;
+``ExternalLLMAgent`` inherits the per-replica fallback (one completion call
+per snapshot) so the interface stays uniform.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-import math
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import prompts
 from repro.core.placement import action_id
 from repro.sim.snapshot import EpochSnapshot
-from repro.sim.types import InstanceCategory, MigrationAction
+from repro.sim.types import MigrationAction
+
+Shortlist = List[Optional[MigrationAction]]
 
 
 class Agent:
@@ -32,8 +40,30 @@ class Agent:
 
     def shortlist(self, snap: EpochSnapshot,
                   candidates: Sequence[Optional[MigrationAction]],
-                  K: int = 3) -> List[Optional[MigrationAction]]:
+                  K: int = 3) -> Shortlist:
         raise NotImplementedError
+
+    def shortlist_batch(self, snaps: Sequence[EpochSnapshot],
+                        candidates_list: Sequence[Sequence],
+                        K: int = 3) -> List[Shortlist]:
+        """Shortlists for B replicas' epoch snapshots at once.
+
+        The default loops :meth:`shortlist` per replica — correct for any
+        agent (external LLMs fall back to one call per replica).  Results
+        must be independent of how replicas are grouped into a batch.
+        """
+        return [self.shortlist(s, c, K)
+                for s, c in zip(snaps, candidates_list)]
+
+    def batch_key(self) -> Optional[tuple]:
+        """Config identity for cross-replica grouping.
+
+        Replicas whose agents share a key may be decided by one batched
+        evaluation (the agents must be interchangeable: deterministic and
+        equal-configured).  ``None`` (the default) means this agent has
+        per-instance state or external side effects, so the epoch pipeline
+        keys the group to the instance instead."""
+        return None
 
 
 class ExternalLLMAgent(Agent):
@@ -57,20 +87,6 @@ class ExternalLLMAgent(Agent):
 # --------------------------------------------------------------------------- #
 # deterministic stand-ins
 # --------------------------------------------------------------------------- #
-def _service_demand_gpu_s(snap: EpochSnapshot, sid: int) -> float:
-    """Backlog of instance sid in seconds of its node's full GPU."""
-    n = snap.node_of(sid)
-    return float(snap.psi_g[sid]) / max(snap.nodes[n].gpu_flops, 1.0)
-
-
-def _node_pressure(snap: EpochSnapshot, n: int,
-                   exclude: int = -1) -> float:
-    """GPU backlog-seconds queued on node n (contended > 1)."""
-    psi = sum(float(snap.psi_g[s]) for s in range(snap.S)
-              if snap.placement[s] == n and s != exclude)
-    return psi / max(snap.nodes[n].gpu_flops, 1.0)
-
-
 @dataclasses.dataclass
 class StandInProfile:
     """Quality knobs that differentiate the emulated agents."""
@@ -90,15 +106,30 @@ class HeuristicAgent(Agent):
         self.profile = profile
         self.seed = seed
 
+    def batch_key(self) -> tuple:
+        return ("stand-in", self.name, self.seed,
+                dataclasses.astuple(self.profile))
+
     # -- the P1-P3 value model ------------------------------------------- #
-    def _score(self, snap: EpochSnapshot,
-               a: Optional[MigrationAction]) -> float:
-        if a is None:
-            return 0.0
+    def score_candidates(self, snap: EpochSnapshot,
+                         migrations: Sequence[MigrationAction]) -> np.ndarray:
+        """P1–P3 scores for every migration candidate as one ``[C]`` pass.
+
+        This is the canonical scorer: the solo and batched decide paths
+        both rank from these values, so batching cannot change outcomes.
+        """
+        C = len(migrations)
+        if not C:
+            return np.zeros(0)
         p = self.profile
-        inst = snap.instances[a.sid]
-        src_n, dst_n = snap.nodes[a.src], snap.nodes[a.dst]
-        psi_s = float(snap.psi_g[a.sid])
+        insts = [snap.instances[a.sid] for a in migrations]
+        sids = np.array([a.sid for a in migrations], np.int64)
+        srcs = np.array([a.src for a in migrations], np.int64)
+        dsts = np.array([a.dst for a in migrations], np.int64)
+        gflops = np.array([n.gpu_flops for n in snap.nodes], np.float64)
+        ccores = np.array([n.cpu_cores for n in snap.nodes], np.float64)
+        psi_s = snap.psi_g[sids].astype(np.float64)
+        psi_c_s = snap.psi_c[sids].astype(np.float64)
 
         # P2 (GPU): contention differential the service experiences, gated
         # by its own demand (a tiny DU gains nothing from fleeing a hot
@@ -106,38 +137,49 @@ class HeuristicAgent(Agent):
         # standing backlog with allocated utilization (streams that drain
         # fast leave no backlog but still occupy the node), and moving to a
         # smaller node slows the service's own backlog down.
-        src_others = (_node_pressure(snap, a.src, exclude=a.sid)
-                      + 0.5 * float(snap.gpu_util[a.src]))
-        dst_others = (_node_pressure(snap, a.dst, exclude=a.sid)
-                      + 0.5 * float(snap.gpu_util[a.dst]))
-        own_slowdown = psi_s / dst_n.gpu_flops - psi_s / src_n.gpu_flops
-        scale_g = math.tanh(psi_s / src_n.gpu_flops)
+        node_psi_g = snap.psi_g_by_node()
+        src_others = ((node_psi_g[srcs] - psi_s) / np.maximum(gflops[srcs],
+                                                             1.0)
+                      + 0.5 * snap.gpu_util[srcs])
+        dst_others = ((node_psi_g[dsts]
+                       - np.where(srcs == dsts, psi_s, 0.0))
+                      / np.maximum(gflops[dsts], 1.0)
+                      + 0.5 * snap.gpu_util[dsts])
+        own_slowdown = psi_s / gflops[dsts] - psi_s / gflops[srcs]
+        scale_g = np.tanh(psi_s / gflops[srcs])
         relief = scale_g * (src_others - dst_others - own_slowdown)
 
         # P2 (CPU): same shape for CPU-bound instances (CU-UP)
-        psi_c = float(snap.psi_c[a.sid])
-        scale_c = math.tanh(psi_c / src_n.cpu_cores)
-        cpu_relief = scale_c * (float(snap.cpu_util[a.src])
-                                - float(snap.cpu_util[a.dst])
-                                - (psi_c / dst_n.cpu_cores
-                                   - psi_c / src_n.cpu_cores))
+        scale_c = np.tanh(psi_c_s / ccores[srcs])
+        cpu_relief = scale_c * (snap.cpu_util[srcs] - snap.cpu_util[dsts]
+                                - (psi_c_s / ccores[dsts]
+                                   - psi_c_s / ccores[srcs]))
 
         # P1: RAN protection — penalize moving load onto RAN-floored nodes;
         # moving an AI service *off* a RAN-floored node relieves contention
         # for that node's DU/CU-UP (RAN instances gain nothing by fleeing —
         # their floors travel with them).
-        ran_risk = (snap.ran_floor_g[a.dst] + snap.ran_floor_c[a.dst])
-        ran_relief = 0.0
-        if not inst.category.is_ran:
-            ran_relief = (snap.ran_floor_g[a.src] + snap.ran_floor_c[a.src])
+        ran_risk = snap.ran_floor_g[dsts] + snap.ran_floor_c[dsts]
+        not_ran = np.array([not i.category.is_ran for i in insts])
+        ran_relief = np.where(not_ran,
+                              snap.ran_floor_g[srcs] + snap.ran_floor_c[srcs],
+                              0.0)
         p1 = p.ran_weight * (0.3 * ran_relief - 1.0 * ran_risk)
 
         # P3: reconfiguration cost — R_s scaled by how much traffic the
         # service sees (arrival pressure) and its current urgency
-        rate = snap.arrival_rate.get(inst.arch, 0.0)
-        outage = p.outage_weight * inst.reconfig_s * (0.05 + 0.02 * rate)
+        rcfg = np.array([i.reconfig_s for i in insts], np.float64)
+        rates = np.array([snap.arrival_rate.get(i.arch, 0.0) for i in insts],
+                         np.float64)
+        outage = p.outage_weight * rcfg * (0.05 + 0.02 * rates)
 
         return relief + cpu_relief + p1 - outage + p.eagerness
+
+    def _score(self, snap: EpochSnapshot,
+               a: Optional[MigrationAction]) -> float:
+        if a is None:
+            return 0.0
+        return float(self.score_candidates(snap, [a])[0])
 
     def _jitter(self, snap: EpochSnapshot, a, scale: float) -> float:
         if scale <= 0:
@@ -147,9 +189,11 @@ class HeuristicAgent(Agent):
         return (h / 0xFFFFFFFF - 0.5) * 2 * scale
 
     def shortlist(self, snap, candidates, K=3):
-        scored = [(self._score(snap, a) + self._jitter(snap, a,
-                                                       self.profile.noise), a)
-                  for a in candidates if a is not None]
+        migrations = [a for a in candidates if a is not None]
+        base = self.score_candidates(snap, migrations)
+        scored: List[Tuple[float, MigrationAction]] = [
+            (float(s) + self._jitter(snap, a, self.profile.noise), a)
+            for s, a in zip(base, migrations)]
         scored.sort(key=lambda x: -x[0])
         # propose migrations only above the confidence threshold; always keep
         # the no-migration option in the list (mirrors LLM hedging)

@@ -5,10 +5,17 @@ agent shortlist A_k = π_LLM(s, M_k) (Eq. 8), critic selection
 j* = argmax r̄(r̂_θ(s, a)) (Eq. 11), commit Π(y, a^{(j*)}) (Eq. 12).
 The allocation layer is the closed-form deadline-aware solve (§III-C),
 wired in by the simulator through :class:`DeadlineAwareAllocation`.
+
+Batched epochs: :meth:`HAFPlacement.decide_group` is the epoch-pipeline
+entry point — the engine hands every replica that reached an epoch boundary
+this tick (grouped by :meth:`batch_key`), candidate features stack into one
+``[B, C, F]`` block, and the critic's frozen net runs once for the whole
+group.  :meth:`decide` is the B=1 view of the same code, so a replica's
+decision cannot depend on which batch-mates it shipped with.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.core.agent import Agent
 from repro.core.critic import Critic
@@ -30,31 +37,96 @@ class HAFPlacement:
         self.last_shortlist: List[Optional[MigrationAction]] = []
         self.last_scores = None
 
+    def batch_key(self) -> tuple:
+        """Replicas whose policies share this key decide as one group.
+
+        Deterministic equal-config agents key by config; stateful agents
+        (external LLMs) key by instance, so they still flow through the
+        batched pipeline but only group with themselves."""
+        agent_key = self.agent.batch_key()
+        if agent_key is None:
+            agent_key = ("agent-inst", id(self.agent))
+        critic_fp = self.critic.fingerprint() if self.critic else None
+        return (agent_key, critic_fp, self.K, self.min_score_margin)
+
     def decide(self, snap: EpochSnapshot) -> Optional[MigrationAction]:
-        m_k = candidate_actions(snap)
-        shortlist = self.agent.shortlist(snap, m_k, self.K)
-        self.last_shortlist = [a for a in shortlist if a is not None]
+        return HAFPlacement.decide_group([self], [snap])[0]
 
-        if self.critic is None:
-            # HAF-NoCritic: trust the agent's top-ranked candidate
-            return shortlist[0] if shortlist else None
+    @staticmethod
+    def decide_group(policies: Sequence["HAFPlacement"],
+                     snaps: Sequence[EpochSnapshot]
+                     ) -> List[Optional[MigrationAction]]:
+        """One batched placement decision for B compatible replicas.
 
-        # critic scores the shortlist *plus* the no-migration action, so a
-        # migration must beat staying put — this is the migration gating the
-        # paper credits for the reduced migration counts (Table II).
-        options = list(shortlist)
-        if None not in options:
-            options.append(None)
-        choice, scores = self.critic.select(snap, options)
-        self.last_scores = scores
-        if choice is None:
-            return None
-        # optional hysteresis: require a margin over no-migration
-        none_idx = options.index(None)
-        chosen_idx = options.index(choice)
-        if scores[chosen_idx] < scores[none_idx] + self.min_score_margin:
-            return None
-        return choice
+        Per replica: candidate generation M_k, agent shortlist (stand-ins
+        score all candidates in one vectorized pass; external LLMs get one
+        completion call each), then ONE padded ``[B, C, F]`` critic
+        evaluation scores every replica's shortlist+no-migration options.
+        The critic forward is batch-shape invariant, so each replica's
+        action is bit-identical to deciding it alone.
+        """
+        B = len(policies)
+        out: List[Optional[MigrationAction]] = [None] * B
+        m_ks = [candidate_actions(s) for s in snaps]
+        # one shortlist_batch call per compatible agent group: agents
+        # sharing a config batch_key (same K) are interchangeable; anything
+        # else — mixed direct calls, stateful LLM agents — dispatches per
+        # instance, so a replica's shortlist always comes from its own
+        # agent's semantics
+        shortlists: List = [None] * B
+        agent_groups: dict = {}
+        for i, pol in enumerate(policies):
+            akey = pol.agent.batch_key()
+            key = (type(pol.agent), akey, pol.K) if akey is not None \
+                else ("inst", id(pol.agent), pol.K)
+            agent_groups.setdefault(key, []).append(i)
+        for idxs in agent_groups.values():
+            rows = policies[idxs[0]].agent.shortlist_batch(
+                [snaps[i] for i in idxs], [m_ks[i] for i in idxs],
+                policies[idxs[0]].K)
+            for i, row in zip(idxs, rows):
+                shortlists[i] = row
+        gated = []                     # (index, options) for critic scoring
+        for i, (pol, shortlist) in enumerate(zip(policies, shortlists)):
+            pol.last_shortlist = [a for a in shortlist if a is not None]
+            if pol.critic is None:
+                # HAF-NoCritic: trust the agent's top-ranked candidate
+                out[i] = shortlist[0] if shortlist else None
+                continue
+            # critic scores the shortlist *plus* the no-migration action,
+            # so a migration must beat staying put — this is the migration
+            # gating the paper credits for the reduced migration counts
+            # (Table II).
+            options = list(shortlist)
+            if None not in options:
+                options.append(None)
+            gated.append((i, options))
+        # one padded [B, C, F] evaluation per distinct critic (an engine
+        # group always shares one — the key pins the fingerprint — but
+        # direct decide_group calls may mix critics)
+        by_critic = {}
+        for item in gated:
+            fp = policies[item[0]].critic.fingerprint()
+            by_critic.setdefault(fp, []).append(item)
+        for group in by_critic.values():
+            critic = policies[group[0][0]].critic
+            choices, score_rows = critic.select_batch(
+                [snaps[i] for i, _ in group],
+                [options for _, options in group])
+            for (i, options), choice, scores in zip(group, choices,
+                                                    score_rows):
+                pol = policies[i]
+                pol.last_scores = scores
+                if choice is None:
+                    continue
+                # optional hysteresis: require a margin over no-migration
+                none_idx = options.index(None)
+                chosen_idx = options.index(choice)
+                if scores[chosen_idx] < scores[none_idx] \
+                        + pol.min_score_margin:
+                    continue
+                out[i] = choice
+        return out
 
 
 class ScriptedPlacement:

@@ -5,13 +5,23 @@ forecast (r̂_L, r̂_S, r̂_R) ∈ [0,1]³, trained offline by supervised L2
 regression on placement-epoch samples (Eq. 10) and FROZEN at deployment.
 Selection uses a class-urgency-weighted mean r̄ (Eq. 11).
 
-Pure JAX: explicit param pytree, Adam, jit'd train steps — no external
-optimizer/NN libraries.
+Training is pure JAX: explicit param pytree, Adam, jit'd train steps — no
+external optimizer/NN libraries.  **Deployment scoring** runs the frozen
+net through :func:`forward_np`, a numpy float64 forward whose matmuls
+reduce by pairwise halving (:func:`_tree_matmul`): every output element
+depends only on its own input row through a fixed reduction order, so a
+``[B, C, F]`` batched-epoch evaluation scores each replica's options
+bit-for-bit as a solo ``[C, F]`` call would — the invariant the batched
+engine's discrete-outcome identity rests on (BLAS/XLA matmuls do not give
+this: their blocking changes with the batch dimension).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 import json
+import os
 import pathlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -19,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.features import FEATURE_DIM, featurize
+from repro.core.features import FEATURE_DIM, featurize, featurize_batch
 from repro.sim.snapshot import EpochSnapshot
 from repro.sim.types import MigrationAction
 
@@ -67,12 +77,63 @@ def init_params(rng: jax.Array, hidden: int = 64,
 
 
 def forward(params: Dict, x: jax.Array) -> jax.Array:
-    """x [..., F] -> r̂ [..., 3] in [0, 1]."""
+    """x [..., F] -> r̂ [..., 3] in [0, 1] (jax; the training-time forward)."""
     if "net" in params:                      # plain 2-layer MLP (ablation)
         return jax.nn.sigmoid(_mlp(params["net"], x))
     logits = _mlp(params["base"], x[..., :STATE_DIM])
     delta = _mlp(params["delta"], x) * x[..., MIG_FLAG:MIG_FLAG + 1]
     return jax.nn.sigmoid(logits + delta)
+
+
+# ----------------- deployment forward (numpy, batch-invariant) ------------- #
+def _pow2_at_least(n: int) -> int:
+    k = 1
+    while k < n:
+        k <<= 1
+    return k
+
+
+def _tree_matmul(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """``x [..., K] @ w [K, H]`` with a pairwise-halving K reduction.
+
+    The input axis is zero-padded to a power of two and folded in halves;
+    folding an all-zero upper half returns the lower half unchanged, so
+    each ``[..., h]`` output is a fixed-order sum over its own row only —
+    identical doubles whatever the leading batch shape is.
+    """
+    K, H = w.shape
+    Kp = _pow2_at_least(K)
+    prod = np.zeros(x.shape[:-1] + (H, Kp))
+    prod[..., :K] = x[..., None, :] * w.T
+    while prod.shape[-1] > 1:
+        h = prod.shape[-1] // 2
+        prod = prod[..., :h] + prod[..., h:]
+    return prod[..., 0]
+
+
+def _mlp_np(params: Dict[str, np.ndarray], x: np.ndarray) -> np.ndarray:
+    h = np.maximum(_tree_matmul(x, params["w1"]) + params["b1"], 0.0)
+    h = np.maximum(_tree_matmul(h, params["w2"]) + params["b2"], 0.0)
+    return _tree_matmul(h, params["w3"]) + params["b3"]
+
+
+def _np_tree(tree) -> Dict:
+    return {k: _np_tree(v) if isinstance(v, dict)
+            else np.asarray(v, np.float64) for k, v in tree.items()}
+
+
+def _sigmoid_np(z: np.ndarray) -> np.ndarray:
+    return 1.0 / (1.0 + np.exp(-z))
+
+
+def forward_np(params_np: Dict, x: np.ndarray) -> np.ndarray:
+    """x [..., F] -> r̂ [..., 3] in float64 numpy, batch-shape invariant."""
+    x = np.asarray(x, np.float64)
+    if "net" in params_np:                   # plain 2-layer MLP (ablation)
+        return _sigmoid_np(_mlp_np(params_np["net"], x))
+    logits = _mlp_np(params_np["base"], x[..., :STATE_DIM])
+    delta = _mlp_np(params_np["delta"], x) * x[..., MIG_FLAG:MIG_FLAG + 1]
+    return _sigmoid_np(logits + delta)
 
 
 def loss_fn(params: Dict, x: jax.Array, r: jax.Array,
@@ -115,30 +176,92 @@ class Critic:
     params: Dict
     class_weights: Tuple[float, float, float] = DEFAULT_CLASS_WEIGHTS
 
+    # ---- frozen-net caches (deployment path) ---- #
+    @property
+    def params_np(self) -> Dict:
+        cache = getattr(self, "_params_np", None)
+        if cache is None:
+            cache = _np_tree(self.params)
+            object.__setattr__(self, "_params_np", cache)
+        return cache
+
+    def fingerprint(self) -> str:
+        """Content hash of the frozen parameters (+ class weights): equal
+        fingerprints mean interchangeable critics, so the batched epoch
+        pipeline can group replicas that loaded the same artifact."""
+        fp = getattr(self, "_fingerprint", None)
+        if fp is None:
+            h = hashlib.sha256()
+            h.update(repr(tuple(self.class_weights)).encode())
+
+            def feed(tree):
+                for k in sorted(tree):
+                    v = tree[k]
+                    if isinstance(v, dict):
+                        h.update(k.encode())
+                        feed(v)
+                    else:
+                        h.update(k.encode())
+                        h.update(np.ascontiguousarray(
+                            np.asarray(v, np.float32)).tobytes())
+            feed(self.params)
+            fp = h.hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
     # ---- scoring (deployment path) ---- #
     def predict(self, snap: EpochSnapshot,
                 action: Optional[MigrationAction]) -> np.ndarray:
-        x = featurize(snap, action)[None]
-        return np.asarray(forward(self.params, jnp.asarray(x))[0])
+        return forward_np(self.params_np, featurize(snap, action)[None])[0]
 
     def predict_batch(self, snap: EpochSnapshot, actions) -> np.ndarray:
-        x = np.stack([featurize(snap, a) for a in actions])
-        return np.asarray(forward(self.params, jnp.asarray(x)))
+        return forward_np(self.params_np, featurize_batch(snap, actions))
 
     def score(self, r_hat: np.ndarray) -> np.ndarray:
-        """r̄(·) — Eq. 11 weighted mean over (large, small, ran)."""
-        w = np.asarray(self.class_weights)
-        return r_hat @ (w / w.sum())
+        """r̄(·) — Eq. 11 weighted mean over (large, small, ran).
+
+        Fixed-order fused sum (not a matmul) so scores are identical
+        whether computed for one replica or a padded ``[B, C]`` block."""
+        w = np.asarray(self.class_weights, np.float64)
+        wn = w / w.sum()
+        return (r_hat[..., 0] * wn[0] + r_hat[..., 1] * wn[1]
+                + r_hat[..., 2] * wn[2])
 
     def select(self, snap: EpochSnapshot, shortlist: Sequence
                ) -> Tuple[Optional[MigrationAction], np.ndarray]:
         """argmax_j r̄(r̂(s, a^{(j)})) over the agent's shortlist (Eq. 11)."""
         if not shortlist:
             return None, np.zeros(0)
-        r_hat = self.predict_batch(snap, shortlist)
-        scores = self.score(r_hat)
-        j = int(np.argmax(scores))
-        return shortlist[j], scores
+        choices, scores = self.select_batch([snap], [shortlist])
+        return choices[0], scores[0]
+
+    def select_batch(self, snaps: Sequence[EpochSnapshot],
+                     options_list: Sequence[Sequence]
+                     ) -> Tuple[List[Optional[MigrationAction]],
+                                List[np.ndarray]]:
+        """Batched Eq. 11 over B replicas' option lists.
+
+        Features stack into one zero-padded ``[B, Cmax, F]`` block and the
+        frozen net runs once; padded rows are masked out of the argmax.
+        Per-replica results are bit-identical to :meth:`select` (the
+        forward is batch-shape invariant and padding never wins)."""
+        B = len(snaps)
+        counts = [len(opts) for opts in options_list]
+        cmax = max(counts) if counts else 0
+        if cmax == 0:
+            return [None] * B, [np.zeros(0)] * B
+        x = np.zeros((B, cmax, FEATURE_DIM), np.float32)
+        for b, (snap, opts) in enumerate(zip(snaps, options_list)):
+            if opts:
+                x[b, :len(opts)] = featurize_batch(snap, opts)
+        scores = self.score(forward_np(self.params_np, x))     # [B, Cmax]
+        masked = scores.copy()
+        for b, c in enumerate(counts):
+            masked[b, c:] = -np.inf
+        best = np.argmax(masked, axis=1)
+        choices = [options_list[b][int(best[b])] if counts[b] else None
+                   for b in range(B)]
+        return choices, [scores[b, :counts[b]] for b in range(B)]
 
     # ---- persistence ---- #
     def save(self, path: str) -> None:
@@ -161,6 +284,24 @@ class Critic:
                     for k, v in tree.items()}
         return cls(params=dec(d["params"]),
                    class_weights=tuple(d["class_weights"]))
+
+
+@functools.lru_cache(maxsize=16)
+def _load_critic_cached(path: str, mtime_ns: int, size: int) -> "Critic":
+    return Critic.load(path)
+
+
+def load_critic_cached(path: str) -> "Critic":
+    """Load a critic artifact, sharing one frozen instance per file state.
+
+    The critic is read-only at deployment, so the replicas of a batched
+    sweep cell (each built by :func:`repro.eval.make_method`) can share one
+    object — one parse, one ``params_np`` cache, one fingerprint — instead
+    of B loads.  Keyed on (path, mtime, size): a retrained artifact reloads.
+    """
+    st = os.stat(path)
+    return _load_critic_cached(os.path.abspath(path), st.st_mtime_ns,
+                               st.st_size)
 
 
 def train_critic(samples: List[Tuple[np.ndarray, np.ndarray, np.ndarray]],

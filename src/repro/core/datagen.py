@@ -12,20 +12,30 @@ Two complementary sources:
    a clean action-contrast the regression can't get from exploration alone.
    Probes cover both the pre-split state (consolidated large-AI) and the
    post-split state (anti-ping-pong: re-consolidating must score worse).
+
+Both sources fan out through ``Simulator.run_batch``: exploration seeds
+and probe replays are independent replicas of one scenario, so they
+advance as ``[B, S]`` blocks instead of B solo event loops (the samples
+are identical either way — the batched engine is discrete-outcome
+identical per replica).  :func:`harvest_families` scales this across the
+``repro.sim.scenarios`` registry — per-family harvests (``paper``,
+``node-outage``, ``flash-crowd``, ``heavy-tail``, …) for multi-family
+critic training and held-out-family generalization measurements
+(see ``benchmarks/critic_data.py``).
 """
 from __future__ import annotations
 
-import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import RandomPlacement, ScriptedPlacement
 from repro.core.critic import epoch_records_to_samples
 from repro.sim.engine import DeadlineAwareAllocation, Simulator
-from repro.sim.workload import WorkloadConfig, generate_workload
+from repro.sim.scenarios import make_scenario, workload_for
+from repro.sim.types import InstanceCategory
 
-# actions probed at each counterfactual epoch (instance name, dst node)
+# actions probed at each counterfactual epoch (instance name, dst node) —
+# written against the paper topology; resolve_probes() filters/derives for
+# other topologies
 PRE_SPLIT_PROBES: List[Optional[Tuple[str, int]]] = [
     None,
     ("large0", 1), ("large0", 4), ("large0", 5),
@@ -42,6 +52,55 @@ POST_SPLIT_PROBES: List[Optional[Tuple[str, int]]] = [
 ]
 
 
+def resolve_probes(scenario: Dict,
+                   probes: Sequence[Optional[Tuple[str, int]]]
+                   ) -> List[Optional[Tuple[str, int]]]:
+    """Keep probes whose instance / destination exist in this topology.
+
+    Families sharing the paper topology (the default harvest set) keep the
+    full list; for other topologies, fall back to a derived set — each
+    category's first instance probed toward every foreign node — so the
+    counterfactual contrast survives a scaled scenario.
+    """
+    names = {s.name for s in scenario["instances"]}
+    n_nodes = len(scenario["nodes"])
+    kept = [p for p in probes
+            if p is None or (p[0] in names and p[1] < n_nodes)]
+    if len(kept) > 1:
+        return kept
+    derived: List[Optional[Tuple[str, int]]] = [None]
+    for cat in (InstanceCategory.LARGE_AI, InstanceCategory.SMALL_AI,
+                InstanceCategory.DU, InstanceCategory.CUUP):
+        inst = next((s for s in scenario["instances"]
+                     if s.category == cat), None)
+        if inst is None:
+            continue
+        src = scenario["placement"][inst.sid]
+        for dst in range(n_nodes):
+            if dst != src:
+                derived.append((inst.name, dst))
+    return derived
+
+
+def _run_blocks(sim: Simulator, runs: Sequence[Tuple[List, Callable]],
+                batch_size: int):
+    """Fan (workload, placement-factory) runs into ``run_batch`` blocks.
+
+    ``batch_size <= 1`` keeps the classic per-run solo loop (same
+    discrete outcomes; the batch-invariance test pins it)."""
+    alloc = DeadlineAwareAllocation
+    if batch_size <= 1:
+        return [sim.run(wl, make_pol(), alloc()) for wl, make_pol in runs]
+    results = []
+    for lo in range(0, len(runs), batch_size):
+        chunk = runs[lo:lo + batch_size]
+        results.extend(sim.run_batch(
+            [wl for wl, _ in chunk],
+            [make_pol() for _, make_pol in chunk],
+            lambda b: alloc()))
+    return results
+
+
 def harvest(scenario: Dict, *, epoch_interval: float = 5.0,
             bulk_runs: Sequence[Tuple[float, int]] = (
                 (0.75, 1), (1.0, 2), (1.25, 3), (1.0, 4),
@@ -52,33 +111,38 @@ def harvest(scenario: Dict, *, epoch_interval: float = 5.0,
             probe_epochs_post: Sequence[int] = (6, 14),
             label_horizon: Optional[int] = None,
             probe_weight: int = 8,
+            batch_size: int = 16,
+            engine: str = "numpy",
             verbose: bool = False) -> List:
-    """Returns (φ, r, mask) samples for :func:`repro.core.critic.train_critic`."""
-    sim = Simulator(scenario, epoch_interval=epoch_interval)
-    alloc = DeadlineAwareAllocation()
+    """Returns (φ, r, mask) samples for :func:`repro.core.critic.train_critic`.
+
+    All simulator work fans into batched ``[B, S]`` runs of up to
+    ``batch_size`` replicas (``batch_size <= 1`` keeps the solo loop; the
+    samples are identical — pinned by tests).
+    """
+    sim = Simulator(scenario, epoch_interval=epoch_interval, engine=engine)
     samples: List = []
 
     def log(msg):
         if verbose:
             print(f"[datagen] {msg}", flush=True)
 
-    # ---- 1) bulk exploration ------------------------------------------- #
+    # ---- 1) bulk exploration (one batched block over load × seed) ------- #
+    bulk: List[Tuple[List, Callable]] = []
     for rho, seed in bulk_runs:
-        wcfg = WorkloadConfig(rho=rho, n_ai_requests=bulk_requests, seed=seed)
-        reqs, _ = generate_workload(wcfg, scenario["work_models"])
-        res = sim.run(reqs, RandomPlacement(seed=seed, cooldown=8), alloc)
+        reqs, _ = workload_for(scenario, seed=seed,
+                               n_ai_requests=bulk_requests, rho=rho)
+        bulk.append((reqs, lambda seed=seed: RandomPlacement(seed=seed,
+                                                             cooldown=8)))
+    for res in _run_blocks(sim, bulk, batch_size):
         samples += epoch_records_to_samples(res.epochs, horizon=label_horizon)
-        log(f"bulk rho={rho} seed={seed}: {len(samples)} samples so far")
+    log(f"bulk x{len(bulk)} (batch={batch_size}): {len(samples)} samples")
 
-    # ---- 2) counterfactual probes -------------------------------------- #
-    wcfg = WorkloadConfig(rho=1.0, n_ai_requests=probe_requests, seed=42)
-    reqs, _ = generate_workload(wcfg, scenario["work_models"])
+    # ---- 2) counterfactual probes (batched same-workload replays) -------- #
+    reqs, _ = workload_for(scenario, seed=42, n_ai_requests=probe_requests,
+                           rho=1.0)
 
-    def probe(prefix: Dict, k: int, action) -> None:
-        script = dict(prefix)
-        if action is not None:
-            script[k] = action
-        res = sim.run(reqs, ScriptedPlacement(script), alloc)
+    def collect(res, k: int, action) -> None:
         all_s = epoch_records_to_samples(res.epochs, horizon=label_horizon)
         # keep only the probe-epoch sample (clean counterfactual) plus the
         # prefix epochs once (they are identical across actions — dedup by
@@ -91,15 +155,73 @@ def harvest(scenario: Dict, *, epoch_interval: float = 5.0,
             elif action is None and rec.epoch < k:
                 samples.append(all_s[i])
 
-    for k in probe_epochs_pre:
-        for action in PRE_SPLIT_PROBES:
-            probe({}, k, action)
-        log(f"pre-split probes @ epoch {k}: {len(samples)} samples")
+    def probe_block(prefix: Dict, epochs: Sequence[int],
+                    probes: Sequence) -> None:
+        plan = []
+        runs: List[Tuple[List, Callable]] = []
+        for k in epochs:
+            for action in probes:
+                script = dict(prefix)
+                if action is not None:
+                    script[k] = action
+                plan.append((k, action))
+                runs.append((reqs,
+                             lambda script=script: ScriptedPlacement(script)))
+        for (k, action), res in zip(plan, _run_blocks(sim, runs,
+                                                      batch_size)):
+            collect(res, k, action)
 
-    split_prefix = {1: ("large0", 1)}
-    for k in probe_epochs_post:
-        for action in POST_SPLIT_PROBES:
-            probe(split_prefix, k, action)
-        log(f"post-split probes @ epoch {k}: {len(samples)} samples")
+    pre = resolve_probes(scenario, PRE_SPLIT_PROBES)
+    probe_block({}, probe_epochs_pre, pre)
+    log(f"pre-split probes @ {tuple(probe_epochs_pre)}: "
+        f"{len(samples)} samples")
+
+    split_prefix = {1: pre[1]} if len(pre) > 1 else {}
+    post = resolve_probes(scenario, POST_SPLIT_PROBES)
+    probe_block(split_prefix, probe_epochs_post, post)
+    log(f"post-split probes @ {tuple(probe_epochs_post)}: "
+        f"{len(samples)} samples")
 
     return samples
+
+
+# scenario families harvested by default: the paper baseline plus the
+# stress families whose migration outcomes the critic must generalize to
+DEFAULT_FAMILIES = ("paper", "node-outage", "flash-crowd", "heavy-tail")
+
+
+def harvest_families(families: Sequence[str] = DEFAULT_FAMILIES, *,
+                     scenario_seed: int = 0,
+                     scenario_params: Optional[Dict[str, Dict]] = None,
+                     verbose: bool = False,
+                     **harvest_kw) -> Dict[str, List]:
+    """Per-family (φ, r, mask) sample sets across the scenario registry.
+
+    Returns ``{family: samples}`` so callers can train on any subset —
+    the all-family critic, or the leave-one-out critics the held-out
+    generalization evaluation needs.  ``scenario_params[family]`` forwards
+    family-specific knobs to :func:`make_scenario`.
+    """
+    out: Dict[str, List] = {}
+    params = scenario_params or {}
+    for family in families:
+        sc = make_scenario(family, seed=scenario_seed,
+                           **params.get(family, {}))
+        if verbose:
+            print(f"[datagen] harvesting family {family!r}", flush=True)
+        out[family] = harvest(sc, verbose=verbose, **harvest_kw)
+        if verbose:
+            print(f"[datagen] {family}: {len(out[family])} samples",
+                  flush=True)
+    return out
+
+
+def merge_samples(per_family: Dict[str, List],
+                  exclude: Sequence[str] = ()) -> List:
+    """Flatten per-family samples, optionally holding families out."""
+    out: List = []
+    for family, samples in per_family.items():
+        if family in exclude:
+            continue
+        out.extend(samples)
+    return out

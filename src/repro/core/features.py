@@ -3,11 +3,17 @@
 Fixed-size, scale-normalized features so one critic generalizes across load
 levels.  Everything is derived from the :class:`EpochSnapshot` — the critic
 sees exactly what the agent's prompt describes, no simulator internals.
+
+The canonical entry point is :func:`featurize_batch`: one vectorized
+``[C, F]`` evaluation over a snapshot's candidate actions (per-node blocks
+are built once and gathered per action).  :func:`featurize` is the
+single-action view of the same code path, so solo and batched decide paths
+cannot drift — the batched epoch pipeline stacks these rows into the
+``[B, C, F]`` critic input without re-deriving anything.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -19,73 +25,106 @@ FEATURE_DIM = 40
 _CAT_IDX = {InstanceCategory.DU: 0, InstanceCategory.CUUP: 1,
             InstanceCategory.LARGE_AI: 2, InstanceCategory.SMALL_AI: 3}
 
+# feature-vector layout offsets
+STATE = 0          # φ[0:9]   global state block
+ACT = 9            # φ[9:19]  action block (φ[9] = 1[a≠∅])
+SRC = 19           # φ[19:26] source-node block
+DST = 26           # φ[26:33] destination-node block
+DERIVED = 33       # φ[33:37] interaction terms
 
-def _log1p_scale(x: float, scale: float) -> float:
-    return math.log1p(max(x, 0.0) / scale)
+
+def _log1p_scale(x: np.ndarray, scale: float) -> np.ndarray:
+    return np.log1p(np.maximum(x, 0.0) / scale)
 
 
-def _node_block(snap: EpochSnapshot, n: int) -> list:
-    node = snap.nodes[n]
-    on_node = [s for s in range(snap.S) if snap.placement[s] == n]
-    psi_node = float(sum(snap.psi_g[s] for s in on_node))
-    return [
-        float(snap.gpu_util[n]),
-        float(snap.cpu_util[n]),
-        float(snap.ran_floor_g[n]),
-        float(snap.ran_floor_c[n]),
-        float(snap.vram_headroom[n] / max(node.vram_bytes, 1.0)),
-        _log1p_scale(psi_node / max(node.gpu_flops, 1.0), 1.0),  # backlog-sec
-        len(on_node) / max(snap.S, 1),
-    ]
+def node_blocks(snap: EpochSnapshot) -> np.ndarray:
+    """Per-node feature blocks ``[N, 7]`` (built once per snapshot)."""
+    N, S = snap.N, snap.S
+    gflops = np.array([n.gpu_flops for n in snap.nodes], np.float64)
+    vram = np.array([n.vram_bytes for n in snap.nodes], np.float64)
+    psi_node = snap.psi_g_by_node()
+    counts = np.bincount(snap.placement, minlength=N).astype(np.float64)
+    out = np.empty((N, 7))
+    out[:, 0] = snap.gpu_util
+    out[:, 1] = snap.cpu_util
+    out[:, 2] = snap.ran_floor_g
+    out[:, 3] = snap.ran_floor_c
+    out[:, 4] = snap.vram_headroom / np.maximum(vram, 1.0)
+    out[:, 5] = _log1p_scale(psi_node / np.maximum(gflops, 1.0), 1.0)
+    out[:, 6] = counts / max(S, 1)
+    return out
+
+
+def featurize_batch(snap: EpochSnapshot,
+                    actions: Sequence[Optional[MigrationAction]]
+                    ) -> np.ndarray:
+    """φ(s, a) for every action → float32 ``[C, FEATURE_DIM]``.
+
+    ``None`` entries (no-migration) get the state block with the action,
+    node, and interaction blocks zeroed.
+    """
+    C = len(actions)
+    f = np.zeros((C, FEATURE_DIM))
+
+    # ---- global state (9), shared by every action row -------------------- #
+    state = np.empty(9)
+    state[0] = np.mean(snap.gpu_util)
+    state[1] = np.max(snap.gpu_util)
+    state[2] = np.mean(snap.cpu_util)
+    state[3] = np.max(snap.cpu_util)
+    total_g = float(sum(n.gpu_flops for n in snap.nodes))
+    state[4] = _log1p_scale(np.asarray(float(np.sum(snap.psi_g)) / total_g),
+                            1.0)
+    state[5] = _log1p_scale(np.asarray(float(np.sum(snap.omega))), 100.0)
+    state[6] = snap.recent_fulfill.get("LARGE_AI", 1.0)
+    state[7] = snap.recent_fulfill.get("SMALL_AI", 1.0)
+    state[8] = snap.recent_fulfill.get("RAN", 1.0)
+    f[:, STATE:STATE + 9] = state
+
+    rows = [i for i, a in enumerate(actions) if a is not None]
+    if rows:
+        idx = np.asarray(rows, np.int64)
+        migs: List[MigrationAction] = [actions[i] for i in rows]
+        insts = [snap.instances[a.sid] for a in migs]
+        sids = np.array([a.sid for a in migs], np.int64)
+        srcs = np.array([a.src for a in migs], np.int64)
+        dsts = np.array([a.dst for a in migs], np.int64)
+        gflops = np.array([n.gpu_flops for n in snap.nodes], np.float64)
+        q_s = snap.psi_g[sids].astype(np.float64)
+        src_g = np.maximum(gflops[srcs], 1.0)
+        dst_g = np.maximum(gflops[dsts], 1.0)
+        rcfg = np.array([i.reconfig_s for i in insts], np.float64)
+        rates = np.array([snap.arrival_rate.get(i.arch, 0.0) for i in insts],
+                         np.float64)
+
+        # ---- action block (10) ------------------------------------------ #
+        f[idx, ACT] = 1.0
+        cats = np.array([_CAT_IDX[i.category] for i in insts], np.int64)
+        f[idx, ACT + 1 + cats] = 1.0
+        f[idx, ACT + 5] = _log1p_scale(rcfg, 1.0)                    # R_s
+        f[idx, ACT + 6] = _log1p_scale(
+            np.array([i.weight_bytes for i in insts], np.float64), 1e9)
+        f[idx, ACT + 7] = _log1p_scale(
+            snap.kv_held[sids].astype(np.float64), 1e9)
+        f[idx, ACT + 8] = _log1p_scale(
+            snap.queue_len[sids].astype(np.float64), 10.0)
+        f[idx, ACT + 9] = _log1p_scale(q_s / dst_g, 1.0)
+        # ---- source / destination node blocks (7 + 7) -------------------- #
+        blocks = node_blocks(snap)
+        f[idx, SRC:SRC + 7] = blocks[srcs]
+        f[idx, DST:DST + 7] = blocks[dsts]
+        # ---- derived interaction terms (4) -------------------------------- #
+        f[idx, DERIVED] = snap.gpu_util[srcs] - snap.gpu_util[dsts]
+        f[idx, DERIVED + 1] = snap.cpu_util[srcs] - snap.cpu_util[dsts]
+        f[idx, DERIVED + 2] = _log1p_scale(q_s / src_g, 1.0) \
+            - _log1p_scale(q_s / dst_g, 1.0)
+        # outage cost proxy: R_s × service arrival pressure
+        f[idx, DERIVED + 3] = _log1p_scale(rcfg * rates, 1.0)
+
+    return f.astype(np.float32)
 
 
 def featurize(snap: EpochSnapshot,
               action: Optional[MigrationAction]) -> np.ndarray:
-    """φ(s, a) → float32 [FEATURE_DIM]."""
-    f: list = []
-
-    # ---- global state (9) ------------------------------------------------ #
-    f += [float(np.mean(snap.gpu_util)), float(np.max(snap.gpu_util)),
-          float(np.mean(snap.cpu_util)), float(np.max(snap.cpu_util))]
-    total_g = float(sum(n.gpu_flops for n in snap.nodes))
-    f.append(_log1p_scale(float(np.sum(snap.psi_g)) / total_g, 1.0))
-    f.append(_log1p_scale(float(np.sum(snap.omega)), 100.0))
-    f += [snap.recent_fulfill.get("LARGE_AI", 1.0),
-          snap.recent_fulfill.get("SMALL_AI", 1.0),
-          snap.recent_fulfill.get("RAN", 1.0)]
-
-    if action is None:
-        f += [0.0] * 10                       # action block: no migration
-        f += [0.0] * 7 + [0.0] * 7            # src/dst blocks zeroed
-        f += [0.0] * 4
-    else:
-        inst = snap.instances[action.sid]
-        cat = np.zeros(4)
-        cat[_CAT_IDX[inst.category]] = 1.0
-        q_s = float(snap.psi_g[action.sid])
-        src_n, dst_n = snap.nodes[action.src], snap.nodes[action.dst]
-        # ---- action block (10) ------------------------------------------ #
-        f += [1.0, *cat.tolist(),
-              _log1p_scale(inst.reconfig_s, 1.0),              # R_s
-              _log1p_scale(inst.weight_bytes, 1e9),            # M_s
-              _log1p_scale(float(snap.kv_held[action.sid]), 1e9),
-              _log1p_scale(float(snap.queue_len[action.sid]), 10.0),
-              _log1p_scale(q_s / max(dst_n.gpu_flops, 1.0), 1.0)]
-        # ---- source / destination node blocks (7 + 7) -------------------- #
-        f += _node_block(snap, action.src)
-        f += _node_block(snap, action.dst)
-        # ---- derived interaction terms (4) -------------------------------- #
-        f += [
-            float(snap.gpu_util[action.src] - snap.gpu_util[action.dst]),
-            float(snap.cpu_util[action.src] - snap.cpu_util[action.dst]),
-            _log1p_scale(q_s / max(src_n.gpu_flops, 1.0), 1.0)
-            - _log1p_scale(q_s / max(dst_n.gpu_flops, 1.0), 1.0),
-            # outage cost proxy: R_s × service arrival pressure
-            _log1p_scale(inst.reconfig_s
-                         * snap.arrival_rate.get(inst.arch, 0.0), 1.0),
-        ]
-
-    # pad/trim to FEATURE_DIM
-    if len(f) < FEATURE_DIM:
-        f += [0.0] * (FEATURE_DIM - len(f))
-    return np.asarray(f[:FEATURE_DIM], np.float32)
+    """φ(s, a) → float32 [FEATURE_DIM] (one row of :func:`featurize_batch`)."""
+    return featurize_batch(snap, [action])[0]

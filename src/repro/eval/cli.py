@@ -39,6 +39,14 @@ def _parse_methods(text: str, critic_path: Optional[str],
             continue
         if name == "haf":
             methods.append(haf_spec(agent=agent, critic_path=critic_path))
+        elif name.startswith("haf-llm:"):
+            # haf-llm:<shell cmd> — external LLM endpoint (prompt on stdin,
+            # JSON shortlist on stdout); note the cmd cannot contain commas
+            # (the method list is comma-separated)
+            cmd = name[len("haf-llm:"):]
+            methods.append({"name": "haf-llm", "label": f"haf-llm({cmd})",
+                            "params": {"cmd": cmd,
+                                       "critic_path": critic_path}})
         elif name == "caora":
             methods.append({"name": "caora",
                             "params": {"alpha": caora_alpha}})
@@ -91,9 +99,15 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error(f"unknown scenario families {unknown}; "
                  f"known: {family_names()}")
     bad = [m.strip() for m in args.methods.split(",")
-           if m.strip() and m.strip() not in method_names()]
+           if m.strip() and not m.strip().startswith("haf-llm:")
+           and m.strip() not in method_names()]
+    # bare "haf-llm" is registered (programmatic use passes cmd as a
+    # param) but unusable from the CLI without the :<cmd> suffix
+    bad += [m.strip() for m in args.methods.split(",")
+            if m.strip() == "haf-llm"]
     if bad:
-        ap.error(f"unknown methods {bad}; known: {method_names()}")
+        ap.error(f"unknown methods {bad}; known: {method_names()} "
+                 "(haf-llm needs the command: haf-llm:<cmd>)")
     if args.critic and not os.path.exists(args.critic):
         ap.error(f"--critic file not found: {args.critic}")
 

@@ -3,7 +3,12 @@
 Construction happens inside sweep workers, so methods are referenced by
 name + picklable params rather than by live policy objects.  The HAF
 critic travels as an artifact path (``critic_path``) and is loaded in the
-worker; without one, ``haf`` runs agent-only (HAF-NoCritic).
+worker (cached: the B replicas of a batched cell share one frozen
+instance); without one, ``haf`` runs agent-only (HAF-NoCritic).
+``haf-llm`` swaps the stand-in for an external LLM driven by a shell
+command (prompt on stdin, JSON shortlist on stdout — the
+:mod:`repro.launch.serve` plumbing), so served endpoints sweep against
+the stand-ins with the same harness.
 """
 from __future__ import annotations
 
@@ -86,17 +91,37 @@ def _caora(alpha: float = 0.5) -> MethodInstance:
     return StaticPlacement(), AlphaSplitAllocation(alpha), False
 
 
+def _load_critic(critic_path: Optional[str]):
+    if not critic_path:
+        return None
+    if not os.path.exists(critic_path):
+        raise FileNotFoundError(
+            f"critic artifact not found: {critic_path!r} "
+            f"(pass critic_path=None for agent-only HAF)")
+    from repro.core.critic import load_critic_cached
+    return load_critic_cached(critic_path)
+
+
 @register_method("haf")
 def _haf(agent: str = "qwen3-32b-sim", seed: int = 0,
          critic_path: Optional[str] = None, K: int = 3) -> MethodInstance:
     from repro.core import HAFPlacement, make_agent
-    critic = None
-    if critic_path:
-        if not os.path.exists(critic_path):
-            raise FileNotFoundError(
-                f"critic artifact not found: {critic_path!r} "
-                f"(pass critic_path=None for agent-only HAF)")
-        from repro.core.critic import Critic
-        critic = Critic.load(critic_path)
-    return (HAFPlacement(make_agent(agent, seed=seed), critic=critic, K=K),
+    return (HAFPlacement(make_agent(agent, seed=seed),
+                         critic=_load_critic(critic_path), K=K),
+            DeadlineAwareAllocation(), False)
+
+
+@register_method("haf-llm")
+def _haf_llm(cmd: str, critic_path: Optional[str] = None, K: int = 3,
+             timeout: float = 120.0) -> MethodInstance:
+    """HAF with a real LLM agent behind ``cmd`` (stdin prompt -> stdout).
+
+    Spec sugar: ``"haf-llm:<cmd>"`` on the CLI.  Batched sweeps run these
+    cells too — the epoch pipeline falls back to one completion call per
+    replica while the critic still scores the group in one pass.
+    """
+    from repro.core import HAFPlacement
+    from repro.launch.serve import make_llm_agent
+    return (HAFPlacement(make_llm_agent(cmd, timeout),
+                         critic=_load_critic(critic_path), K=K),
             DeadlineAwareAllocation(), False)

@@ -19,7 +19,11 @@ Two executions paths:
     ``Simulator.run_batch`` call: one process, one scenario build, one
     ``[B, S]`` lockstep simulation instead of B process spawns + B
     scenario rebuilds.  Rows are identical to the classic path
-    (the batched engine is discrete-outcome identical per seed).
+    (the batched engine is discrete-outcome identical per seed).  Every
+    method spec batches — HAF/HAF-NoCritic cells dispatch grouped epoch
+    decisions (one ``[B, C, F]`` critic evaluation per tick) and the B
+    replicas share one cached critic artifact; ``haf-llm`` cells pay one
+    completion call per replica but still batch the fast timescale.
 """
 from __future__ import annotations
 

@@ -28,6 +28,37 @@ DEFAULT_CRITIC = pathlib.Path(__file__).resolve().parents[3] / \
     "artifacts" / "critic.json"
 
 
+def make_llm_complete(cmd: str, timeout: float = 120.0):
+    """``prompt -> completion`` via a shell command (stdin -> stdout).
+
+    The serving adapter for any external LLM endpoint: the command reads
+    the structured placement prompt on stdin and writes the JSON shortlist
+    to stdout (e.g. a ``curl`` against a served model, or a local runner).
+    Shared by this launcher and the ``haf-llm`` method spec of
+    :mod:`repro.eval.policies`.
+    """
+    def complete(prompt: str) -> str:
+        proc = subprocess.run(cmd, shell=True, input=prompt,
+                              capture_output=True, text=True,
+                              timeout=timeout)
+        # a dead endpoint must fail loudly: empty stdout would otherwise
+        # parse as "no migration" at every epoch and the sweep would
+        # record a complete-looking row for an LLM that never answered
+        if proc.returncode != 0:
+            err = (proc.stderr or "").strip()
+            raise RuntimeError(
+                f"LLM command failed (exit {proc.returncode}): {cmd!r}"
+                + (f" — stderr: {err[:500]}" if err else ""))
+        return proc.stdout
+    return complete
+
+
+def make_llm_agent(cmd: str, timeout: float = 120.0) -> ExternalLLMAgent:
+    """An :class:`ExternalLLMAgent` driving ``cmd`` (see above)."""
+    return ExternalLLMAgent(make_llm_complete(cmd, timeout),
+                            name=f"external({cmd})")
+
+
 def get_critic(path: str, scenario) -> Critic:
     p = pathlib.Path(path)
     if p.exists():
@@ -61,11 +92,7 @@ def main() -> None:
           f"horizon={info['horizon']:.0f}s")
 
     if args.llm_cmd:
-        def complete(prompt: str) -> str:
-            return subprocess.run(args.llm_cmd, shell=True, input=prompt,
-                                  capture_output=True, text=True,
-                                  timeout=120).stdout
-        agent = ExternalLLMAgent(complete, name=f"external({args.llm_cmd})")
+        agent = make_llm_agent(args.llm_cmd)
     else:
         agent = make_agent(args.agent, seed=args.seed)
 

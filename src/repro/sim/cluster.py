@@ -37,6 +37,7 @@ onto the object before handing it to the engine.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -79,55 +80,6 @@ def _pow2_at_least(n: int) -> int:
     while k < n:
         k <<= 1
     return k
-
-
-def _active_set_small(w: List[float], floors: List[float],
-                      capacity: float) -> List[float]:
-    """Floors-respecting proportional share (Eq. 17–19) on a few scalars.
-
-    Semantics of :func:`repro.core.allocator_np.active_set_np`, but over the
-    handful of busy instances on ONE node as plain Python floats.  Kept as
-    the readable scalar reference (and for its parity test against the
-    vector implementation); the engine paths run the row-vectorized
-    :func:`_active_set_rows` so many (node, resource) problems solve in
-    one padded pass.
-    """
-    k = len(w)
-    floor_sum = 0.0
-    for f in floors:
-        floor_sum += f
-    if floor_sum > capacity + 1e-6 and floor_sum > 0.0:
-        scale = capacity / floor_sum
-        floors = [f * scale for f in floors]
-    pinned = [wi <= 0.0 for wi in w]
-    for _ in range(k):
-        rem = capacity
-        denom = 0.0
-        for i in range(k):
-            if pinned[i]:
-                rem -= floors[i]
-            else:
-                denom += w[i]
-        rem = max(rem, 0.0)
-        denom = max(denom, EPS_ALLOC)
-        grew = False
-        for i in range(k):
-            if not pinned[i] and w[i] * rem / denom < floors[i]:
-                pinned[i] = True
-                grew = True
-        if not grew:
-            break
-    rem = capacity
-    denom = 0.0
-    for i in range(k):
-        if pinned[i]:
-            rem -= floors[i]
-        else:
-            denom += w[i]
-    rem = max(rem, 0.0)
-    denom = max(denom, EPS_ALLOC)
-    return [floors[i] if pinned[i] else w[i] * rem / denom
-            for i in range(k)]
 
 
 def _active_set_rows(w: np.ndarray, floors: np.ndarray,
@@ -637,12 +589,136 @@ def _collect_node_problems(cluster: ClusterState, t, nodes, full: bool,
                 ss.extend(sids)
 
 
+def _tree_sum_scalars(vals: List[float]) -> float:
+    """Pairwise-halving sum of a few Python floats.
+
+    Zero-pads to a power of two and folds in halves — the same reduction
+    tree (and therefore the same double) :func:`_tree_sum` produces for
+    the zero/infinity-padded array rows, whatever padded width they carry.
+    """
+    k = 1
+    n = len(vals)
+    while k < n:
+        k <<= 1
+    vals = list(vals) + [0.0] * (k - n)
+    while len(vals) > 1:
+        h = len(vals) // 2
+        vals = [vals[i] + vals[i + h] for i in range(h)]
+    return vals[0] if vals else 0.0
+
+
+def _active_set_scalar(w: List[float], floors: List[float],
+                       cap: float) -> List[float]:
+    """Eq. 17–19 active-set fixed point on one problem, Python scalars.
+
+    Evaluates exactly the per-element expressions of
+    :func:`_active_set_rows` with tree-ordered reductions, so the result
+    is bit-identical to the row the padded vector solve would produce
+    (padding contributes exact zeros to every sum and never unpins).
+    """
+    k = len(w)
+    floor_sum = _tree_sum_scalars(floors)
+    if floor_sum > cap + 1e-6 and floor_sum > 0.0:
+        scale = cap / floor_sum
+        floors = [f * scale for f in floors]
+    pinned = [wi <= 0.0 for wi in w]
+
+    def sums():
+        rem = cap - _tree_sum_scalars(
+            [floors[i] if pinned[i] else 0.0 for i in range(k)])
+        rem = max(rem, 0.0)
+        denom = max(_tree_sum_scalars(
+            [0.0 if pinned[i] else w[i] for i in range(k)]), EPS_ALLOC)
+        return rem, denom
+
+    for _ in range(k):
+        rem, denom = sums()
+        grew = False
+        for i in range(k):
+            if not pinned[i] and w[i] * rem / denom < floors[i]:
+                pinned[i] = True
+                grew = True
+        if not grew:
+            break
+    rem, denom = sums()
+    return [floors[i] if pinned[i] else w[i] * rem / denom
+            for i in range(k)]
+
+
+# crossover below which the per-event gather solves faster as Python
+# scalars than as padded numpy rows (single-node realloc after an ordinary
+# event: 1–5 busy heads; epochs / refresh re-solves stay vectorized)
+SCALAR_GATHER_MAX = 8
+
+
+def _deadline_allocate_scalar(cluster: ClusterState, t: float,
+                              probs, node_of, ss) -> None:
+    """Tree-ordered scalar fast path for tiny allocator gathers.
+
+    Evaluates the identical IEEE-754 expressions of
+    :func:`_alloc_floor_math` + :func:`_active_set_rows` element by
+    element (reductions via :func:`_tree_sum_scalars`), so the written
+    allocations are bit-for-bit what the vector path would write — the
+    array set-up cost just never gets paid.  This recovers the solo
+    single-trace throughput the shared batched-gather expressions cost
+    (see ROADMAP) without forking the allocation semantics.
+    """
+    dl_pad = cluster.dl_pad
+    queues = cluster.queues
+    tail_g, head_g = cluster.tail_psi_g, cluster.head_rem_g
+    tail_c, head_c = cluster.tail_psi_c, cluster.head_rem_c
+    cat = cluster._cat_code
+    alloc_g, alloc_c = cluster.alloc_g, cluster.alloc_c
+    for p, (lo, hi) in enumerate(probs):
+        n = node_of[p]
+        gcap = float(cluster.gpu_capacity[n])
+        ccap = float(cluster.cpu_capacity[n])
+        w_g: List[float] = []
+        w_c: List[float] = []
+        fg: List[float] = []
+        fc: List[float] = []
+        for sid in ss[lo:hi]:
+            row = dl_pad[sid]
+            cnt = len(queues[sid].jobs)
+            dls = row[:cnt].tolist()
+            contrib = [1.0 / max(d - t, EPS_URGENCY) for d in dls]
+            omega = _tree_sum_scalars(contrib)           # Eq. 14
+            psi_g = max(float(tail_g[sid]) + float(head_g[sid]), 0.0)
+            psi_c = max(float(tail_c[sid]) + float(head_c[sid]), 0.0)
+            code = cat[sid]
+            f_g = f_c = 0.0
+            if code == _CAT_DU:
+                min_rem = min(dls) - t
+                rem_f = (min_rem - cluster.delta
+                         - float(cluster._alpha_down[sid])) * FLOOR_MARGIN
+                if rem_f <= 0.0:
+                    cluster.infeasible_events += 1
+                f_g = min(psi_g / max(rem_f, EPS_FLOOR), gcap)
+            elif code == _CAT_CUUP:
+                min_rem = min(dls) - t
+                rem_f = min_rem * FLOOR_MARGIN
+                if rem_f <= 0.0:
+                    cluster.infeasible_events += 1
+                f_c = min(psi_c / max(rem_f, EPS_FLOOR), ccap)
+            w_g.append(math.sqrt(omega * psi_g))         # Eq. 17
+            w_c.append(math.sqrt(omega * psi_c))
+            fg.append(f_g)
+            fc.append(f_c)
+        g = _active_set_scalar(w_g, fg, gcap)
+        c = _active_set_scalar(w_c, fc, ccap)
+        for j, sid in enumerate(ss[lo:hi]):
+            alloc_g[sid] = g[j]
+            alloc_c[sid] = c[j]
+
+
 def deadline_allocate_solo(cluster: ClusterState, t: float,
                            nodes=None) -> None:
     """Deadline-aware allocation over ``nodes`` (``None`` = all) of one
     replica: one gather across every servable head of the dirty nodes,
     one padded active-set solve for all (node, resource) problems, one
-    scatter.
+    scatter.  Gathers of at most :data:`SCALAR_GATHER_MAX` heads take the
+    bit-identical tree-ordered scalar path instead (the per-event common
+    case: one dirty node, a few busy instances).
     """
     probs: List[Tuple[int, int]] = []
     node_of: List[int] = []
@@ -659,6 +735,9 @@ def deadline_allocate_solo(cluster: ClusterState, t: float,
     _collect_node_problems(cluster, t, nodes, nodes is None,
                            probs, node_of, ss)
     if not ss:
+        return
+    if len(ss) <= SCALAR_GATHER_MAX:
+        _deadline_allocate_scalar(cluster, t, probs, node_of, ss)
         return
     idx = np.asarray(ss, np.int64)
     cat = cluster._cat_code[idx]

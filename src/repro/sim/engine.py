@@ -27,6 +27,16 @@ Two drivers share one per-replica event machine (:class:`_Replica`):
     deadline-aware reallocations of every replica solve in one
     cross-replica gather (:func:`repro.sim.cluster.deadline_allocate_block`).
     Discrete outcomes are identical to running each seed solo.
+
+The slow timescale is batched the same way: an epoch event only *stages*
+its snapshot (``_Replica.pending_epoch``); the driver collects every
+replica at an epoch boundary this tick and hands them to
+:func:`dispatch_epoch_decisions`, which groups compatible policies (by
+``batch_key()``) into ONE ``decide_group`` call — the HAF stack stacks
+candidate features ``[B, C, F]`` and runs the critic once per group —
+then commits each replica's action (``_Replica.commit_epoch``).  The
+solo driver routes single epochs through the same dispatcher, so batched
+and solo decisions are the same code on the same inputs.
 """
 from __future__ import annotations
 
@@ -160,7 +170,7 @@ class _Replica:
                  "service_sids", "ran_packet", "delta", "heap", "seq",
                  "dropped", "migrations", "epochs", "win", "arrivals_win",
                  "current_rec", "t", "n_events", "truncated", "dirty",
-                 "last_full", "epoch_hook", "done")
+                 "last_full", "epoch_hook", "done", "pending_epoch")
 
     def __init__(self, sc: Dict, epoch_interval: float, drop_expired: bool,
                  requests: List[Request], placement: PlacementPolicy,
@@ -220,6 +230,9 @@ class _Replica:
         self.n_events = 0
         self.truncated = False
         self.done = False
+        # epoch boundary reached this event: (k, snapshot) awaiting the
+        # placement decision (dispatched by the driver, possibly batched)
+        self.pending_epoch: Optional[Tuple[int, EpochSnapshot]] = None
         allocation.allocate(self.cluster, self.t)
         self.dirty: set = set()
         self.last_full = 0.0
@@ -362,37 +375,12 @@ class _Replica:
                 kv_bytes=req.kv_bytes))
             self.mark(sid)
         elif kind == "epoch":
+            # the decision is the driver's: it collects every replica that
+            # reached an epoch boundary this tick and dispatches one
+            # (possibly batched) decide, then calls commit_epoch
             k: int = payload
             self.close_epoch_window(self.current_rec)
-            snap = self.build_snapshot(k)
-            action = self.placement.decide(snap)
-            shortlist = getattr(self.placement, "last_shortlist", [])
-            if action is not None:
-                ok = (cluster.migration_feasible(action)
-                      and cluster.available(action.sid, t))
-                if ok:
-                    inst = cluster.instances[action.sid]
-                    committed = CommittedMigration(
-                        sid=action.sid, src=action.src,
-                        dst=action.dst, category=inst.category)
-                    cluster.apply_migration(committed, t)
-                    # landing on a node mid-outage: the instance
-                    # stays dark until the node itself returns
-                    until = t + inst.reconfig_s
-                    for node, o0, o1 in sc.get("outages", ()):
-                        if int(node) == action.dst and o0 <= t < o1:
-                            until = max(until, float(o1))
-                    cluster.reconfig_until[action.sid] = until
-                    self.migrations.append((t, committed))
-                    self.push(until, "mig_done", action.sid)
-                else:
-                    action = None
-            self.current_rec = EpochRecord(
-                epoch=k, t=t, snapshot=snap, action=action,
-                shortlist=list(shortlist))
-            self.epochs.append(self.current_rec)
-            if self.epoch_hook is not None:
-                self.epoch_hook(self.current_rec, cluster)
+            self.pending_epoch = (k, self.build_snapshot(k))
         elif kind == "mig_done":
             self.mark(payload)   # availability flip triggers realloc
         elif kind == "outage":
@@ -407,8 +395,45 @@ class _Replica:
             for sid in range(cluster.S):
                 if cluster.placement[sid] == payload:
                     self.mark(sid)   # back online: trigger realloc
-        if kind == "epoch":
-            self.dirty.update(range(cluster.N))
+
+    def commit_epoch(self, k: int, snap: EpochSnapshot,
+                     action: Optional[MigrationAction]) -> None:
+        """Apply the placement decision for epoch ``k`` (Eq. 12 commit).
+
+        Runs exactly the post-decide tail the epoch event used to handle
+        inline: feasibility gate, migration apply + reconfiguration window
+        (outage-aware), EpochRecord bookkeeping, hook, full-realloc mark.
+        """
+        cluster, t, sc = self.cluster, self.t, self.sc
+        shortlist = getattr(self.placement, "last_shortlist", [])
+        if action is not None:
+            ok = (cluster.migration_feasible(action)
+                  and cluster.available(action.sid, t))
+            if ok:
+                inst = cluster.instances[action.sid]
+                committed = CommittedMigration(
+                    sid=action.sid, src=action.src,
+                    dst=action.dst, category=inst.category)
+                cluster.apply_migration(committed, t)
+                # landing on a node mid-outage: the instance
+                # stays dark until the node itself returns
+                until = t + inst.reconfig_s
+                for node, o0, o1 in sc.get("outages", ()):
+                    if int(node) == action.dst and o0 <= t < o1:
+                        until = max(until, float(o1))
+                cluster.reconfig_until[action.sid] = until
+                self.migrations.append((t, committed))
+                self.push(until, "mig_done", action.sid)
+            else:
+                action = None
+        self.current_rec = EpochRecord(
+            epoch=k, t=t, snapshot=snap, action=action,
+            shortlist=list(shortlist))
+        self.epochs.append(self.current_rec)
+        if self.epoch_hook is not None:
+            self.epoch_hook(self.current_rec, cluster)
+        self.pending_epoch = None
+        self.dirty.update(range(cluster.N))
 
     def realloc_nodes(self):
         """Post-event reallocation scope: ``None`` = full re-solve,
@@ -430,6 +455,57 @@ class _Replica:
                          migrations=self.migrations, epochs=self.epochs,
                          infeasible_events=self.cluster.infeasible_events,
                          n_events=self.n_events, truncated=self.truncated)
+
+
+def dispatch_epoch_decisions(reps: Sequence[_Replica]) -> None:
+    """Decide + commit the pending epoch of every given replica.
+
+    The slow-timescale analogue of the ``[B, S]`` event step: policies
+    exposing ``batch_key()`` / ``decide_group()`` and sharing a key are
+    decided by ONE batched call (HAF stacks candidate features and runs
+    the critic once for the whole group); everything else — plain
+    baselines, scripted policies, LLM-backed agents keyed per instance —
+    falls back to per-replica ``decide``.  Grouping must not change
+    outcomes: ``decide_group`` is batch-shape invariant and ``decide`` is
+    its B=1 view, so a replica's committed action is identical however
+    its epoch boundary lands in a batch.
+    """
+    items = [(rep,) + rep.pending_epoch for rep in reps]
+    actions: List[Optional[MigrationAction]] = [None] * len(items)
+    groups: Dict[tuple, List[int]] = {}
+    for i, (rep, k, snap) in enumerate(items):
+        pol = rep.placement
+        key = None
+        key_fn = getattr(pol, "batch_key", None)
+        if key_fn is not None and hasattr(type(pol), "decide_group"):
+            key = key_fn()
+        if key is None:
+            actions[i] = pol.decide(snap)
+        else:
+            groups.setdefault((type(pol), key), []).append(i)
+    for (pol_cls, _), idxs in groups.items():
+        decided = pol_cls.decide_group(
+            [items[i][0].placement for i in idxs],
+            [items[i][2] for i in idxs])
+        for i, action in zip(idxs, decided):
+            actions[i] = action
+    for (rep, k, snap), action in zip(items, actions):
+        rep.commit_epoch(k, snap, action)
+
+
+def _realize_policies(spec, B: int, what: str) -> List:
+    """A per-replica policy list from a list OR a factory ``f(b) -> policy``.
+
+    Policy objects are stateful, so a batch needs one instance per replica;
+    the factory form makes that explicit at the call site."""
+    if callable(spec) and not isinstance(spec, (list, tuple)):
+        return [spec(b) for b in range(B)]
+    out = list(spec)
+    if len(out) != B:
+        raise ValueError(
+            f"run_batch needs one {what} per replica: got {len(out)} "
+            f"for {B} workloads (or pass a factory f(b) -> policy)")
+    return out
 
 
 class Simulator:
@@ -491,6 +567,8 @@ class Simulator:
                 rep.handle_completion(sid_comp)
             else:
                 rep.handle_timed()
+                if rep.pending_epoch is not None:
+                    dispatch_epoch_decisions((rep,))
 
             rep.cleanup_drops()
             nodes = rep.realloc_nodes()
@@ -503,8 +581,8 @@ class Simulator:
 
     # ------------------------------------------------------------------ #
     def run_batch(self, workloads: Sequence[List[Request]],
-                  placements: Sequence[PlacementPolicy],
-                  allocations: Sequence[AllocationPolicy],
+                  placements,
+                  allocations,
                   rr_dispatch: bool = False,
                   max_events: int = 5_000_000,
                   epoch_hooks: Optional[Sequence[Optional[Callable]]] = None,
@@ -513,21 +591,26 @@ class Simulator:
 
         ``workloads[b]`` / ``placements[b]`` / ``allocations[b]`` belong to
         replica ``b`` (policy objects are stateful — pass one instance per
+        replica, or a factory ``f(b) -> policy`` and one is built per
         replica).  The per-event hot pair runs once per tick over the
         whole ``[B, S]`` block; event handling, heaps, and epoch logic
-        stay per-replica, so every replica's discrete outcome is
-        identical to a solo ``run`` with the same seed.  ``engine``
-        overrides the batched core (``numpy | scalar | jax | pallas``);
-        the default reuses the simulator's engine name.
+        stay per-replica — except the slow-timescale decision itself:
+        every replica whose event this tick is an epoch boundary joins
+        ONE (possibly grouped) :func:`dispatch_epoch_decisions` call, so
+        compatible agentic policies batch their candidate features and
+        critic forward instead of paying B Python callbacks.  Every
+        replica's discrete outcome is identical to a solo ``run`` with
+        the same seed.  ``engine`` overrides the batched core
+        (``numpy | scalar | jax | pallas``); the default reuses the
+        simulator's engine name.
         """
         B = len(workloads)
-        if len(placements) != B or len(allocations) != B \
-                or (epoch_hooks is not None and len(epoch_hooks) != B):
+        placements = _realize_policies(placements, B, "placement")
+        allocations = _realize_policies(allocations, B, "allocation")
+        if epoch_hooks is not None and len(epoch_hooks) != B:
             raise ValueError(
-                "run_batch needs one placement/allocation (and epoch_hook, "
-                f"when given) per replica: got {B} workloads, "
-                f"{len(placements)} placements, {len(allocations)} "
-                "allocations")
+                f"run_batch needs one epoch_hook per replica when given: "
+                f"got {len(epoch_hooks)} for {B} workloads")
         hooks = epoch_hooks if epoch_hooks is not None else [None] * B
         reps = [_Replica(self.scenario, self.epoch_interval,
                          self.drop_expired, workloads[b], placements[b],
@@ -547,6 +630,25 @@ class Simulator:
         can_step = np.zeros(B, bool)
         n_live = B
         node_lists: List = [()] * B
+        state = {"any_alloc": False}
+
+        def settle(b: int, rep: _Replica) -> None:
+            """Post-event tail of one replica: drops, realloc scope, next
+            event time.  Runs right after the event for ordinary events,
+            or after the batched decide for epoch boundaries — either way
+            at the same point of the replica's own event order."""
+            rep.cleanup_drops()
+            nodes = rep.realloc_nodes()
+            if nodes == ():
+                pass
+            elif fast_alloc:
+                node_lists[b] = nodes          # None = full re-solve
+                state["any_alloc"] = True
+            elif nodes is None:
+                rep.allocation.allocate(rep.cluster, rep.t)
+            else:
+                rep.allocation.allocate(rep.cluster, rep.t, nodes)
+            t_ev[b] = rep.heap[0][0] if rep.heap else INF
 
         while n_live:
             for b, rep in enumerate(reps):
@@ -556,7 +658,8 @@ class Simulator:
             finite = np.isfinite(t_next)
             np.copyto(t_vec, t_next, where=can_step & finite)
 
-            any_alloc = False
+            state["any_alloc"] = False
+            at_epoch: List[int] = []
             for b, rep in enumerate(reps):
                 node_lists[b] = ()
                 if rep.done:
@@ -578,20 +681,18 @@ class Simulator:
                     rep.handle_completion(sid)
                 else:
                     rep.handle_timed()
-                rep.cleanup_drops()
-                nodes = rep.realloc_nodes()
-                if nodes == ():
-                    pass
-                elif fast_alloc:
-                    node_lists[b] = nodes          # None = full re-solve
-                    any_alloc = True
-                elif nodes is None:
-                    rep.allocation.allocate(rep.cluster, rep.t)
-                else:
-                    rep.allocation.allocate(rep.cluster, rep.t, nodes)
-                t_ev[b] = rep.heap[0][0] if rep.heap else INF
+                    if rep.pending_epoch is not None:
+                        at_epoch.append(b)     # decide after the sweep
+                        continue
+                settle(b, rep)
 
-            if any_alloc:
+            if at_epoch:
+                # one batched decide for every replica at an epoch
+                # boundary this tick, then their deferred settle
+                dispatch_epoch_decisions([reps[b] for b in at_epoch])
+                for b in at_epoch:
+                    settle(b, reps[b])
+            if state["any_alloc"]:
                 deadline_allocate_block(block, t_vec, node_lists)
 
         return [rep.result() for rep in reps]

@@ -9,9 +9,10 @@ Usage::
     res = Simulator(sc).run(requests, placement, allocation)
 
 Families (see :mod:`repro.sim.scenarios.families` for parameters):
-``paper``, ``dense-urban``, ``diurnal``, ``flash-crowd``, ``heavy-tail``,
-``node-outage``, ``skewed-hetero``.  All generators are deterministic in
-(seed, params); :func:`scenario_fingerprint` certifies it.
+``paper``, ``dense-urban``, ``diurnal``, ``flash-crowd``,
+``diurnal-flash`` (composed profile), ``heavy-tail``, ``node-outage``,
+``skewed-hetero``.  All generators are deterministic in (seed, params);
+:func:`scenario_fingerprint` certifies it.
 """
 from repro.sim.scenarios.registry import (REGISTRY, family_names,
                                           make_scenario, register,

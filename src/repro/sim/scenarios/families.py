@@ -4,6 +4,7 @@
   dense-urban    scaled topology: N nodes, C cells, consolidated AI racks
   diurnal        paper topology under a sinusoidal day/night load profile
   flash-crowd    paper topology with bursty arrival spikes (rate × k windows)
+  diurnal-flash  composed profile: flash spikes riding the diurnal swing
   heavy-tail     paper topology with Pareto-tailed request sizes
   node-outage    paper topology with node availability windows (fault inject)
   skewed-hetero  one GPU-rich node + many weak nodes (placement stress)
@@ -131,6 +132,35 @@ def flash_crowd(seed: int = 0, n_spikes: int = 3, magnitude: float = 4.0,
                     "width_frac": width_frac, "rho": rho},
                    rho, n_ai_requests,
                    arrival={"kind": "flash-crowd", "windows": windows})
+
+
+# --------------------------------------------------------------------------- #
+@register("diurnal-flash")
+def diurnal_flash(seed: int = 0, period_s: float = 240.0, depth: float = 0.6,
+                  n_spikes: int = 3, magnitude: float = 4.0,
+                  width_frac: float = 0.04, rho: float = 0.8,
+                  n_ai_requests: int = 5000) -> Dict:
+    """Composed arrival profile: flash-crowd spikes riding a diurnal swing
+    (multiplicative — a spike at the daily peak compounds, one in the
+    trough barely registers).  The workload realism composition from the
+    ROADMAP; both parts draw from the same seeded stream, so the family
+    stays deterministic in (seed, params)."""
+    rng = np.random.default_rng(seed)
+    phase = float(rng.uniform(0.0, 2.0 * math.pi))
+    starts = np.sort(rng.uniform(0.05, 0.85, n_spikes))
+    windows = [[float(s), float(width_frac), float(magnitude)]
+               for s in starts]
+    sc = paper_scenario()
+    return _finish(sc, "diurnal-flash", seed,
+                   {"period_s": period_s, "depth": depth,
+                    "n_spikes": n_spikes, "magnitude": magnitude,
+                    "width_frac": width_frac, "rho": rho},
+                   rho, n_ai_requests,
+                   arrival={"kind": "composed", "parts": [
+                       {"kind": "diurnal", "period_s": float(period_s),
+                        "depth": float(depth), "phase": phase},
+                       {"kind": "flash-crowd", "windows": windows},
+                   ]})
 
 
 # --------------------------------------------------------------------------- #

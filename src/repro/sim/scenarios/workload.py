@@ -101,6 +101,13 @@ def _intensity_profile(arrival: Dict, ts: np.ndarray,
         for start, length, mag in arrival["windows"]:
             lo, hi = start * horizon, (start + length) * horizon
             m[(ts >= lo) & (ts < hi)] = float(mag)
+    elif kind == "composed":
+        # multiplicative composition: spikes ride ON the slow profile
+        # (a flash crowd during the diurnal peak is worse than one in the
+        # trough) — each part keeps its own parameters
+        m = np.ones_like(ts)
+        for part in arrival["parts"]:
+            m = m * _intensity_profile(part, ts, horizon)
     else:
         raise ValueError(f"unknown arrival profile {kind!r}")
     return np.maximum(m, 0.05)          # intensity stays strictly positive

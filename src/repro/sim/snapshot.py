@@ -51,6 +51,23 @@ class EpochSnapshot:
     def node_of(self, sid: int) -> int:
         return int(self.placement[sid])
 
+    def psi_g_by_node(self) -> np.ndarray:
+        """Per-node Σ Ψ^g ``[N]``, accumulated in sid order (cached).
+
+        The batched epoch pipeline reads this once per snapshot — the
+        agents' P2 pressure terms and the critic's node feature blocks
+        both derive from it, so they cannot disagree on the aggregate.
+        The unbuffered ``np.add.at`` gives each node its instances'
+        backlogs in ascending-sid order: the same addition sequence a
+        per-node Python loop produces, hence the same doubles.
+        """
+        cached = getattr(self, "_psi_g_by_node", None)
+        if cached is None:
+            cached = np.zeros(self.N)
+            np.add.at(cached, self.placement, self.psi_g.astype(np.float64))
+            self._psi_g_by_node = cached
+        return cached
+
     def gpu_demand_frac(self, sid: int) -> float:
         """Service backlog vs its node's GPU capacity (contention proxy)."""
         n = self.node_of(sid)

@@ -171,11 +171,12 @@ def test_generic_active_set_equal_share():
 @pytest.mark.parametrize("seed", range(40))
 @pytest.mark.parametrize("feas", (True, False))
 def test_compact_scalar_solver_matches_active_set_np(seed, feas):
-    """The simulator's per-node scalar solver (`_active_set_small`, the
-    deadline-aware hot path since the compact allocation rewrite) must
-    agree with the property-tested vector implementation.  Tolerance is
-    ulps: the scalar path sums sequentially, numpy pairwise."""
-    from repro.sim.cluster import _active_set_small
+    """The tiny-gather scalar solver (`_active_set_scalar`, the
+    deadline-aware fast path) must agree with the property-tested vector
+    implementation — and be BIT-identical to the padded row solver it
+    stands in for (same expressions, same tree-ordered reductions)."""
+    from repro.sim.cluster import (_active_set_rows, _active_set_scalar,
+                                   _pow2_at_least)
 
     psi, omega, floors, cap, mask = _rand_inputs(seed, feas)
     w = np.sqrt(np.where(mask, np.maximum(psi, 0.0), 0.0)
@@ -184,14 +185,23 @@ def test_compact_scalar_solver_matches_active_set_np(seed, feas):
                               mask)
     # the compact path only ever sees the busy (masked-in) instances
     idx = np.nonzero(mask)[0]
-    small = _active_set_small([float(w[i]) for i in idx],
-                              [float(floors[i]) for i in idx], float(cap))
+    small = _active_set_scalar([float(w[i]) for i in idx],
+                               [float(floors[i]) for i in idx], float(cap))
     # tolerance scales with capacity: the infeasible-floor rescale leaves
     # O(cap * 1e-16) residual dust (capacity minus the rounded floor sum)
     # that the two implementations hand to different entries; a genuinely
     # flipped pin differs by ~the whole allocation and still fails
     np.testing.assert_allclose(np.array(small), ref[idx],
                                rtol=1e-9, atol=float(cap) * 1e-12)
+    # exact equality with the padded row solver, at two padded widths
+    k = len(idx)
+    for K in (_pow2_at_least(k), 2 * _pow2_at_least(k)):
+        wr = np.zeros((1, K))
+        fr = np.zeros((1, K))
+        wr[0, :k] = w[idx]
+        fr[0, :k] = floors[idx]
+        rows = _active_set_rows(wr, fr, np.array([float(cap)]))
+        np.testing.assert_array_equal(np.array(small), rows[0, :k])
 
 
 @pytest.mark.parametrize("seed", range(30))

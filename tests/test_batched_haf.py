@@ -1,0 +1,361 @@
+"""Batched agentic epoch pipeline: decide_group == looped decide, feature
+and scorer parity with their scalar references, batch-shape-invariant
+critic forward, batched multi-family harvest invariance, and the tiny
+tree-ordered scalar allocator fast path."""
+import math
+
+import numpy as np
+import pytest
+
+import repro.sim.cluster as cluster_mod
+from repro.core import HAFPlacement, make_agent
+from repro.core.agent import AGENT_ZOO, HeuristicAgent
+from repro.core.critic import (forward_np, init_params, load_critic_cached,
+                               train_critic, Critic)
+from repro.core.features import FEATURE_DIM, featurize, featurize_batch
+from repro.core.placement import action_id, candidate_actions
+from repro.sim import Simulator, make_scenario, workload_for
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+
+
+@pytest.fixture(scope="module")
+def snapshots():
+    sc = make_scenario("paper", seed=0)
+    reqs, _ = workload_for(sc, seed=0, n_ai_requests=400)
+    snaps = []
+    Simulator(sc, epoch_interval=5.0).run(
+        reqs, StaticPlacement(), DeadlineAwareAllocation(),
+        epoch_hook=lambda rec, cl: snaps.append(rec.snapshot))
+    assert len(snaps) >= 8
+    return snaps
+
+
+@pytest.fixture(scope="module")
+def trained_critic():
+    rng = np.random.default_rng(1)
+    samples = [(rng.normal(size=FEATURE_DIM).astype(np.float32),
+                rng.uniform(size=3).astype(np.float32),
+                np.ones(3, np.float32)) for _ in range(40)]
+    return train_critic(samples, epochs=30, hidden=16, seed=0)
+
+
+# --------------------------------------------------------------------------- #
+# scalar references (the pre-refactor per-action implementations): the
+# vectorized canonical paths must agree to within libm ulps — numpy's SIMD
+# log1p/tanh differ from libm's by a few ulps, hence allclose, not equal
+# --------------------------------------------------------------------------- #
+def _log1p(x, scale):
+    return math.log1p(max(x, 0.0) / scale)
+
+
+def _featurize_ref(snap, action):
+    def node_block(n):
+        node = snap.nodes[n]
+        on_node = [s for s in range(snap.S) if snap.placement[s] == n]
+        psi_node = float(sum(snap.psi_g[s] for s in on_node))
+        return [float(snap.gpu_util[n]), float(snap.cpu_util[n]),
+                float(snap.ran_floor_g[n]), float(snap.ran_floor_c[n]),
+                float(snap.vram_headroom[n] / max(node.vram_bytes, 1.0)),
+                _log1p(psi_node / max(node.gpu_flops, 1.0), 1.0),
+                len(on_node) / max(snap.S, 1)]
+
+    f = [float(np.mean(snap.gpu_util)), float(np.max(snap.gpu_util)),
+         float(np.mean(snap.cpu_util)), float(np.max(snap.cpu_util))]
+    total_g = float(sum(n.gpu_flops for n in snap.nodes))
+    f.append(_log1p(float(np.sum(snap.psi_g)) / total_g, 1.0))
+    f.append(_log1p(float(np.sum(snap.omega)), 100.0))
+    f += [snap.recent_fulfill.get("LARGE_AI", 1.0),
+          snap.recent_fulfill.get("SMALL_AI", 1.0),
+          snap.recent_fulfill.get("RAN", 1.0)]
+    if action is None:
+        f += [0.0] * (FEATURE_DIM - len(f))
+        return np.asarray(f[:FEATURE_DIM], np.float32)
+    inst = snap.instances[action.sid]
+    cat = np.zeros(4)
+    cat[{"DU": 0, "CUUP": 1, "LARGE_AI": 2,
+         "SMALL_AI": 3}[inst.category.value]] = 1.0
+    q_s = float(snap.psi_g[action.sid])
+    src_n, dst_n = snap.nodes[action.src], snap.nodes[action.dst]
+    f += [1.0, *cat.tolist(), _log1p(inst.reconfig_s, 1.0),
+          _log1p(inst.weight_bytes, 1e9),
+          _log1p(float(snap.kv_held[action.sid]), 1e9),
+          _log1p(float(snap.queue_len[action.sid]), 10.0),
+          _log1p(q_s / max(dst_n.gpu_flops, 1.0), 1.0)]
+    f += node_block(action.src)
+    f += node_block(action.dst)
+    f += [float(snap.gpu_util[action.src] - snap.gpu_util[action.dst]),
+          float(snap.cpu_util[action.src] - snap.cpu_util[action.dst]),
+          _log1p(q_s / max(src_n.gpu_flops, 1.0), 1.0)
+          - _log1p(q_s / max(dst_n.gpu_flops, 1.0), 1.0),
+          _log1p(inst.reconfig_s
+                 * snap.arrival_rate.get(inst.arch, 0.0), 1.0)]
+    f += [0.0] * (FEATURE_DIM - len(f))
+    return np.asarray(f[:FEATURE_DIM], np.float32)
+
+
+def _score_ref(agent, snap, a):
+    p = agent.profile
+    inst = snap.instances[a.sid]
+    src_n, dst_n = snap.nodes[a.src], snap.nodes[a.dst]
+    psi_s = float(snap.psi_g[a.sid])
+
+    def pressure(n, exclude):
+        psi = sum(float(snap.psi_g[s]) for s in range(snap.S)
+                  if snap.placement[s] == n and s != exclude)
+        return psi / max(snap.nodes[n].gpu_flops, 1.0)
+
+    src_others = pressure(a.src, a.sid) + 0.5 * float(snap.gpu_util[a.src])
+    dst_others = pressure(a.dst, a.sid) + 0.5 * float(snap.gpu_util[a.dst])
+    own = psi_s / dst_n.gpu_flops - psi_s / src_n.gpu_flops
+    relief = math.tanh(psi_s / src_n.gpu_flops) \
+        * (src_others - dst_others - own)
+    psi_c = float(snap.psi_c[a.sid])
+    cpu_relief = math.tanh(psi_c / src_n.cpu_cores) \
+        * (float(snap.cpu_util[a.src]) - float(snap.cpu_util[a.dst])
+           - (psi_c / dst_n.cpu_cores - psi_c / src_n.cpu_cores))
+    ran_risk = snap.ran_floor_g[a.dst] + snap.ran_floor_c[a.dst]
+    ran_relief = 0.0
+    if not inst.category.is_ran:
+        ran_relief = snap.ran_floor_g[a.src] + snap.ran_floor_c[a.src]
+    p1 = p.ran_weight * (0.3 * ran_relief - 1.0 * ran_risk)
+    rate = snap.arrival_rate.get(inst.arch, 0.0)
+    outage = p.outage_weight * inst.reconfig_s * (0.05 + 0.02 * rate)
+    return relief + cpu_relief + p1 - outage + p.eagerness
+
+
+def test_featurize_batch_matches_scalar_reference(snapshots):
+    for snap in snapshots[:4]:
+        cands = candidate_actions(snap)
+        batch = featurize_batch(snap, cands)
+        assert batch.shape == (len(cands), FEATURE_DIM)
+        ref = np.stack([_featurize_ref(snap, a) for a in cands])
+        np.testing.assert_allclose(batch, ref, rtol=1e-6, atol=1e-7)
+        # the single-action view IS a row of the batched map
+        for a in cands[:5]:
+            np.testing.assert_array_equal(featurize(snap, a),
+                                          featurize_batch(snap, [a])[0])
+
+
+def test_standin_scorer_matches_scalar_reference(snapshots):
+    agent = make_agent("gpt-oss-120b-sim")
+    for snap in snapshots[:4]:
+        migs = [a for a in candidate_actions(snap) if a is not None]
+        vec = agent.score_candidates(snap, migs)
+        ref = np.array([_score_ref(agent, snap, a) for a in migs])
+        np.testing.assert_allclose(vec, ref, rtol=1e-9, atol=1e-12)
+
+
+# --------------------------------------------------------------------------- #
+# batch-shape invariance of the decide path
+# --------------------------------------------------------------------------- #
+def test_forward_np_batch_shape_invariant():
+    import jax
+
+    params = init_params(jax.random.PRNGKey(0), hidden=32)
+    critic = Critic(params=params)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(6, 5, FEATURE_DIM)).astype(np.float32)
+    full = forward_np(critic.params_np, x)
+    assert full.shape == (6, 5, 3)
+    assert np.all((full >= 0) & (full <= 1))
+    for b in range(6):
+        row = forward_np(critic.params_np, x[b])
+        np.testing.assert_array_equal(full[b], row)        # bit-for-bit
+        one = forward_np(critic.params_np, x[b, 2][None])[0]
+        np.testing.assert_array_equal(full[b, 2], one)
+
+
+def test_select_batch_matches_select(snapshots, trained_critic):
+    snaps = snapshots[:6]
+    options_list = []
+    for snap in snaps:
+        cands = candidate_actions(snap)
+        options_list.append(cands[:4] if len(cands) >= 4 else cands)
+    choices, scores = trained_critic.select_batch(snaps, options_list)
+    for snap, opts, choice, sc_row in zip(snaps, options_list, choices,
+                                          scores):
+        solo_choice, solo_scores = trained_critic.select(snap, opts)
+        assert action_id(choice) == action_id(solo_choice)
+        np.testing.assert_array_equal(sc_row, solo_scores)
+
+
+@pytest.mark.parametrize("agent_name", sorted(AGENT_ZOO))
+def test_decide_group_matches_looped_decide(snapshots, trained_critic,
+                                            agent_name):
+    """One grouped decide over B snapshots == B independent decides, for
+    every stand-in profile, with and without the critic."""
+    snaps = snapshots[:6]
+    for critic in (None, trained_critic):
+        loop_pols = [HAFPlacement(make_agent(agent_name), critic=critic)
+                     for _ in snaps]
+        solo = [pol.decide(snap) for pol, snap in zip(loop_pols, snaps)]
+        group_pols = [HAFPlacement(make_agent(agent_name), critic=critic)
+                      for _ in snaps]
+        grouped = HAFPlacement.decide_group(group_pols, snaps)
+        assert [action_id(a) for a in grouped] == \
+            [action_id(a) for a in solo]
+        for lp, gp in zip(loop_pols, group_pols):
+            assert [action_id(a) for a in lp.last_shortlist] == \
+                [action_id(a) for a in gp.last_shortlist]
+            if critic is not None:
+                np.testing.assert_array_equal(lp.last_scores, gp.last_scores)
+
+
+def test_batch_keys_group_compatible_policies(trained_critic):
+    a = HAFPlacement(make_agent("qwen3-32b-sim"), critic=trained_critic)
+    b = HAFPlacement(make_agent("qwen3-32b-sim"), critic=trained_critic)
+    c = HAFPlacement(make_agent("deepseek-r1-70b-sim"),
+                     critic=trained_critic)
+    d = HAFPlacement(make_agent("qwen3-32b-sim"), critic=None)
+    assert a.batch_key() == b.batch_key()
+    assert a.batch_key() != c.batch_key()          # different agent profile
+    assert a.batch_key() != d.batch_key()          # critic-gated vs bare
+    from repro.launch.serve import make_llm_agent
+    e = HAFPlacement(make_llm_agent("cat"), critic=None)
+    f = HAFPlacement(make_llm_agent("cat"), critic=None)
+    assert e.batch_key() != f.batch_key()          # stateful: per instance
+
+
+# --------------------------------------------------------------------------- #
+# batched multi-family harvest
+# --------------------------------------------------------------------------- #
+HARVEST_KW = dict(bulk_runs=((1.0, 2), (0.75, 5)), bulk_requests=200,
+                  probe_requests=200, probe_epochs_pre=(1, 2),
+                  probe_epochs_post=(3,))
+
+
+def test_harvest_batched_matches_solo():
+    from repro.core.datagen import harvest
+
+    sc = make_scenario("paper", seed=0)
+    solo = harvest(sc, batch_size=1, **HARVEST_KW)
+    batched = harvest(sc, batch_size=8, **HARVEST_KW)
+    assert len(solo) == len(batched) > 50
+    for (xa, ra, ma), (xb, rb, mb) in zip(solo, batched):
+        np.testing.assert_array_equal(xa, xb)
+        np.testing.assert_array_equal(ra, rb)
+        np.testing.assert_array_equal(ma, mb)
+
+
+def test_harvest_families_covers_registry_families():
+    from repro.core.datagen import harvest_families, merge_samples
+
+    per_family = harvest_families(("paper", "node-outage"),
+                                  bulk_runs=((1.0, 2),), bulk_requests=150,
+                                  probe_requests=150, probe_epochs_pre=(1,),
+                                  probe_epochs_post=(2,))
+    assert set(per_family) == {"paper", "node-outage"}
+    assert all(len(v) > 10 for v in per_family.values())
+    pooled = merge_samples(per_family)
+    heldout = merge_samples(per_family, exclude=("node-outage",))
+    assert len(pooled) == sum(len(v) for v in per_family.values())
+    assert len(heldout) == len(per_family["paper"])
+    for x, r, m in pooled:
+        assert x.shape == (FEATURE_DIM,)
+        assert r.shape == (3,) and m.shape == (3,)
+
+
+def test_resolve_probes_derives_for_foreign_topology():
+    from repro.core.datagen import PRE_SPLIT_PROBES, resolve_probes
+
+    paper = make_scenario("paper", seed=0)
+    assert resolve_probes(paper, PRE_SPLIT_PROBES) == PRE_SPLIT_PROBES
+    urban = make_scenario("dense-urban", seed=0, n_nodes=6)
+    derived = resolve_probes(urban, PRE_SPLIT_PROBES)
+    assert derived[0] is None and len(derived) > 3
+    names = {s.name for s in urban["instances"]}
+    assert all(p[0] in names for p in derived[1:])
+
+
+# --------------------------------------------------------------------------- #
+# eval: HAF method specs batch like the baselines; haf-llm rides the same
+# harness
+# --------------------------------------------------------------------------- #
+def test_batched_sweep_haf_equals_serial(tmp_path, trained_critic):
+    import dataclasses
+
+    from repro.eval import SweepSpec, haf_spec, run_sweep
+
+    path = tmp_path / "critic.json"
+    trained_critic.save(str(path))
+    spec = SweepSpec(
+        methods=(haf_spec(agent="qwen3-32b-sim", critic_path=str(path)),
+                 haf_spec(agent="qwen3-32b-sim", critic_path=None,
+                          label="HAF-NoCritic")),
+        scenarios=("paper", "flash-crowd"),
+        seeds=(0, 1, 2), n_ai_requests=120)
+    serial = run_sweep(spec)
+    batched = run_sweep(dataclasses.replace(spec, batch_seeds=3))
+    key = lambda r: (r["method"], r["scenario"], r["seed"])  # noqa: E731
+    for s, b in zip(sorted(serial, key=key), sorted(batched, key=key)):
+        assert key(s) == key(b)
+        assert s["overall"] == b["overall"]
+        assert s["n_events"] == b["n_events"]
+        assert s["mig_total"] == b["mig_total"]
+        assert b["batch"] == 3
+
+
+def test_haf_llm_method_runs_a_real_subprocess():
+    """haf-llm:<cmd> drives an external command per epoch; a scripted
+    'LLM' that echoes the first candidate id must commit migrations."""
+    import sys
+
+    from repro.eval import expand_jobs, run_job, SweepSpec
+
+    script = ("import sys; lines=[ln.split()[0] for ln in sys.stdin "
+              "if ln.strip().startswith('mig:')]; "
+              "print([lines[0]] if lines else ['no-migration'])")
+    cmd = f"{sys.executable} -c \"{script}\""
+    spec = SweepSpec(
+        methods=({"name": "haf-llm", "label": "haf-llm",
+                  "params": {"cmd": cmd}},),
+        scenarios=("paper",), seeds=(0,), n_ai_requests=100)
+    row = run_job(expand_jobs(spec)[0])
+    assert row["method"] == "haf-llm"
+    assert 0.0 <= row["overall"] <= 1.0
+    assert row["mig_total"] >= 1          # the scripted LLM always migrates
+
+
+# --------------------------------------------------------------------------- #
+# tree-ordered scalar fast path for tiny allocator gathers
+# --------------------------------------------------------------------------- #
+def _fingerprint(res):
+    s = {k: None if isinstance(v, float) and math.isnan(v) else v
+         for k, v in res.summary().items()}
+    return (s, res.n_events, res.infeasible_events, sorted(res.dropped),
+            [(r.rid, r.finish, r.target_sid) for r in res.requests],
+            [(t, a.sid, a.src, a.dst) for t, a in res.migrations])
+
+
+@pytest.mark.parametrize("family", ("paper", "flash-crowd", "node-outage"))
+def test_scalar_allocator_fast_path_bit_identical(monkeypatch, family):
+    """Fast path off / default / forced-everywhere: identical runs."""
+    sc = make_scenario(family, seed=0)
+    reqs, _ = workload_for(sc, seed=1, n_ai_requests=200)
+
+    def run():
+        return _fingerprint(Simulator(sc).run(
+            reqs, StaticPlacement(), DeadlineAwareAllocation()))
+
+    monkeypatch.setattr(cluster_mod, "SCALAR_GATHER_MAX", -1)
+    off = run()
+    monkeypatch.setattr(cluster_mod, "SCALAR_GATHER_MAX", 8)
+    default = run()
+    monkeypatch.setattr(cluster_mod, "SCALAR_GATHER_MAX", 10 ** 9)
+    forced = run()
+    assert off == default == forced
+
+
+def test_critic_load_cache_shares_one_instance(tmp_path, trained_critic):
+    path = tmp_path / "c.json"
+    trained_critic.save(str(path))
+    a = load_critic_cached(str(path))
+    b = load_critic_cached(str(path))
+    assert a is b
+    assert a.fingerprint() == trained_critic.fingerprint()
+    # rewrite -> fresh instance
+    trained_critic.save(str(path))
+    import os
+    os.utime(path, ns=(1, 1))
+    c = load_critic_cached(str(path))
+    assert c is not a

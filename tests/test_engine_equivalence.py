@@ -222,6 +222,104 @@ def test_run_batch_unknown_engine_rejected():
         make_batched_event_core("fortran")
 
 
+def test_run_batch_policy_factories():
+    """placements/allocations accept a factory f(b) -> policy."""
+    solo = _fingerprint(_run("numpy", "paper", 0))
+    sc = make_scenario("paper", seed=0)
+    reqs, _ = workload_for(sc, seed=0, n_ai_requests=120)
+    from repro.sim.engine import StaticPlacement as SP
+    res = Simulator(sc).run_batch([reqs],
+                                  lambda b: SP(),
+                                  lambda b: DeadlineAwareAllocation())
+    assert _fingerprint(res[0]) == solo
+    with pytest.raises(ValueError, match="one placement per replica"):
+        Simulator(sc).run_batch([reqs], [SP(), SP()],
+                                [DeadlineAwareAllocation()])
+
+
+# --------------------------------------------------------------------------- #
+# batched agentic policies: the full HAF stack (stand-in agent + critic
+# migration gating) under run_batch must stay discrete-outcome identical
+# to per-seed solo runs — the slow-timescale decisions are dispatched as
+# ONE batched decide per tick, so this pins the whole epoch pipeline
+# (candidate features, vectorized P1-P3 scoring, [B, C, F] critic forward)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def tiny_critic(tmp_path_factory):
+    import numpy as np
+
+    from repro.core.critic import train_critic
+    from repro.core.features import FEATURE_DIM
+
+    rng = np.random.default_rng(0)
+    samples = [(rng.normal(size=FEATURE_DIM).astype(np.float32),
+                rng.uniform(size=3).astype(np.float32),
+                np.ones(3, np.float32)) for _ in range(40)]
+    critic = train_critic(samples, epochs=30, hidden=16, seed=0)
+    path = tmp_path_factory.mktemp("critic") / "tiny_critic.json"
+    critic.save(str(path))
+    return str(path)
+
+
+def _run_haf(sc, reqs, critic_path, agent="qwen3-32b-sim"):
+    from repro.core import HAFPlacement, make_agent
+    from repro.core.critic import load_critic_cached
+
+    critic = load_critic_cached(critic_path) if critic_path else None
+    pol = HAFPlacement(make_agent(agent), critic=critic)
+    return Simulator(sc).run(reqs, pol, DeadlineAwareAllocation())
+
+
+@pytest.mark.parametrize("family", ("paper", "node-outage", "flash-crowd"))
+@pytest.mark.parametrize("with_critic", (False, True),
+                         ids=("agent-only", "critic-gated"))
+def test_run_batch_haf_matches_solo(family, with_critic, tiny_critic):
+    from repro.core import HAFPlacement, make_agent
+    from repro.core.critic import load_critic_cached
+
+    critic_path = tiny_critic if with_critic else None
+    sc = make_scenario(family, seed=0)
+    workloads = [workload_for(sc, seed=s, n_ai_requests=150)[0]
+                 for s in BATCH_SEEDS]
+    solos = [_run_haf(sc, reqs, critic_path) for reqs in workloads]
+
+    def placement(b):
+        critic = load_critic_cached(critic_path) if critic_path else None
+        return HAFPlacement(make_agent("qwen3-32b-sim"), critic=critic)
+
+    batch = Simulator(sc).run_batch(workloads, placement,
+                                    lambda b: DeadlineAwareAllocation())
+    assert any(r.migrations for r in solos)   # the stack really migrates
+    assert [_fingerprint(r) for r in batch] == \
+        [_fingerprint(r) for r in solos]
+
+
+def test_run_batch_haf_mixed_agents_and_critics(tiny_critic):
+    """Replicas with different agents / critic configs share one batch:
+    grouping by batch_key must not leak decisions across groups."""
+    from repro.core import HAFPlacement, make_agent
+    from repro.core.critic import load_critic_cached
+
+    sc = make_scenario("paper", seed=0)
+    workloads = [workload_for(sc, seed=s, n_ai_requests=150)[0]
+                 for s in range(4)]
+    configs = [("qwen3-32b-sim", None),
+               ("deepseek-r1-70b-sim", None),
+               ("qwen3-32b-sim", tiny_critic),
+               ("deepseek-r1-70b-sim", tiny_critic)]
+
+    solos = [_run_haf(sc, reqs, path, agent=agent)
+             for reqs, (agent, path) in zip(workloads, configs)]
+    placements = [
+        HAFPlacement(make_agent(agent),
+                     critic=load_critic_cached(path) if path else None)
+        for agent, path in configs]
+    batch = Simulator(sc).run_batch(
+        workloads, placements, lambda b: DeadlineAwareAllocation())
+    assert [_fingerprint(r) for r in batch] == \
+        [_fingerprint(r) for r in solos]
+
+
 # --------------------------------------------------------------------------- #
 # stage-ordering semantics (Eq. 1): the fixed advance/next_completion pair
 # --------------------------------------------------------------------------- #

@@ -25,9 +25,10 @@ def mini_rows():
 
 def test_method_registry_covers_table3():
     assert {"haf", "haf-static", "round-robin", "lyapunov", "game-theory",
-            "caora"} <= set(method_names())
+            "caora", "haf-llm"} <= set(method_names())
     for name in method_names():
-        placement, allocation, rr = make_method(name)
+        kw = {"cmd": "cat"} if name == "haf-llm" else {}
+        placement, allocation, rr = make_method(name, **kw)
         assert hasattr(placement, "decide")
         assert hasattr(allocation, "allocate")
         assert isinstance(rr, bool)

@@ -27,7 +27,8 @@ def test_same_seed_identical_scenario(family):
 
 
 @pytest.mark.parametrize("family", ["dense-urban", "diurnal", "flash-crowd",
-                                    "node-outage", "skewed-hetero"])
+                                    "diurnal-flash", "node-outage",
+                                    "skewed-hetero"])
 def test_seed_changes_scenario(family):
     a = scenario_fingerprint(make_scenario(family, seed=0))
     b = scenario_fingerprint(make_scenario(family, seed=1))
@@ -96,6 +97,29 @@ def test_flash_crowd_spikes_bunch_arrivals():
                                                 * horizon)
     # spike windows hold far more than their share of time
     assert in_spike.mean() > 2.0 * total_frac
+
+
+def test_diurnal_flash_composes_both_profiles():
+    """The composed family shows BOTH signatures: spike windows hold far
+    more than their share of arrivals, and the off-spike background still
+    swings with the diurnal period."""
+    sc = make_scenario("diurnal-flash", seed=0, depth=0.8, magnitude=8.0,
+                       n_ai_requests=3000)
+    assert sc["workload"]["arrival"]["kind"] == "composed"
+    reqs, _ = workload_for(sc, seed=0)
+    arr = np.array([r.arrival for r in reqs])
+    horizon = arr.max()
+    parts = {p["kind"]: p for p in sc["workload"]["arrival"]["parts"]}
+    windows = parts["flash-crowd"]["windows"]
+    in_spike = np.zeros(len(arr), bool)
+    for start, length, _mag in windows:
+        in_spike |= (arr >= start * horizon) & (arr < (start + length)
+                                                * horizon)
+    total_frac = sum(w[1] for w in windows)
+    assert in_spike.mean() > 2.0 * total_frac          # spikes survive
+    # diurnal swing survives outside the spikes
+    hist, _ = np.histogram(arr[~in_spike], bins=10)
+    assert hist.max() > 2.0 * max(hist.min(), 1)
 
 
 def test_heavy_tail_inflates_some_requests():
