@@ -15,13 +15,19 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core.critic import Critic
-from repro.core.datagen import harvest
+from repro.core.datagen import harvest, samples_fingerprint
 from repro.core import train_critic
-from repro.eval import SweepSpec, haf_spec, run_sweep
+from repro.eval import SweepSpec, run_sweep
+from repro.exp import run_experiment, save_critic
+from repro.exp.artifacts import ARTIFACTS_ENV
 from repro.sim import Simulator, make_scenario, workload_for
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACTS = ROOT / "artifacts"
+EXPERIMENTS = ROOT / "experiments"
+# artifact references (@critic, ...) in benchmark specs resolve against the
+# repo's store whatever the caller's cwd is
+os.environ.setdefault(ARTIFACTS_ENV, str(ARTIFACTS))
 FULL = os.environ.get("REPRO_FULL", "0") == "1"
 WORKERS = int(os.environ.get("REPRO_WORKERS",
                              max(1, min(4, os.cpu_count() or 1))))
@@ -60,7 +66,10 @@ def get_critic(retrain: bool = False) -> Critic:
     with open(ARTIFACTS / "critic_samples.pkl", "wb") as f:
         pickle.dump(samples, f)
     critic = train_critic(samples, epochs=2000, seed=0)
-    critic.save(str(path))
+    save_critic(critic, path, families=("paper",),
+                data_hash=samples_fingerprint(samples),
+                meta={"epochs": 2000, "n_samples": len(samples),
+                      "trainer": "benchmarks.common.get_critic"})
     return critic
 
 
@@ -88,18 +97,17 @@ def check_not_truncated(rows, where: str) -> None:
             f"truncated results: {', '.join(names)} — raise max_events")
 
 
-def method_grid(caora_alpha: float, with_critic: bool = True,
-                agent: str = DEFAULT_AGENT) -> List[Dict]:
-    """The Table-III method grid as repro.eval method specs."""
-    return [
-        {"name": "haf-static", "label": "HAF-Static"},
-        {"name": "round-robin", "label": "Round-Robin"},
-        {"name": "lyapunov", "label": "Lyapunov"},
-        {"name": "game-theory", "label": "Game-Theory"},
-        {"name": "caora", "label": "CAORA", "params": {"alpha": caora_alpha}},
-        haf_spec(agent=agent,
-                 critic_path=str(critic_path()) if with_critic else None),
-    ]
+def experiment_rows(spec, where: str, verbose: bool = False) -> List[Dict]:
+    """Run an :class:`repro.exp.ExperimentSpec` and return completed rows.
+
+    The stamped report (provenance: spec hashes, scenario + critic
+    fingerprints, backend info) is written to ``spec.out``; benchmarks
+    recompute rather than resume so a printed table is never stale.
+    """
+    report = run_experiment(spec, resume=False, verbose=verbose)
+    rows = list(report["runs"])
+    check_not_truncated(rows, where)
+    return rows
 
 
 def sweep(methods, scenarios, seeds=(0,), workers: Optional[int] = None,

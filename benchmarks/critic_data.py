@@ -27,8 +27,9 @@ from typing import Dict, List, Optional, Sequence
 from benchmarks import common
 from repro.core.critic import train_critic
 from repro.core.datagen import (DEFAULT_FAMILIES, harvest_families,
-                                merge_samples)
+                                merge_samples, samples_fingerprint)
 from repro.eval import SweepSpec, build_report, haf_spec, run_sweep
+from repro.exp import save_critic
 
 SMOKE_HARVEST = dict(
     bulk_runs=((1.0, 2), (0.75, 5)), bulk_requests=250, probe_requests=250,
@@ -36,9 +37,15 @@ SMOKE_HARVEST = dict(
 FULL_HARVEST = dict(batch_size=16)
 
 
-def _train(samples: List, epochs: int, path) -> str:
+def _train(samples: List, epochs: int, path,
+           families: Sequence[str] = ()) -> str:
+    """Train + persist a critic WITH its artifact manifest, so ``@critic``
+    / ``critic@<fingerprint>`` references verify the content on load."""
     critic = train_critic(samples, epochs=epochs, seed=0)
-    critic.save(str(path))
+    save_critic(critic, path, families=families,
+                data_hash=samples_fingerprint(samples),
+                meta={"epochs": epochs, "n_samples": len(samples),
+                      "trainer": "benchmarks.critic_data"})
     return str(path)
 
 
@@ -55,7 +62,8 @@ def holdout_eval(families: Sequence[str], per_family: Dict[str, List], *,
     rows = []
     for family in families:
         path = _train(merge_samples(per_family, exclude=(family,)),
-                      epochs, common.ARTIFACTS / f"critic_wo_{family}.json")
+                      epochs, common.ARTIFACTS / f"critic_wo_{family}.json",
+                      families=[f for f in families if f != family])
         spec = SweepSpec(
             methods=(haf_spec(agent=agent, critic_path=path,
                               label="HAF+critic(held-out)"),
@@ -108,7 +116,7 @@ def main(smoke: bool = False,
           f"n_samples={len(pooled)},wall_s={t_h:.1f}", flush=True)
 
     t0 = time.time()
-    _train(pooled, epochs, common.critic_path())
+    _train(pooled, epochs, common.critic_path(), families=families)
     t_t = time.time() - t0
     print(f"critic,train,epochs={epochs},wall_s={t_t:.1f}", flush=True)
 

@@ -1,25 +1,36 @@
 """Fig. 2: load sweep ρ ∈ {0.75, 1.0, 1.25} for HAF and all baselines.
 
-Request counts follow the paper (15k/20k/25k at full scale) so the horizon
-stays comparable across load points.  The grid runs through the
-repro.eval fleet harness (parallel workers, one job per method × ρ).
+The grid is the checked-in :mod:`repro.exp` spec
+``experiments/load_sweep.toml`` (request counts follow the paper so the
+horizon stays comparable across load points; run it directly with
+``python -m repro.eval --spec experiments/load_sweep.toml``).  This
+driver swaps in the runtime-fitted CAORA α and, under REPRO_FULL=1, the
+paper-scale request counts, then runs it through the
+provenance-stamped harness (parallel workers, one job per method × ρ).
 """
 from __future__ import annotations
 
 from benchmarks import common
 from benchmarks.table3_baselines import caora_alpha
+from repro.exp import load_experiment
+
+SPEC_PATH = common.EXPERIMENTS / "load_sweep.toml"
 
 
 def main(agent: str = common.DEFAULT_AGENT) -> list:
-    common.get_critic()                      # ensure the critic artifact
-    scenarios = [
-        {"family": "paper", "label": f"rho={rho}",
-         "params": {"rho": rho, "n_ai_requests": common.REQUESTS[rho]}}
-        for rho in (0.75, 1.0, 1.25)
-    ]
-    rows = common.sweep(common.method_grid(caora_alpha(), agent=agent),
-                        scenarios)
-    rho_of = {sc["label"]: sc["params"]["rho"] for sc in scenarios}
+    common.get_critic()                      # ensure the @critic artifact
+    spec = load_experiment(SPEC_PATH)
+    spec = spec.with_method_params("CAORA", alpha=caora_alpha())
+    if agent != common.DEFAULT_AGENT:
+        spec = spec.with_method_params("HAF", agent=agent)
+    if common.FULL:
+        for sc in spec.scenarios:
+            spec = spec.with_scenario_params(
+                sc["label"], n_ai_requests=common.REQUESTS[sc["params"]["rho"]])
+    spec = spec.replace(workers=common.WORKERS, engine=common.ENGINE,
+                        out=str(common.ARTIFACTS / "fig2_report.json"))
+    rows = common.experiment_rows(spec, "fig2")
+    rho_of = {sc["label"]: sc["params"]["rho"] for sc in spec.scenarios}
     for s in rows:
         s["rho"] = rho_of[s["scenario"]]
         printed = dict(s, method=f"{s['method']}@{s['scenario']}")

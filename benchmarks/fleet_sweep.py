@@ -1,8 +1,12 @@
 """Fleet sweep: HAF + baselines across the generated scenario families.
 
 This is the scenario-diversity benchmark the registry enables — the
-paper's Table-III grid is one cell of it.  Writes an aggregated JSON
-report (per-class fulfillment mean/CI + migration counts) to
+paper's Table-III grid is one cell of it.  The grid is declared as a
+:class:`repro.exp.ExperimentSpec` (grammar methods, ``@critic?`` artifact
+reference: the critic is loaded — and fingerprint-verified — when the
+artifact exists, agent-only otherwise) and runs through the
+provenance-stamped harness; the aggregated JSON report (per-class
+fulfillment mean/CI + migration counts + provenance) lands in
 ``artifacts/fleet_sweep.json``.
 
   PYTHONPATH=src python -m benchmarks.fleet_sweep            # default
@@ -13,8 +17,8 @@ from __future__ import annotations
 import argparse
 
 from benchmarks import common
-from repro.eval import build_report, format_table, haf_spec, write_report
-from repro.eval.sweep import SweepSpec, run_sweep
+from repro.eval import format_table
+from repro.exp import ExperimentSpec, run_experiment
 
 FAMILIES = ("paper", "diurnal", "flash-crowd", "heavy-tail", "node-outage",
             "skewed-hetero")
@@ -22,37 +26,30 @@ FAMILIES = ("paper", "diurnal", "flash-crowd", "heavy-tail", "node-outage",
 
 def main(smoke: bool = False, seeds: int = 2, agent: str =
          common.DEFAULT_AGENT) -> dict:
-    # smoke mode must stay CI-fast: use the critic artifact only if it is
-    # already there (HAF runs agent-only otherwise); the full run trains it
-    if smoke:
-        critic = str(common.critic_path()) \
-            if common.critic_path().exists() else None
-    else:
+    # smoke mode must stay CI-fast: "@critic?" uses the critic artifact
+    # only if it is already there (HAF runs agent-only otherwise); the
+    # full run trains it first
+    if not smoke:
         common.get_critic()
-        critic = str(common.critic_path())
-    methods = [
-        haf_spec(agent=agent, critic_path=critic),
-        "haf-static", "round-robin", "lyapunov",
-    ]
-    spec = SweepSpec(
-        methods=tuple(methods),
+    spec = ExperimentSpec(
+        name="fleet-sweep",
+        methods=(f"haf(agent={agent}, critic=@critic?, label=HAF)",
+                 "haf-static", "round-robin", "lyapunov"),
         scenarios=FAMILIES[:3] if smoke else FAMILIES,
         seeds=(0,) if smoke else tuple(range(seeds)),
         n_ai_requests=150 if smoke else (None if common.FULL else 2000),
         workers=common.WORKERS,
         engine=common.ENGINE,
-    )
-    rows = run_sweep(spec, verbose=not smoke)
-    common.check_not_truncated([r for r in rows if r is not None],
-                               "fleet_sweep")
-    report = build_report(spec, rows)
-    path = write_report(report, common.ARTIFACTS / "fleet_sweep.json")
-    for s in (r for r in rows if r is not None):
+        out=str(common.ARTIFACTS / "fleet_sweep.json"))
+    report = run_experiment(spec, resume=False, verbose=not smoke)
+    rows = list(report["runs"])
+    common.check_not_truncated(rows, "fleet_sweep")
+    for s in rows:
         printed = dict(s, method=f"{s['method']}@{s['scenario']}"
                                  f"#s{s['seed']}")
         print(common.csv_row("fleet", printed), flush=True)
     print(format_table(report["aggregate"]))
-    print(f"# report -> {path}", flush=True)
+    print(f"# report -> {spec.out}", flush=True)
     return report
 
 

@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=(None, "table2", "table3", "fig2", "roofline",
-                             "alloc", "fleet", "engine", "critic"))
+                             "alloc", "fleet", "engine", "critic", "spec"))
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode (tiny request counts, 1 seed; the "
                          "engine bench still records BENCH_pr4.json and "
@@ -38,6 +38,23 @@ def main() -> None:
     if args.only in (None, "critic"):
         from benchmarks import critic_data
         critic_data.main(smoke=args.smoke)
+    if args.only in (None, "spec"):
+        # the checked-in experiment specs must stay loadable + expandable;
+        # in --smoke mode one also runs end-to-end through the CLI
+        from benchmarks import common
+        from repro.eval import cli as eval_cli
+        for name in ("paper_table3.toml", "load_sweep.toml"):
+            rc = eval_cli.main(["--spec", str(common.EXPERIMENTS / name),
+                                "--validate"])
+            if rc:
+                raise RuntimeError(f"spec validate failed: {name} (rc={rc})")
+        if args.smoke:
+            rc = eval_cli.main(
+                ["--spec", str(common.EXPERIMENTS / "paper_table3.toml"),
+                 "--smoke", "--no-resume", "--workers", "1",
+                 "--out", str(common.ARTIFACTS / "spec_smoke.json")])
+            if rc:
+                raise RuntimeError(f"spec smoke run failed (rc={rc})")
     if args.only in (None, "table3"):
         from benchmarks import table3_baselines
         table3_baselines.main()

@@ -1,8 +1,12 @@
 """Table III: SLO fulfillment and migration count — HAF vs the 5 baselines.
 
 All methods share the workload and the RAN floor reservations (Eq. 15);
-they differ exactly as §IV-2 describes.  The method grid runs through the
-repro.eval fleet harness (one job per method, parallel workers).
+they differ exactly as §IV-2 describes.  The method grid is **data**: it
+loads from ``experiments/paper_table3.toml`` (the checked-in
+:mod:`repro.exp` spec — run it directly with
+``python -m repro.eval --spec experiments/paper_table3.toml``); this
+driver only swaps in the runtime-fitted CAORA α and the REPRO_FULL
+request count before running it through the provenance-stamped harness.
 """
 from __future__ import annotations
 
@@ -10,9 +14,11 @@ import json
 
 from benchmarks import common
 from repro.core.baselines import fit_caora_alpha
+from repro.exp import load_experiment
 from repro.sim import workload_for
 
 CAORA_ALPHA_PATH = common.ARTIFACTS / "caora_alpha.json"
+SPEC_PATH = common.EXPERIMENTS / "paper_table3.toml"
 
 
 def caora_alpha() -> float:
@@ -29,12 +35,17 @@ def caora_alpha() -> float:
 
 
 def main(rho: float = 1.0, agent: str = common.DEFAULT_AGENT) -> list:
-    common.get_critic()                      # ensure the critic artifact
-    scenarios = [{"family": "paper", "label": "paper",
-                  "params": {"rho": rho,
-                             "n_ai_requests": common.REQUESTS[rho]}}]
-    rows = common.sweep(common.method_grid(caora_alpha(), agent=agent),
-                        scenarios)
+    common.get_critic()                      # ensure the @critic artifact
+    spec = load_experiment(SPEC_PATH)
+    spec = spec.with_method_params("CAORA", alpha=caora_alpha())
+    if agent != common.DEFAULT_AGENT:
+        spec = spec.with_method_params("HAF", agent=agent)
+    if rho != 1.0 or common.FULL:
+        spec = spec.with_scenario_params(
+            "paper", rho=rho, n_ai_requests=common.REQUESTS[rho])
+    spec = spec.replace(workers=common.WORKERS, engine=common.ENGINE,
+                        out=str(common.ARTIFACTS / "table3_report.json"))
+    rows = common.experiment_rows(spec, "table3")
     for s in rows:
         print(common.csv_row("table3", s), flush=True)
     return rows

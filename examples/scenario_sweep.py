@@ -1,9 +1,10 @@
-"""Scenario-generation + fleet-evaluation demo.
+"""Declarative experiment demo: spec grammar, provenance, resume.
 
-Builds three generated scenarios (a bursty flash-crowd, a fault-injected
-node-outage, and a 12-node dense-urban topology), then sweeps two
-placement policies over them with two workload seeds each — in parallel —
-and prints the aggregated per-class fulfillment table.
+Declares a fleet sweep (two placement policies over three generated
+scenarios × two workload seeds) as a :class:`repro.exp.ExperimentSpec` —
+methods and scenarios in the spec grammar — writes it to a TOML file,
+runs it through the provenance-stamped harness, then runs it AGAIN to
+show resume: every completed row is reused from the report on disk.
 
   PYTHONPATH=src python examples/scenario_sweep.py
 """
@@ -11,12 +12,13 @@ from __future__ import annotations
 
 import pathlib
 
-from repro.eval import SweepSpec, build_report, format_table, run_sweep, \
-    write_report
+from repro.eval import format_table
+from repro.exp import ExperimentSpec, run_experiment
 from repro.sim.scenarios import make_scenario, scenario_fingerprint
 
-OUT = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / \
-    "scenario_sweep_demo.json"
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+OUT = ART / "scenario_sweep_demo.json"
+SPEC_FILE = ART / "scenario_sweep_demo.toml"
 
 
 def main() -> None:
@@ -28,27 +30,34 @@ def main() -> None:
     print(f"fingerprint: {scenario_fingerprint(sc)[:16]}... "
           f"(same seed -> same fingerprint)")
 
-    # 2) declare the sweep: policies x scenarios x seeds
-    spec = SweepSpec(
+    # 2) experiments are data too: the whole sweep in one spec, with the
+    #    method/scenario grammar every frontend shares
+    spec = ExperimentSpec(
+        name="scenario-sweep-demo",
         methods=("haf-static", "round-robin"),
-        scenarios=(
-            {"family": "flash-crowd", "params": {"magnitude": 6.0}},
-            "node-outage",
-            {"family": "dense-urban", "params": {"n_nodes": 12}},
-        ),
+        scenarios=("flash-crowd(magnitude=6.0)",
+                   "node-outage",
+                   "dense-urban(n_nodes=12)"),
         seeds=(0, 1),
         n_ai_requests=400,          # demo-sized; drop for the real run
         workers=2,
-    )
+        out=str(OUT))
+    spec.to_file(SPEC_FILE)         # checked-in form: --spec runs it too
+    print(f"spec -> {SPEC_FILE}  (spec_hash={spec.spec_hash()[:12]}, "
+          f"run it with: python -m repro.eval --spec {SPEC_FILE})")
 
-    # 3) run it (each job is an independent simulator run in a worker)
-    rows = run_sweep(spec, verbose=True)
-
-    # 4) aggregate into mean/CI cells and persist the JSON report
-    report = build_report(spec, rows)
+    # 3) run it (parallel workers; the report embeds the canonical spec,
+    #    its hashes, per-cell scenario fingerprints and backend info)
+    OUT.unlink(missing_ok=True)
+    report = run_experiment(spec, verbose=True)
     print(format_table(report["aggregate"]))
-    write_report(report, OUT)
     print(f"report -> {OUT}")
+
+    # 4) run it AGAIN: the resume key matches, every row is reused
+    report = run_experiment(spec, verbose=True)
+    print(f"second run resumed "
+          f"{report['provenance']['resumed_rows']}/{report['n_runs']} rows "
+          "from the report on disk")
 
 
 if __name__ == "__main__":

@@ -291,17 +291,27 @@ def _load_critic_cached(path: str, mtime_ns: int, size: int) -> "Critic":
     return Critic.load(path)
 
 
-def load_critic_cached(path: str) -> "Critic":
+def load_critic_cached(path: str,
+                       expect_fingerprint: Optional[str] = None) -> "Critic":
     """Load a critic artifact, sharing one frozen instance per file state.
 
     The critic is read-only at deployment, so the replicas of a batched
     sweep cell (each built by :func:`repro.eval.make_method`) can share one
     object — one parse, one ``params_np`` cache, one fingerprint — instead
     of B loads.  Keyed on (path, mtime, size): a retrained artifact reloads.
+
+    ``expect_fingerprint`` (from an artifact manifest or a ``name@hash``
+    pin — see :mod:`repro.exp.artifacts`) is verified against the loaded
+    parameters' content hash; a mismatch raises instead of letting a
+    stale/swapped artifact silently gate a sweep.
     """
     st = os.stat(path)
-    return _load_critic_cached(os.path.abspath(path), st.st_mtime_ns,
-                               st.st_size)
+    critic = _load_critic_cached(os.path.abspath(path), st.st_mtime_ns,
+                                 st.st_size)
+    if expect_fingerprint is not None:
+        from repro.exp.artifacts import verify_fingerprint
+        verify_fingerprint(path, critic.fingerprint(), expect_fingerprint)
+    return critic
 
 
 def train_critic(samples: List[Tuple[np.ndarray, np.ndarray, np.ndarray]],

@@ -25,7 +25,10 @@ critic training and held-out-family generalization measurements
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.controller import RandomPlacement, ScriptedPlacement
 from repro.core.critic import epoch_records_to_samples
@@ -225,3 +228,21 @@ def merge_samples(per_family: Dict[str, List],
             continue
         out.extend(samples)
     return out
+
+
+def samples_fingerprint(samples: Sequence[Tuple]) -> str:
+    """Content hash of a (φ, r, mask) training set.
+
+    Artifact manifests (:mod:`repro.exp.artifacts`) record it as the
+    ``data_hash`` — two critics trained from byte-identical harvests carry
+    the same hash, so a manifest ties a deployed critic back to exactly
+    the data that produced it.
+    """
+    h = hashlib.sha256()
+    h.update(str(len(samples)).encode())
+    for tup in samples:
+        for arr in tup:
+            a = np.ascontiguousarray(np.asarray(arr, np.float32))
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+    return h.hexdigest()

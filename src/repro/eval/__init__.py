@@ -11,6 +11,12 @@ The evaluation API every scaling PR plugs into::
     write_report(build_report(spec, rows), "artifacts/report.json")
 
 CLI: ``PYTHONPATH=src python -m repro.eval --help``.
+
+The declarative layer on top — experiment spec files, the
+method/scenario grammar, artifact references, provenance-stamped
+resumable runs — lives in :mod:`repro.exp` (``ExperimentSpec``,
+``run_experiment``); ``python -m repro.eval --spec experiments/<f>.toml``
+drives it from the command line.
 """
 from repro.eval.policies import (haf_spec, make_method, method_names,
                                  normalize_method, register_method)

@@ -1,11 +1,23 @@
-"""Fleet-sweep CLI.
+"""Fleet-sweep CLI over the declarative experiment layer (`repro.exp`).
 
+  # spec file (checked-in experiment), plus any flag overrides
+  PYTHONPATH=src python -m repro.eval --spec experiments/paper_table3.toml
+  PYTHONPATH=src python -m repro.eval --spec experiments/load_sweep.toml \
+      --seeds 0..4 --workers 4 --engine numpy
+
+  # inline grammar (the same parser the spec files use)
   PYTHONPATH=src python -m repro.eval \
-      --scenarios paper,diurnal,flash-crowd --seeds 2 --workers 4 \
-      --methods haf,haf-static,round-robin,lyapunov \
-      --out artifacts/sweep_report.json
+      --scenarios "paper,flash-crowd(rho=0.95, n_ai_requests=4000)" \
+      --methods "haf(agent=qwen3-32b-sim, critic=@critic?),haf-static" \
+      --seeds 3 --out artifacts/sweep_report.json
 
-``--smoke`` shrinks everything (tiny request counts, 1 seed) for CI.
+``--validate`` dry-runs: parse, expand, fingerprint, print the job table,
+run nothing.  Reports embed provenance (canonical spec + hashes, scenario
+and critic fingerprints, backend versions), and re-running against an
+existing report at the same ``--out`` **resumes** — completed rows are
+reused, only missing/truncated cells recompute (``--no-resume`` to
+recompute everything).  ``--smoke`` shrinks everything (tiny request
+counts, 1 seed) for CI.
 """
 from __future__ import annotations
 
@@ -15,144 +27,192 @@ import sys
 import time
 from typing import List, Optional
 
-from repro.eval.policies import haf_spec, method_names
-from repro.eval.report import build_report, format_table, write_report
-from repro.eval.sweep import SweepSpec, run_sweep
+from repro.exp import (ArtifactError, ExperimentSpec, GrammarError,
+                       SpecError, job_table, parse_methods, parse_scenarios,
+                       parse_seeds, run_experiment)
+from repro.exp.provenance import completed_rows, load_prior_report
+from repro.exp.runner import expand_experiment
 
 DEFAULT_METHODS = "haf,haf-static,round-robin,lyapunov"
 DEFAULT_SCENARIOS = "paper,diurnal,flash-crowd"
+DEFAULT_OUT = "artifacts/sweep_report.json"
 
 
-def _parse_seeds(text: str) -> List[int]:
-    """"3" -> [0, 1, 2]; "0,2,5" -> [0, 2, 5]."""
-    text = text.strip()
-    if "," in text:
-        return [int(s) for s in text.split(",") if s.strip() != ""]
-    return list(range(int(text))) if text else []
-
-
-def _parse_methods(text: str, critic_path: Optional[str],
-                   agent: str, caora_alpha: float) -> List:
-    methods: List = []
-    for name in (s.strip() for s in text.split(",")):
-        if not name:
-            continue
-        if name == "haf":
-            methods.append(haf_spec(agent=agent, critic_path=critic_path))
-        elif name.startswith("haf-llm:"):
-            # haf-llm:<shell cmd> — external LLM endpoint (prompt on stdin,
-            # JSON shortlist on stdout); note the cmd cannot contain commas
-            # (the method list is comma-separated)
-            cmd = name[len("haf-llm:"):]
-            methods.append({"name": "haf-llm", "label": f"haf-llm({cmd})",
-                            "params": {"cmd": cmd,
-                                       "critic_path": critic_path}})
-        elif name == "caora":
-            methods.append({"name": "caora",
-                            "params": {"alpha": caora_alpha}})
-        else:
-            methods.append(name)
-    return methods
-
-
-def main(argv: Optional[List[str]] = None) -> int:
+def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.eval",
-        description="HAF fleet evaluation: policies x scenarios x seeds")
-    ap.add_argument("--scenarios", default=DEFAULT_SCENARIOS,
-                    help="comma-separated scenario family names")
-    ap.add_argument("--methods", default=DEFAULT_METHODS,
-                    help=f"comma-separated from {method_names()}")
-    ap.add_argument("--seeds", default="2",
-                    help="count (e.g. 3 -> 0,1,2) or explicit list 0,2,5")
+        description="HAF fleet evaluation: policies x scenarios x seeds "
+                    "(spec files + grammar; see experiments/README.md)")
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="experiment spec file (.toml or .json); every "
+                         "other flag overrides the file's value")
+    ap.add_argument("--validate", action="store_true",
+                    help="dry run: parse, expand, fingerprint, print the "
+                         "job table — run nothing")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="recompute every row even when a matching report "
+                         "already exists at --out")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated scenario entries: a family name "
+                         "or family(k=v, ...) — e.g. "
+                         "'paper,flash-crowd(rho=0.95)' "
+                         f"[default: {DEFAULT_SCENARIOS}]")
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated method entries: a name or "
+                         "name(k=v, ...) — e.g. "
+                         "'haf(agent=qwen3-32b-sim, critic=@critic),"
+                         "haf-llm(cmd=\"curl ...\"),caora(alpha=0.4)' "
+                         f"[default: {DEFAULT_METHODS}]")
+    ap.add_argument("--seeds", default=None,
+                    help="count (3 -> 0,1,2), list (0,2,5), or inclusive "
+                         "range (0..4) [default: 2]")
     ap.add_argument("--requests", type=int, default=None,
                     help="override n_ai_requests for every scenario")
     ap.add_argument("--rho", type=float, default=None,
                     help="override the load point for every scenario")
-    ap.add_argument("--workers", type=int,
-                    default=max(min(4, (os.cpu_count() or 1)), 1))
-    ap.add_argument("--batch", type=int, default=1, metavar="B",
+    ap.add_argument("--workers", type=int, default=None,
+                    help="sweep processes [default: up to 4]")
+    ap.add_argument("--batch", type=int, default=None, metavar="B",
                     help="fan up to B seeds of each (scenario, method) cell "
-                         "into one batched [B, S] simulation (one process, "
-                         "one scenario build) instead of B separate runs")
-    ap.add_argument("--engine", default="numpy",
+                         "into one batched [B, S] simulation")
+    ap.add_argument("--engine", default=None,
                     choices=("numpy", "scalar", "jax", "pallas"),
                     help="event core backend (scalar = debug reference; "
                          "pallas = batched kernel, needs --batch > 1)")
-    ap.add_argument("--epoch-interval", type=float, default=5.0)
-    ap.add_argument("--max-events", type=int, default=5_000_000,
+    ap.add_argument("--epoch-interval", type=float, default=None)
+    ap.add_argument("--max-events", type=int, default=None,
                     help="per-run event budget; hitting it marks the run "
                          "truncated in the report")
-    ap.add_argument("--out", default="artifacts/sweep_report.json")
-    ap.add_argument("--agent", default="qwen3-32b-sim")
+    ap.add_argument("--out", default=None,
+                    help=f"report path [default: {DEFAULT_OUT}]")
+    ap.add_argument("--name", default=None, help="experiment name")
+    ap.add_argument("--agent", default=None,
+                    help="set agent= on every haf method (shorthand for "
+                         "the grammar param)")
     ap.add_argument("--critic", default=None,
-                    help="path to a trained critic artifact for HAF")
-    ap.add_argument("--caora-alpha", type=float, default=0.5)
+                    help="critic artifact for the HAF methods: a path, "
+                         "@name / @name? (optional), or name@<fingerprint>")
+    ap.add_argument("--caora-alpha", type=float, default=None,
+                    help="set alpha= on every caora method")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny request counts, 1 seed")
-    args = ap.parse_args(argv)
+    return ap
 
-    from repro.sim.scenarios import family_names
-    scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
-    unknown = [s for s in scenarios if s not in family_names()]
-    if unknown:
-        ap.error(f"unknown scenario families {unknown}; "
-                 f"known: {family_names()}")
-    bad = [m.strip() for m in args.methods.split(",")
-           if m.strip() and not m.strip().startswith("haf-llm:")
-           and m.strip() not in method_names()]
-    # bare "haf-llm" is registered (programmatic use passes cmd as a
-    # param) but unusable from the CLI without the :<cmd> suffix
-    bad += [m.strip() for m in args.methods.split(",")
-            if m.strip() == "haf-llm"]
-    if bad:
-        ap.error(f"unknown methods {bad}; known: {method_names()} "
-                 "(haf-llm needs the command: haf-llm:<cmd>)")
-    if args.critic and not os.path.exists(args.critic):
-        ap.error(f"--critic file not found: {args.critic}")
 
-    seeds = _parse_seeds(args.seeds)
-    if not seeds:
-        ap.error("--seeds needs a count >= 1 (e.g. 3 -> seeds 0,1,2) "
-                 "or an explicit list (e.g. 0,2,5)")
-    if args.batch < 1:
-        ap.error("--batch must be >= 1")
-    if args.engine == "pallas" and args.batch <= 1:
-        ap.error("--engine pallas is the batched kernel backend; "
-                 "pass --batch > 1 to use it")
-    requests = args.requests
+def build_experiment(args) -> ExperimentSpec:
+    """Flags (+ optional spec file) → a validated ExperimentSpec.
+
+    Spec-file values are the base; every explicitly-passed flag overrides.
+    Without ``--spec`` the legacy flag defaults apply, parsed by the same
+    grammar, so raw-flag and spec-file invocations of the same experiment
+    expand to identical job lists.
+    """
+    if args.spec:
+        spec = ExperimentSpec.from_file(args.spec)
+    else:
+        spec = ExperimentSpec(
+            methods=parse_methods(DEFAULT_METHODS),
+            scenarios=parse_scenarios(DEFAULT_SCENARIOS),
+            seeds=(0, 1),
+            name="cli-sweep",
+            workers=max(min(4, (os.cpu_count() or 1)), 1),
+            out=DEFAULT_OUT)
+
+    changes = {}
+    if args.methods is not None:
+        changes["methods"] = parse_methods(args.methods)
+    if args.scenarios is not None:
+        changes["scenarios"] = parse_scenarios(args.scenarios)
+    if args.seeds is not None:
+        changes["seeds"] = parse_seeds(args.seeds)
+    for flag, field in (("requests", "n_ai_requests"), ("rho", "rho"),
+                        ("workers", "workers"), ("batch", "batch"),
+                        ("engine", "engine"),
+                        ("epoch_interval", "epoch_interval"),
+                        ("max_events", "max_events"), ("out", "out"),
+                        ("name", "name")):
+        val = getattr(args, flag)
+        if val is not None:
+            changes[field] = val
+    if changes:
+        spec = spec.replace(**changes)
+
+    # method-level shorthands apply to every matching method
+    if args.agent is not None or args.critic is not None:
+        methods = []
+        for m in spec.methods:
+            params = dict(m["params"])
+            if args.agent is not None and m["name"] == "haf":
+                params["agent"] = args.agent
+            if args.critic is not None and m["name"] in ("haf", "haf-llm"):
+                params["critic_path"] = args.critic
+            methods.append(dict(m, params=params))
+        spec = spec.replace(methods=tuple(methods))
+    if args.caora_alpha is not None:
+        methods = [dict(m, params=dict(m["params"], alpha=args.caora_alpha))
+                   if m["name"] == "caora" else m for m in spec.methods]
+        spec = spec.replace(methods=tuple(methods))
+
     if args.smoke:
-        seeds = seeds[:1] or [0]
-        requests = requests or 150
+        spec = spec.replace(seeds=spec.seeds[:1] or (0,),
+                            n_ai_requests=spec.n_ai_requests or 150)
+    if spec.out is None:
+        spec = spec.replace(out=DEFAULT_OUT)
+    return spec
 
-    spec = SweepSpec(
-        methods=tuple(_parse_methods(args.methods, args.critic, args.agent,
-                                     args.caora_alpha)),
-        scenarios=tuple(scenarios),
-        seeds=tuple(seeds),
-        n_ai_requests=requests,
-        rho=args.rho,
-        epoch_interval=args.epoch_interval,
-        max_events=args.max_events,
-        workers=args.workers,
-        engine=args.engine,
-        batch_seeds=args.batch,
-    )
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = _build_parser()
+    args = ap.parse_args(argv)
+    try:
+        spec = build_experiment(args)
+        spec.validate()
+    except (GrammarError, SpecError, FileNotFoundError) as err:
+        ap.error(str(err))
+
     n_jobs = len(spec.methods) * len(spec.scenarios) * len(spec.seeds)
-    batched = f", batch={spec.batch_seeds}" if spec.batch_seeds > 1 else ""
-    print(f"# sweep: {len(spec.methods)} methods x {len(spec.scenarios)} "
-          f"scenarios x {len(spec.seeds)} seeds = {n_jobs} runs "
-          f"({spec.workers} workers{batched})", flush=True)
+    batched = f", batch={spec.batch}" if spec.batch > 1 else ""
+    print(f"# experiment {spec.name!r}: {len(spec.methods)} methods x "
+          f"{len(spec.scenarios)} scenarios x {len(spec.seeds)} seeds = "
+          f"{n_jobs} runs ({spec.workers} workers{batched})", flush=True)
+    print(f"# spec_hash={spec.spec_hash()[:12]} "
+          f"identity={spec.identity_hash()[:12]}", flush=True)
+
+    if args.validate:
+        try:
+            _, jobs, prov = expand_experiment(spec)
+        except ArtifactError as err:
+            ap.error(str(err))
+        prior = {}
+        if not args.no_resume and spec.out:
+            prior = completed_rows(load_prior_report(spec.out),
+                                   prov["resume_key"])
+        for ref, entry in prov["artifacts"].items():
+            fp = entry.get("fingerprint") or entry.get("file_sha256") or ""
+            state = "MISSING (optional)" if entry.get("missing") else \
+                f"{entry['path']}" + (f" @{fp[:12]}" if fp else "")
+            print(f"# artifact {ref} -> {state}", flush=True)
+        print(job_table(jobs, prov, prior))
+        print(f"# validate only: {len(jobs)} jobs expanded, "
+              f"{len(prior)} resumable, nothing run", flush=True)
+        return 0
+
     t0 = time.time()
-    rows = run_sweep(spec, verbose=True)
-    report = build_report(spec, rows)
-    path = write_report(report, args.out)
+    try:
+        report = run_experiment(spec, resume=not args.no_resume,
+                                verbose=True, validate=False)
+    except ArtifactError as err:
+        ap.error(str(err))
+    from repro.eval.report import format_table
     if report["n_truncated"]:
         print(f"# WARNING: {report['n_truncated']}/{report['n_runs']} runs "
               f"hit max_events — partial results (raise --max-events)",
               flush=True)
     print(format_table(report["aggregate"]))
-    print(f"# report -> {path}  ({time.time() - t0:.0f}s)", flush=True)
+    resumed = report["provenance"].get("resumed_rows", 0)
+    note = f", {resumed} resumed" if resumed else ""
+    print(f"# report -> {spec.out}  ({time.time() - t0:.0f}s{note})",
+          flush=True)
     return 0
 
 

@@ -92,14 +92,27 @@ def _caora(alpha: float = 0.5) -> MethodInstance:
 
 
 def _load_critic(critic_path: Optional[str]):
+    """Resolve + load a critic reference or path (None → agent-only HAF).
+
+    ``critic_path`` may be a plain artifact path (legacy), or a store
+    reference — ``@critic``, ``@critic?`` (optional: absent → agent-only),
+    ``critic@<fingerprint>`` (pinned) — resolved through
+    :mod:`repro.exp.artifacts`.  When a manifest (or pin) promises a
+    content fingerprint, the loaded critic is verified against it and a
+    changed artifact raises :class:`repro.exp.FingerprintMismatch`.
+    """
     if not critic_path:
         return None
-    if not os.path.exists(critic_path):
+    from repro.exp.artifacts import resolve_artifact
+    path, expected = resolve_artifact(critic_path)
+    if path is None:                         # optional ref, artifact absent
+        return None
+    if not os.path.exists(path):
         raise FileNotFoundError(
-            f"critic artifact not found: {critic_path!r} "
+            f"critic artifact not found: {path!r} "
             f"(pass critic_path=None for agent-only HAF)")
     from repro.core.critic import load_critic_cached
-    return load_critic_cached(critic_path)
+    return load_critic_cached(path, expect_fingerprint=expected)
 
 
 @register_method("haf")

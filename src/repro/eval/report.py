@@ -73,14 +73,19 @@ def _sanitize(obj):
     return obj
 
 
-def build_report(spec, rows: List[Optional[Dict]]) -> Dict:
+def build_report(spec, rows: List[Optional[Dict]],
+                 provenance: Optional[Dict] = None) -> Dict:
+    """Aggregate ``rows`` under ``spec``; ``provenance`` (the stamped block
+    built by :mod:`repro.exp.provenance` — canonical spec + hashes +
+    scenario/artifact fingerprints + backend info) rides along verbatim
+    so reports are auditable and resumable."""
     spec_dict = dataclasses.asdict(spec) if dataclasses.is_dataclass(spec) \
         else dict(spec)
     # sequences arrive as tuples; JSON wants lists
     spec_dict = {k: list(v) if isinstance(v, tuple) else v
                  for k, v in spec_dict.items()}
     completed = [r for r in rows if r is not None]
-    return _sanitize({
+    report = {
         "kind": "repro.eval.sweep_report",
         "spec": spec_dict,
         "n_runs": len(completed),
@@ -88,7 +93,10 @@ def build_report(spec, rows: List[Optional[Dict]]) -> Dict:
         "n_truncated": sum(1 for r in completed if r.get("truncated")),
         "runs": completed,
         "aggregate": aggregate(completed),
-    })
+    }
+    if provenance is not None:
+        report["provenance"] = provenance
+    return _sanitize(report)
 
 
 def write_report(report: Dict, path) -> pathlib.Path:

@@ -124,6 +124,8 @@ def attach_scenarios(jobs: List[Dict]) -> None:
     """
     cache: Dict[tuple, Dict] = {}
     for job in jobs:
+        if job.get("scenario") is not None:
+            continue                 # already attached (e.g. by repro.exp)
         key = _scenario_key(job)
         if key not in cache:
             cache[key] = scenario_for_job(job)
@@ -223,16 +225,23 @@ def _batch_groups(jobs: List[Dict], batch_seeds: int) -> List[List[int]]:
     return groups
 
 
-def run_sweep(spec: SweepSpec, verbose: bool = False
-              ) -> List[Optional[Dict]]:
+def run_sweep(spec: SweepSpec, verbose: bool = False,
+              jobs: Optional[List[Dict]] = None) -> List[Optional[Dict]]:
     """Execute every job, in-process or across ``spec.workers`` processes.
 
     A failing job does not abort the sweep: its slot is ``None`` (reported
     loudly) and the surviving rows still aggregate.  Raises only when every
     job failed.  With ``batch_seeds > 1`` jobs sharing a (scenario, method)
     cell run as one batched simulation per chunk of seeds.
+
+    ``jobs`` runs an explicit (possibly filtered) job list instead of
+    re-expanding the spec — the resume path of ``repro.exp`` passes the
+    pending subset; rows stay aligned with the given list.
     """
-    jobs = expand_jobs(spec)
+    if jobs is None:
+        jobs = expand_jobs(spec)
+    elif not jobs:
+        return []
     attach_scenarios(jobs)
     rows: List[Optional[Dict]] = [None] * len(jobs)
 

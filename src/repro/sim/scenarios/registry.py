@@ -40,6 +40,25 @@ def family_names() -> List[str]:
     return sorted(REGISTRY)
 
 
+def family_params(name: str):
+    """``(parameter names, accepts arbitrary kwargs)`` for a family.
+
+    The spec layer validates scenario grammar entries against this before
+    any simulator runs, so a typo like ``flash-crowd(magnitud=6)`` fails
+    at parse time with the family's real parameter list instead of a
+    ``TypeError`` deep inside a sweep worker.
+    """
+    import inspect
+    try:
+        fn = REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario family {name!r}; "
+                       f"known: {family_names()}") from None
+    sig = inspect.signature(fn)
+    has_var = any(p.kind is p.VAR_KEYWORD for p in sig.parameters.values())
+    return set(sig.parameters) - {"seed"}, has_var
+
+
 # --------------------------------------------------------------------------- #
 # determinism certificate
 # --------------------------------------------------------------------------- #

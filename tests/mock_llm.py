@@ -1,0 +1,48 @@
+"""Deterministic offline stand-in for an external LLM placement endpoint.
+
+Reads the structured placement prompt (:mod:`repro.core.prompts`) on
+stdin and writes an ordered JSON shortlist to stdout — the exact contract
+``haf-llm(cmd="...")`` methods and ``python -m repro.launch.serve
+--llm-cmd`` expect from a served model, with zero network and zero
+randomness: the shortlist is the first K−1 candidate identifiers from the
+CANDIDATE ACTIONS list in lexicographic order, hedged with
+``no-migration`` (mirroring how the real agents always keep the
+no-migration option).
+
+Usage in a sweep (commas in the command are fine — the grammar quotes
+them):
+
+    python -m repro.eval --methods \
+        'haf-llm(cmd="python tests/mock_llm.py")' --scenarios paper
+
+The same prompt always yields the same shortlist, so sweeps through this
+endpoint are reproducible run-to-run — which is what the end-to-end
+``haf-llm`` tests pin.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+CANDIDATE_RE = re.compile(r"mig:s\d+:n\d+->n\d+")
+K_RE = re.compile(r"at most (\d+) candidate")
+
+
+def shortlist(prompt: str) -> list:
+    # parse only the candidate section: identifiers quoted in the policy
+    # preamble (the example answer) must not leak into the shortlist
+    _, _, candidates = prompt.rpartition("CANDIDATE ACTIONS")
+    ids = sorted(set(CANDIDATE_RE.findall(candidates)))
+    m = K_RE.search(prompt)
+    k = int(m.group(1)) if m else 3
+    return ids[:max(k - 1, 0)] + ["no-migration"]
+
+
+def main() -> int:
+    print(json.dumps(shortlist(sys.stdin.read())))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
