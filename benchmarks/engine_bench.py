@@ -1,6 +1,6 @@
 """Event-engine benchmark: solo cores + the batched multi-seed engine.
 
-Four sections recorded to ``BENCH_pr4.json``:
+Six sections recorded to ``BENCH_pr6.json``:
 
   * solo — scalar reference vs vectorized numpy engine on identical
     ``dense-urban`` workloads (the PR-2 comparison, kept so the
@@ -14,7 +14,14 @@ Four sections recorded to ``BENCH_pr4.json``:
     decides, so HAF cells batch like the baselines (fingerprint-checked),
   * sweep — a small fleet sweep executed batched (one process,
     ``batch_seeds`` seeds per simulation) vs process-parallel workers:
-    end-to-end wall time including worker startup and scenario builds.
+    end-to-end wall time including worker startup and scenario builds,
+  * profile — the ``repro.obs`` phase profiler over the batched paper
+    family per backend (numpy / jax / pallas): per-phase wall-clock with
+    host↔device transfer (``core.h2d`` + ``core.d2h``) accounted
+    separately from kernel time,
+  * pr4_comparison — obs-off batched HAF throughput vs the PR-4 record:
+    the instrumentation hooks must not tax the uninstrumented engine
+    (acceptance: within 3%).
 
   PYTHONPATH=src python -m benchmarks.engine_bench            # full grid
   PYTHONPATH=src python -m benchmarks.engine_bench --smoke    # CI-sized
@@ -36,7 +43,8 @@ from repro.eval import SweepSpec, run_sweep
 from repro.sim import Simulator, make_scenario, workload_for
 from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
 
-BENCH_PATH = common.ROOT / "BENCH_pr4.json"
+BENCH_PATH = common.ROOT / "BENCH_pr6.json"
+PR4_PATH = common.ROOT / "BENCH_pr4.json"
 
 # (n_nodes, n_ai_requests): S = 3 * n_nodes for dense-urban
 SOLO_SMOKE_GRID = ((36, 1500),)
@@ -162,12 +170,11 @@ def _bench_critic():
     return train_critic(samples, epochs=30, hidden=16, seed=0)
 
 
-def bench_haf(n_requests: int, sizes=HAF_BATCH_SIZES) -> Dict:
+def _haf_setup(n_requests: int, max_b: int):
     from repro.core import HAFPlacement, make_agent
 
     critic = _bench_critic()
     sc = make_scenario("paper", seed=0)
-    max_b = max(sizes)
     workloads = [workload_for(sc, seed=1 + s, n_ai_requests=n_requests)[0]
                  for s in range(max_b)]
     sim = Simulator(sc)
@@ -175,6 +182,11 @@ def bench_haf(n_requests: int, sizes=HAF_BATCH_SIZES) -> Dict:
     def placement(b=0):
         return HAFPlacement(make_agent(common.DEFAULT_AGENT), critic=critic)
 
+    return sim, workloads, placement
+
+
+def bench_haf(n_requests: int, sizes=HAF_BATCH_SIZES) -> Dict:
+    sim, workloads, placement = _haf_setup(n_requests, max(sizes))
     solo_results = []
     wall = 0.0
     for wl in workloads:
@@ -275,6 +287,135 @@ def bench_solo_paper(n_requests: int) -> Dict:
     return point
 
 
+# --------------------------------------------------------------------------- #
+# profile: repro.obs phase accounting per backend (PR-6)
+# --------------------------------------------------------------------------- #
+def bench_profile(n_requests: int, B: int = 8,
+                  engines=("numpy", "jax", "pallas")) -> Dict:
+    """Per-phase wall-clock for the batched paper family on each backend.
+
+    The device engines (jax, pallas) account host↔device transfer
+    (``core.h2d`` + ``core.d2h``) separately from kernel time — the
+    ROADMAP transfer-dominance question, now measurable directly.
+    """
+    from repro.obs import ObsConfig
+
+    sc = make_scenario("paper", seed=0)
+    workloads = [workload_for(sc, seed=1 + s, n_ai_requests=n_requests)[0]
+                 for s in range(B)]
+    out: Dict = {"family": "paper", "B": B,
+                 "n_requests_per_seed": n_requests, "engines": {}}
+    for engine in engines:
+        sim = Simulator(sc, engine="numpy" if engine == "pallas" else engine)
+        try:
+            results = sim.run_batch(
+                workloads,
+                lambda b: StaticPlacement(),
+                lambda b: DeadlineAwareAllocation(),
+                engine=engine,
+                obs=ObsConfig(profile=True))
+        except Exception as err:    # backend unavailable on this host
+            out["engines"][engine] = {"error":
+                                      f"{type(err).__name__}: {err}"}
+            continue
+        prof = results[0].profile
+        phases = prof["phases"]
+        host = sum(phases[k]["total_s"] for k in ("core.h2d", "core.d2h")
+                   if k in phases)
+        events = sum(r.n_events for r in results)
+        out["engines"][engine] = {
+            "wall_s": round(prof["wall_s"], 3),
+            "events": events,
+            "events_per_sec": round(events / max(prof["wall_s"], 1e-9), 1),
+            "host_transfer_s": round(host, 4),
+            "kernel_s": round(phases.get("core.kernel",
+                                         {}).get("total_s", 0.0), 4),
+            "phases": {k: {"total_s": round(v["total_s"], 4),
+                           "count": v["count"]}
+                       for k, v in sorted(phases.items())},
+        }
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# pr4_comparison: obs-off throughput guard against the PR-4 record
+# --------------------------------------------------------------------------- #
+def bench_pr4_comparison(haf: Dict) -> Dict:
+    """Compare obs-off batched HAF paper-family throughput against
+    ``BENCH_pr4.json`` — the observability hooks are `is None` checks on
+    the hot path and must stay within 3% of the pre-obs engine.
+
+    Raw ev/s ratios across sessions conflate hook overhead with machine
+    drift (CPU co-tenancy, frequency), so the record also carries a
+    drift-normalized ratio: the dense-urban StaticPlacement batched point
+    is re-measured at the PR-4 scale as the drift anchor, and the HAF
+    ratio is divided by the anchor ratio.  The compared HAF point is
+    likewise re-measured at the PR-4 request count when the current run
+    used a reduced (smoke) scale."""
+    if not PR4_PATH.exists():
+        return {"available": False}
+    prior_all = json.loads(PR4_PATH.read_text())
+    prior = prior_all["haf"]
+    n_req = prior["n_requests_per_seed"]
+    b_ref = max(p["B"] for p in prior["points"])
+    prior_evps = next(p["events_per_sec"] for p in prior["points"]
+                      if p["B"] == b_ref)
+    haf_sim, haf_wls, placement = _haf_setup(n_req, b_ref)
+
+    def run_haf() -> float:
+        t0 = time.time()
+        results = haf_sim.run_batch(haf_wls, placement,
+                                    lambda b: DeadlineAwareAllocation())
+        return sum(r.n_events for r in results) / (time.time() - t0)
+
+    anchor = prior_all.get("batched", {})
+    anchor_pt = next((p for p in anchor.get("points", [])
+                      if p["B"] == b_ref), None)
+    out = {"available": True, "B": b_ref, "n_requests_per_seed": n_req,
+           "pr4_evps": prior_evps}
+    if anchor_pt is None:
+        now_evps = max(run_haf() for _ in range(2))
+        out["pr6_evps"] = round(now_evps, 1)
+        out["ratio"] = round(now_evps / prior_evps, 4)
+        out["within_3pct"] = bool(out["ratio"] >= 0.97)
+        return out
+
+    # interleaved anchor/HAF pairs: each rep measures the dense-urban
+    # StaticPlacement block (the drift anchor, at its PR-4 scale) and the
+    # HAF block back to back, so the per-rep ratio cancels machine drift;
+    # the median rep is compared to PR-4's own haf/anchor ratio
+    sc = make_scenario("dense-urban", seed=0, n_nodes=anchor["n_nodes"])
+    a_wls = [workload_for(sc, seed=1 + s,
+                          n_ai_requests=anchor["n_requests_per_seed"])[0]
+             for s in range(b_ref)]
+    a_sim = Simulator(sc)
+
+    def run_anchor() -> float:
+        t0 = time.time()
+        results = a_sim.run_batch(
+            a_wls,
+            [StaticPlacement() for _ in range(b_ref)],
+            [DeadlineAwareAllocation() for _ in range(b_ref)])
+        return sum(r.n_events for r in results) / (time.time() - t0)
+
+    run_anchor(), run_haf()                 # warm-up (jit, allocator caches)
+    pairs = [(run_anchor(), run_haf()) for _ in range(4)]
+    # best-of-N each side: co-tenant contention only subtracts throughput,
+    # so the max over interleaved reps estimates the uncontended rate
+    rel_now = max(h for _, h in pairs) / max(a for a, _ in pairs)
+    rel_pr4 = prior_evps / anchor_pt["events_per_sec"]
+    now_evps = max(h for _, h in pairs)
+    out["pr6_evps"] = round(now_evps, 1)
+    out["ratio"] = round(now_evps / prior_evps, 4)
+    out["anchor_pr4_evps"] = anchor_pt["events_per_sec"]
+    out["anchor_pr6_evps"] = round(max(a for a, _ in pairs), 1)
+    out["haf_over_anchor_pr4"] = round(rel_pr4, 4)
+    out["haf_over_anchor_pr6"] = round(rel_now, 4)
+    out["normalized_ratio"] = round(rel_now / rel_pr4, 4)
+    out["within_3pct"] = bool(rel_now / rel_pr4 >= 0.97)
+    return out
+
+
 def main(smoke: bool = False) -> Dict:
     solo_grid = SOLO_SMOKE_GRID if smoke else SOLO_FULL_GRID
     solo_points: List[Dict] = []
@@ -310,9 +451,29 @@ def main(smoke: bool = False) -> Dict:
           f"batched_wall={sweep['batched_wall_s']}s,"
           f"speedup={sweep['speedup']}x", flush=True)
 
+    profile = bench_profile(600 if smoke else 2000)
+    for engine, p in profile["engines"].items():
+        if "error" in p:
+            print(f"engine-profile,paper,engine={engine},"
+                  f"error={p['error']}", flush=True)
+            continue
+        print(f"engine-profile,paper,engine={engine},"
+              f"evps={p['events_per_sec']},"
+              f"host_transfer_s={p['host_transfer_s']},"
+              f"kernel_s={p['kernel_s']}", flush=True)
+
+    pr4_cmp = bench_pr4_comparison(haf)
+    if pr4_cmp.get("available"):
+        norm = pr4_cmp.get("normalized_ratio", pr4_cmp["ratio"])
+        print(f"engine-pr4cmp,paper,B={pr4_cmp['B']},"
+              f"pr4_evps={pr4_cmp['pr4_evps']},"
+              f"pr6_evps={pr4_cmp['pr6_evps']},"
+              f"ratio={pr4_cmp['ratio']},"
+              f"drift_normalized={norm}", flush=True)
+
     record = {
         "kind": "repro.bench.engine",
-        "pr": 4,
+        "pr": 6,
         "smoke": smoke,
         "default_engine": "numpy",
         "solo_points": solo_points,
@@ -320,6 +481,8 @@ def main(smoke: bool = False) -> Dict:
         "batched": batched,
         "haf": haf,
         "sweep": sweep,
+        "profile": profile,
+        "pr4_comparison": pr4_cmp,
     }
     BENCH_PATH.write_text(json.dumps(record, indent=2, sort_keys=True))
     print(f"# record -> {BENCH_PATH}", flush=True)
@@ -332,6 +495,12 @@ def main(smoke: bool = False) -> Dict:
     if sweep["speedup"] < 1.0:
         print("# WARNING: batched sweep slower than process-parallel "
               f"({sweep['batched_wall_s']}s vs {sweep['process_wall_s']}s)",
+              flush=True)
+    if pr4_cmp.get("available") and not pr4_cmp["within_3pct"]:
+        norm = pr4_cmp.get("normalized_ratio", pr4_cmp["ratio"])
+        print(f"# WARNING: obs-off batched HAF throughput is "
+              f"{norm:.3f}x the PR-4 record (drift-normalized, < 0.97 — "
+              f"instrumentation hooks may be taxing the engine)",
               flush=True)
     return record
 

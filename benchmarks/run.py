@@ -19,8 +19,16 @@ def main() -> None:
                              "alloc", "fleet", "engine", "critic", "spec"))
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode (tiny request counts, 1 seed; the "
-                         "engine bench still records BENCH_pr4.json and "
+                         "engine bench still records BENCH_pr6.json and "
                          "the critic harvest+holdout path still runs)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record repro.obs event/decision traces for the "
+                         "spec smoke sweep (JSONL + Chrome trace next to "
+                         "its report)")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-phase wall-clock profiling on the spec smoke "
+                         "sweep (the engine bench always profiles its own "
+                         "section)")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -31,7 +39,24 @@ def main() -> None:
 
     if args.only in (None, "engine"):
         from benchmarks import engine_bench
-        engine_bench.main(smoke=args.smoke)
+        record = engine_bench.main(smoke=args.smoke)
+        if args.smoke:
+            # CI guard: the profile section must carry a real per-phase
+            # table for every backend that ran (host transfer split out)
+            engines = record.get("profile", {}).get("engines", {})
+            ran = {e: p for e, p in engines.items() if "error" not in p}
+            bad = [e for e, p in ran.items() if not p.get("phases")]
+            if not ran or bad:
+                raise RuntimeError(
+                    "BENCH_pr6.json profile section lacks per-phase "
+                    f"tables (ran={sorted(ran)}, empty={bad})")
+            dev = [e for e in ran if e in ("jax", "pallas")]
+            missing = [e for e in dev
+                       if "core.kernel" not in ran[e]["phases"]]
+            if missing:
+                raise RuntimeError(
+                    "device engines missing kernel/transfer phase "
+                    f"accounting: {missing}")
     if args.only in (None, "alloc"):
         from benchmarks import alloc_microbench
         alloc_microbench.main()
@@ -49,10 +74,13 @@ def main() -> None:
             if rc:
                 raise RuntimeError(f"spec validate failed: {name} (rc={rc})")
         if args.smoke:
+            obs_flags = (["--trace"] if args.trace else []) \
+                + (["--profile"] if args.profile else [])
             rc = eval_cli.main(
                 ["--spec", str(common.EXPERIMENTS / "paper_table3.toml"),
                  "--smoke", "--no-resume", "--workers", "1",
-                 "--out", str(common.ARTIFACTS / "spec_smoke.json")])
+                 "--out", str(common.ARTIFACTS / "spec_smoke.json")]
+                + obs_flags)
             if rc:
                 raise RuntimeError(f"spec smoke run failed (rc={rc})")
     if args.only in (None, "table3"):

@@ -36,6 +36,9 @@ class HAFPlacement:
         self.name = f"HAF({agent.name}{'+critic' if critic else ''})"
         self.last_shortlist: List[Optional[MigrationAction]] = []
         self.last_scores = None
+        # predicted benefit of the decided action over no-migration
+        # (critic score delta) — read by the trace recorder's decision log
+        self.last_margin = None
 
     def batch_key(self) -> tuple:
         """Replicas whose policies share this key decide as one group.
@@ -89,6 +92,8 @@ class HAFPlacement:
         gated = []                     # (index, options) for critic scoring
         for i, (pol, shortlist) in enumerate(zip(policies, shortlists)):
             pol.last_shortlist = [a for a in shortlist if a is not None]
+            pol.last_scores = None
+            pol.last_margin = None
             if pol.critic is None:
                 # HAF-NoCritic: trust the agent's top-ranked candidate
                 out[i] = shortlist[0] if shortlist else None
@@ -117,11 +122,16 @@ class HAFPlacement:
                                                     score_rows):
                 pol = policies[i]
                 pol.last_scores = scores
+                none_idx = options.index(None)
                 if choice is None:
+                    if len(options) > 1:
+                        pol.last_margin = float(
+                            max(scores) - scores[none_idx])
                     continue
                 # optional hysteresis: require a margin over no-migration
-                none_idx = options.index(None)
                 chosen_idx = options.index(choice)
+                pol.last_margin = float(
+                    scores[chosen_idx] - scores[none_idx])
                 if scores[chosen_idx] < scores[none_idx] \
                         + pol.min_score_margin:
                     continue

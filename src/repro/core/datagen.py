@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.controller import RandomPlacement, ScriptedPlacement
+from repro.obs import diag
 from repro.core.critic import epoch_records_to_samples
 from repro.sim.engine import DeadlineAwareAllocation, Simulator
 from repro.sim.scenarios import make_scenario, workload_for
@@ -128,7 +129,7 @@ def harvest(scenario: Dict, *, epoch_interval: float = 5.0,
 
     def log(msg):
         if verbose:
-            print(f"[datagen] {msg}", flush=True)
+            diag(f"[datagen] {msg}")
 
     # ---- 1) bulk exploration (one batched block over load × seed) ------- #
     bulk: List[Tuple[List, Callable]] = []
@@ -211,11 +212,10 @@ def harvest_families(families: Sequence[str] = DEFAULT_FAMILIES, *,
         sc = make_scenario(family, seed=scenario_seed,
                            **params.get(family, {}))
         if verbose:
-            print(f"[datagen] harvesting family {family!r}", flush=True)
+            diag(f"[datagen] harvesting family {family!r}")
         out[family] = harvest(sc, verbose=verbose, **harvest_kw)
         if verbose:
-            print(f"[datagen] {family}: {len(out[family])} samples",
-                  flush=True)
+            diag(f"[datagen] {family}: {len(out[family])} samples")
     return out
 
 

@@ -94,6 +94,17 @@ def _build_parser() -> argparse.ArgumentParser:
                          "@name / @name? (optional), or name@<fingerprint>")
     ap.add_argument("--caora-alpha", type=float, default=None,
                     help="set alpha= on every caora method")
+    ap.add_argument("--trace", action="store_true", default=None,
+                    help="record structured event/decision traces per run "
+                         "(JSONL + Chrome trace next to --out)")
+    ap.add_argument("--profile", action="store_true", default=None,
+                    help="per-phase wall-clock profiling; phase tables land "
+                         "in each report row and the aggregate")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="DT",
+                    help="sample per-tick gauges (utilization, queue depth, "
+                         "slack histogram, SLO) every DT sim-seconds into "
+                         "each row's timeseries")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny request counts, 1 seed")
     return ap
@@ -130,7 +141,9 @@ def build_experiment(args) -> ExperimentSpec:
                         ("engine", "engine"),
                         ("epoch_interval", "epoch_interval"),
                         ("max_events", "max_events"), ("out", "out"),
-                        ("name", "name")):
+                        ("name", "name"), ("trace", "trace"),
+                        ("profile", "profile"),
+                        ("metrics_interval", "metrics_interval")):
         val = getattr(args, flag)
         if val is not None:
             changes[field] = val

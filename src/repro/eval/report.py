@@ -58,8 +58,33 @@ def aggregate(rows: List[Dict]) -> List[Dict]:
                        "max": max(vals)}
         cell["truncated_runs"] = sum(1 for r in g if r.get("truncated"))
         cell["wall_s"] = sum(float(r.get("wall_s", 0.0)) for r in g)
+        evps = [float(r["events_per_sec"]) for r in g
+                if r.get("events_per_sec")]
+        if evps:
+            cell["events_per_sec"] = _mean_ci(evps)
+        prof = _merge_profiles([r["profile"] for r in g if r.get("profile")])
+        if prof is not None:
+            cell["profile"] = prof
         out.append(cell)
     return out
+
+
+def _merge_profiles(reports: List[Dict]) -> Optional[Dict]:
+    """Sum per-phase totals/counts across a cell's per-run phase tables
+    (the :meth:`repro.obs.Profiler.report` form)."""
+    if not reports:
+        return None
+    phases: Dict[str, Dict[str, float]] = {}
+    wall = 0.0
+    for rep in reports:
+        wall += float(rep.get("wall_s", 0.0))
+        for name, p in rep.get("phases", {}).items():
+            acc = phases.setdefault(name, {"total_s": 0.0, "count": 0})
+            acc["total_s"] += float(p["total_s"])
+            acc["count"] += int(p["count"])
+    for p in phases.values():
+        p["mean_us"] = 1e6 * p["total_s"] / max(p["count"], 1)
+    return {"wall_s": wall, "phases": phases}
 
 
 def _sanitize(obj):

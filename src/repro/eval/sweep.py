@@ -36,6 +36,7 @@ from concurrent.futures import ProcessPoolExecutor, as_completed
 from typing import Dict, List, Optional, Sequence, Union
 
 from repro.eval.policies import make_method, normalize_method
+from repro.obs import diag
 
 ScenarioSpec = Union[str, Dict]
 
@@ -54,6 +55,12 @@ class SweepSpec:
     scenario_seed: int = 0                  # topology seed (workload varies)
     engine: str = "numpy"                   # numpy | scalar | jax | pallas
     batch_seeds: int = 1                    # >1: fan seeds into run_batch
+    # observability (repro.obs) — all off by default; the engine then runs
+    # the uninstrumented, bit-identical hot path
+    trace: bool = False                     # event trace -> row trace_counts
+    profile: bool = False                   # phase timers -> row profile
+    metrics_interval: float = 0.0           # >0: gauge series -> timeseries
+    trace_dir: Optional[str] = None         # export traces (jsonl + chrome)
 
 
 def normalize_scenario(spec: ScenarioSpec) -> Dict:
@@ -84,6 +91,10 @@ def expand_jobs(spec: SweepSpec) -> List[Dict]:
             "epoch_interval": spec.epoch_interval,
             "max_events": spec.max_events,
             "engine": spec.engine,
+            "trace": spec.trace,
+            "profile": spec.profile,
+            "metrics_interval": spec.metrics_interval,
+            "trace_dir": spec.trace_dir,
         })
     return jobs
 
@@ -132,6 +143,35 @@ def attach_scenarios(jobs: List[Dict]) -> None:
         job["scenario"] = cache[key]
 
 
+def _obs_config(job: Dict):
+    """The job's ObsConfig, or None when everything is off (the default —
+    the engine then never sees an observer)."""
+    if not (job.get("trace") or job.get("profile")
+            or (job.get("metrics_interval") or 0) > 0):
+        return None
+    from repro.obs import ObsConfig
+    return ObsConfig(trace=bool(job.get("trace")),
+                     profile=bool(job.get("profile")),
+                     metrics_interval=float(job.get("metrics_interval")
+                                            or 0.0))
+
+
+def _export_trace(job: Dict, res, seeds: str) -> Optional[str]:
+    """Write the run's trace as JSONL + Chrome JSON under ``trace_dir``."""
+    tdir = job.get("trace_dir")
+    if res.trace is None or not tdir:
+        return None
+    import pathlib
+    import re
+    stem = re.sub(r"[^A-Za-z0-9._-]+", "-",
+                  f"{job['method_label']}_{job['scenario_label']}"
+                  f"_seed{seeds}")
+    path = pathlib.Path(tdir) / f"{stem}.jsonl"
+    res.trace.to_jsonl(path)
+    res.trace.to_chrome(path.with_suffix(".chrome.json"))
+    return str(path)
+
+
 def run_job(job: Dict) -> Dict:
     """One simulator run; returns a flat, JSON-ready result row."""
     from repro.sim import Simulator
@@ -151,8 +191,11 @@ def run_job(job: Dict) -> Dict:
                     engine=engine)
     t0 = time.time()
     res = sim.run(requests, placement, allocation, rr_dispatch=rr,
-                  max_events=job["max_events"])
-    return _result_row(job, res, requests, info, time.time() - t0)
+                  max_events=job["max_events"], obs=_obs_config(job))
+    wall = time.time() - t0
+    trace_path = _export_trace(job, res, str(job["seed"]))
+    return _result_row(job, res, requests, info, wall,
+                       trace_path=trace_path)
 
 
 def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
@@ -184,14 +227,22 @@ def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
                             [m[0] for m in methods],
                             [m[1] for m in methods],
                             rr_dispatch=rr,
-                            max_events=base["max_events"])
+                            max_events=base["max_events"],
+                            obs=_obs_config(base))
     wall = time.time() - t0
-    return [dict(_result_row(job, res, reqs, info, wall / len(jobs)),
-                 batch=len(jobs))
-            for job, res, reqs, info in zip(jobs, results, workloads, infos)]
+    # the recorder is shared by the whole block: export once, reference
+    # the file from every row; trace_counts stay per-replica
+    trace_path = _export_trace(
+        base, results[0], "-".join(str(j["seed"]) for j in jobs))
+    return [dict(_result_row(job, res, reqs, info, wall / len(jobs),
+                             b=b, trace_path=trace_path),
+                 batch=len(jobs), b=b)
+            for b, (job, res, reqs, info)
+            in enumerate(zip(jobs, results, workloads, infos))]
 
 
-def _result_row(job: Dict, res, requests, info: Dict, wall: float) -> Dict:
+def _result_row(job: Dict, res, requests, info: Dict, wall: float,
+                b: int = 0, trace_path: Optional[str] = None) -> Dict:
     row = dict(res.summary())
     row.update({
         "method": job["method_label"],
@@ -205,7 +256,19 @@ def _result_row(job: Dict, res, requests, info: Dict, wall: float) -> Dict:
         "infeasible_events": res.infeasible_events,
         "horizon_s": info.get("horizon", 0.0),
         "wall_s": wall,
+        # engine-measured wall (for a batch: the whole block's wall,
+        # shared by its rows) — ev/s derivable from any row
+        "engine_wall_s": res.wall_s,
+        "events_per_sec": res.events_per_sec,
     })
+    if res.profile is not None:
+        row["profile"] = res.profile
+    if res.timeseries is not None:
+        row["timeseries"] = res.timeseries
+    if res.trace is not None:
+        row["trace_counts"] = res.trace.counts(b)
+        if trace_path:
+            row["trace_path"] = trace_path
     return row
 
 
@@ -216,7 +279,9 @@ def _batch_groups(jobs: List[Dict], batch_seeds: int) -> List[List[int]]:
         key = (_scenario_key(job), job["scenario_label"], job["method"],
                job["method_label"], repr(sorted(job["method_params"].items(),
                                                key=lambda kv: kv[0])),
-               job["epoch_interval"], job["max_events"], job["engine"])
+               job["epoch_interval"], job["max_events"], job["engine"],
+               job.get("trace"), job.get("profile"),
+               job.get("metrics_interval"))
         cells.setdefault(key, []).append(i)
     groups = []
     for idxs in cells.values():
@@ -250,16 +315,16 @@ def run_sweep(spec: SweepSpec, verbose: bool = False,
             r = rows[i]
             trunc = " TRUNCATED" if r.get("truncated") else ""
             batch = f" b={r['batch']}" if r.get("batch") else ""
-            print(f"# [{done}/{len(jobs)}] {r['method']}"
-                  f" @ {r['scenario']} seed={r['seed']}"
-                  f" overall={r['overall']:.4f}"
-                  f" wall={r['wall_s']:.1f}s{batch}{trunc}", flush=True)
+            diag(f"# [{done}/{len(jobs)}] {r['method']}"
+                 f" @ {r['scenario']} seed={r['seed']}"
+                 f" overall={r['overall']:.4f}"
+                 f" wall={r['wall_s']:.1f}s{batch}{trunc}")
 
     def failed(i: int, err: Exception) -> None:
         job = jobs[i]
-        print(f"# JOB FAILED: {job['method_label']}"
-              f" @ {job['scenario_label']} seed={job['seed']}:"
-              f" {type(err).__name__}: {err}", flush=True)
+        diag(f"# JOB FAILED: {job['method_label']}"
+             f" @ {job['scenario_label']} seed={job['seed']}:"
+             f" {type(err).__name__}: {err}")
 
     def batch_group_fallback(idxs: List[int], err: Exception) -> None:
         """A failed group retries job-by-job (single-replica batches), so
@@ -268,9 +333,9 @@ def run_sweep(spec: SweepSpec, verbose: bool = False,
         group-level error is reported first: a B>1-only failure must not
         hide behind a successful fallback."""
         job = jobs[idxs[0]]
-        print(f"# BATCH GROUP FAILED ({len(idxs)} jobs, "
-              f"{job['method_label']} @ {job['scenario_label']}): "
-              f"{type(err).__name__}: {err} — retrying per job", flush=True)
+        diag(f"# BATCH GROUP FAILED ({len(idxs)} jobs, "
+             f"{job['method_label']} @ {job['scenario_label']}): "
+             f"{type(err).__name__}: {err} — retrying per job")
         for i in idxs:
             try:
                 rows[i] = run_batch_jobs([jobs[i]])[0]

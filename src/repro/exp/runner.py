@@ -21,6 +21,7 @@ from typing import Dict, List, Optional
 from repro.exp.provenance import (build_provenance, completed_rows, job_key,
                                   load_prior_report)
 from repro.exp.spec import ExperimentSpec
+from repro.obs import diag
 
 __all__ = ["run_experiment", "expand_experiment", "job_table"]
 
@@ -61,8 +62,8 @@ def run_experiment(spec: ExperimentSpec, *, resume: bool = True,
     pending = [j for j in jobs if job_key(j) not in prior]
     prov["resumed_rows"] = len(jobs) - len(pending)
     if verbose and prior:
-        print(f"# resume: {len(prior)}/{len(jobs)} rows reused from {out} "
-              "(--no-resume recomputes)", flush=True)
+        diag(f"# resume: {len(prior)}/{len(jobs)} rows reused from {out} "
+             "(--no-resume recomputes)")
 
     t0 = time.time()
     new_rows: List[Optional[Dict]] = []

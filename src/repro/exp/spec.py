@@ -88,6 +88,11 @@ class ExperimentSpec:
     batch: int = 1                          # >1: fan seeds into run_batch
     workers: int = 1
     out: Optional[str] = None               # report path (CLI may override)
+    # observability (repro.obs) — excluded from identity_hash, so a traced
+    # rerun of an experiment resumes the untraced report and vice versa
+    trace: bool = False
+    profile: bool = False
+    metrics_interval: float = 0.0           # 0 = no time-series sampling
 
     def __post_init__(self):
         object.__setattr__(self, "methods",
@@ -119,6 +124,9 @@ class ExperimentSpec:
             "batch": self.batch,
             "workers": self.workers,
             "out": self.out,
+            "trace": self.trace,
+            "profile": self.profile,
+            "metrics_interval": self.metrics_interval,
         }
 
     def identity(self) -> Dict:
@@ -145,6 +153,11 @@ class ExperimentSpec:
     def to_sweep_spec(self):
         """The runnable :class:`repro.eval.SweepSpec` view of this spec."""
         from repro.eval.sweep import SweepSpec
+        trace_dir = None
+        if self.trace:
+            base = pathlib.Path(self.out) if self.out else \
+                pathlib.Path("artifacts/sweep_report.json")
+            trace_dir = str(base.parent / f"{base.stem}_traces")
         return SweepSpec(
             methods=self.methods,
             scenarios=self.scenarios,
@@ -157,6 +170,10 @@ class ExperimentSpec:
             scenario_seed=self.scenario_seed,
             engine=self.engine,
             batch_seeds=self.batch,
+            trace=self.trace,
+            profile=self.profile,
+            metrics_interval=self.metrics_interval,
+            trace_dir=trace_dir,
         )
 
     def expand(self) -> List[Dict]:
@@ -207,7 +224,8 @@ class ExperimentSpec:
                    "seeds": list(self.seeds)}
         defaults = {f.name: f.default for f in dataclasses.fields(self)}
         for key in ("n_ai_requests", "rho", "epoch_interval", "max_events",
-                    "scenario_seed", "engine", "batch", "workers", "out"):
+                    "scenario_seed", "engine", "batch", "workers", "out",
+                    "trace", "profile", "metrics_interval"):
             val = getattr(self, key)
             if val != defaults[key]:
                 d[key] = val
@@ -216,6 +234,7 @@ class ExperimentSpec:
     _FILE_KEYS = {"name", "methods", "scenarios", "seeds", "n_ai_requests",
                   "rho", "epoch_interval", "max_events", "scenario_seed",
                   "engine", "batch", "workers", "out",
+                  "trace", "profile", "metrics_interval",
                   "batch_seeds", "requests"}   # accepted aliases
 
     @classmethod
@@ -332,6 +351,8 @@ class ExperimentSpec:
                             "set batch > 1")
         if self.epoch_interval <= 0:
             problems.append("epoch_interval must be > 0")
+        if self.metrics_interval < 0:
+            problems.append("metrics_interval must be >= 0")
         if problems:
             raise SpecError("; ".join(problems))
 

@@ -42,6 +42,7 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+from repro.obs.trace import ALLOC as _TRACE_ALLOC
 from repro.sim.types import (InstanceCategory, InstanceSpec, MigrationAction,
                              NodeSpec, Request, RequestClass)
 
@@ -57,6 +58,12 @@ _DL_PAD0 = 4         # initial padded deadline columns (kept a power of two)
 _CAT_DU = 0          # category codes for vectorized floor dispatch
 _CAT_CUUP = 1
 _CAT_AI = 2
+
+# active-set iterations accumulated over the solves of the CURRENT
+# allocate call (reset by the deadline_allocate_* entry points, read by
+# their trace emission) — a plain module counter; the simulator is
+# single-threaded per run
+_SOLVE_ITERS = 0
 
 
 def _tree_sum(x: np.ndarray) -> np.ndarray:
@@ -93,6 +100,7 @@ def _active_set_rows(w: np.ndarray, floors: np.ndarray,
     desync a row across calls that batch it with different companions —
     the per-row result depends only on the row's real entries.
     """
+    global _SOLVE_ITERS
     P, K = w.shape
     if not floors.any():
         # no floors anywhere (no busy RAN heads): the fixed point is the
@@ -110,7 +118,7 @@ def _active_set_rows(w: np.ndarray, floors: np.ndarray,
     floors_eff = floors * scale[:, None]
 
     pinned = w <= 0.0
-    for _ in range(K):
+    for it in range(K):
         rem = caps - _tree_sum(np.where(pinned, floors_eff, 0.0))
         np.maximum(rem, 0.0, out=rem)
         denom = _tree_sum(np.where(pinned, 0.0, w))
@@ -118,8 +126,11 @@ def _active_set_rows(w: np.ndarray, floors: np.ndarray,
         prop = w * rem[:, None] / denom[:, None]
         grow = (prop < floors_eff) & ~pinned
         if not grow.any():
+            _SOLVE_ITERS += it + 1
             break
         pinned |= grow
+    else:
+        _SOLVE_ITERS += K
     rem = caps - _tree_sum(np.where(pinned, floors_eff, 0.0))
     np.maximum(rem, 0.0, out=rem)
     denom = _tree_sum(np.where(pinned, 0.0, w))
@@ -182,6 +193,11 @@ class ClusterState:
         self.alloc_g = np.zeros(self.S)              # g_{n(s),s}
         self.alloc_c = np.zeros(self.S)              # c_{n(s),s}
         self.infeasible_events = 0                   # Eq. 15 denominator ≤ 0
+        # observability: a repro.obs TraceRecorder (or None) plus this
+        # replica's batch tag, attached per run by the Simulator; the
+        # allocator entry points emit one ALLOC record per solve when set
+        self.trace = None
+        self.trace_b = 0
 
         # --- contiguous per-instance event-core state --------------------- #
         # Ψ (Eq. 13) is derived: tail (jobs behind the head; only changes on
@@ -616,6 +632,7 @@ def _active_set_scalar(w: List[float], floors: List[float],
     is bit-identical to the row the padded vector solve would produce
     (padding contributes exact zeros to every sum and never unpins).
     """
+    global _SOLVE_ITERS
     k = len(w)
     floor_sum = _tree_sum_scalars(floors)
     if floor_sum > cap + 1e-6 and floor_sum > 0.0:
@@ -631,7 +648,7 @@ def _active_set_scalar(w: List[float], floors: List[float],
             [0.0 if pinned[i] else w[i] for i in range(k)]), EPS_ALLOC)
         return rem, denom
 
-    for _ in range(k):
+    for it in range(k):
         rem, denom = sums()
         grew = False
         for i in range(k):
@@ -639,7 +656,10 @@ def _active_set_scalar(w: List[float], floors: List[float],
                 pinned[i] = True
                 grew = True
         if not grew:
+            _SOLVE_ITERS += it + 1
             break
+    else:
+        _SOLVE_ITERS += k
     rem, denom = sums()
     return [floors[i] if pinned[i] else w[i] * rem / denom
             for i in range(k)]
@@ -720,6 +740,8 @@ def deadline_allocate_solo(cluster: ClusterState, t: float,
     bit-identical tree-ordered scalar path instead (the per-event common
     case: one dirty node, a few busy instances).
     """
+    global _SOLVE_ITERS
+    _SOLVE_ITERS = 0
     probs: List[Tuple[int, int]] = []
     node_of: List[int] = []
     ss: List[int] = []
@@ -738,27 +760,30 @@ def deadline_allocate_solo(cluster: ClusterState, t: float,
         return
     if len(ss) <= SCALAR_GATHER_MAX:
         _deadline_allocate_scalar(cluster, t, probs, node_of, ss)
-        return
-    idx = np.asarray(ss, np.int64)
-    cat = cluster._cat_code[idx]
-    if (cat != _CAT_AI).any():
-        nn = np.repeat(node_of, [hi - lo for lo, hi in probs])
-        gcap, ccap = cluster.gpu_capacity[nn], cluster.cpu_capacity[nn]
-        alpha = cluster._alpha_down[idx]
-    else:                       # pure-AI gather: no floors to build
-        gcap = ccap = alpha = None
-    psi_g, psi_c, omega, fg, fc, infeas = _alloc_floor_math(
-        cluster.dl_pad[idx], t,
-        cluster.tail_psi_g[idx] + cluster.head_rem_g[idx],
-        cluster.tail_psi_c[idx] + cluster.head_rem_c[idx],
-        cat, alpha, cluster.delta, gcap, ccap)
-    if infeas is not None:
-        cluster.infeasible_events += int(np.count_nonzero(infeas))
-    _solve_and_scatter(
-        probs, psi_g, psi_c, omega, fg, fc,
-        cluster.gpu_capacity[node_of], cluster.cpu_capacity[node_of],
-        lambda g: cluster.alloc_g.__setitem__(idx, g),
-        lambda c: cluster.alloc_c.__setitem__(idx, c))
+    else:
+        idx = np.asarray(ss, np.int64)
+        cat = cluster._cat_code[idx]
+        if (cat != _CAT_AI).any():
+            nn = np.repeat(node_of, [hi - lo for lo, hi in probs])
+            gcap, ccap = cluster.gpu_capacity[nn], cluster.cpu_capacity[nn]
+            alpha = cluster._alpha_down[idx]
+        else:                   # pure-AI gather: no floors to build
+            gcap = ccap = alpha = None
+        psi_g, psi_c, omega, fg, fc, infeas = _alloc_floor_math(
+            cluster.dl_pad[idx], t,
+            cluster.tail_psi_g[idx] + cluster.head_rem_g[idx],
+            cluster.tail_psi_c[idx] + cluster.head_rem_c[idx],
+            cat, alpha, cluster.delta, gcap, ccap)
+        if infeas is not None:
+            cluster.infeasible_events += int(np.count_nonzero(infeas))
+        _solve_and_scatter(
+            probs, psi_g, psi_c, omega, fg, fc,
+            cluster.gpu_capacity[node_of], cluster.cpu_capacity[node_of],
+            lambda g: cluster.alloc_g.__setitem__(idx, g),
+            lambda c: cluster.alloc_c.__setitem__(idx, c))
+    if cluster.trace is not None:
+        cluster.trace.emit(_TRACE_ALLOC, t, cluster.trace_b, len(ss),
+                           _SOLVE_ITERS, float(len(probs)))
 
 
 def deadline_allocate_block(block: "ClusterBlock", t_vec: np.ndarray,
@@ -772,6 +797,8 @@ def deadline_allocate_block(block: "ClusterBlock", t_vec: np.ndarray,
     expressions, reductions are padding-invariant tree sums, and the
     active-set rows are independent.
     """
+    global _SOLVE_ITERS
+    _SOLVE_ITERS = 0
     clusters = block.clusters
     zb: List[int] = []
     zs: List[int] = []
@@ -823,6 +850,16 @@ def deadline_allocate_block(block: "ClusterBlock", t_vec: np.ndarray,
         cl0.gpu_capacity[prob_cap_n], cl0.cpu_capacity[prob_cap_n],
         lambda g: block.alloc_g.__setitem__((bi, si), g),
         lambda c: block.alloc_c.__setitem__((bi, si), c))
+    if cl0.trace is not None:
+        # one ALLOC record per participating replica: its own head count
+        # and problem count, the (shared) padded solve's iterations
+        heads_per_b = np.bincount(bi, minlength=block.B)
+        probs_per_b = np.bincount([bb[lo] for lo, hi in probs],
+                                  minlength=block.B)
+        for b in np.nonzero(heads_per_b)[0]:
+            cl0.trace.emit(_TRACE_ALLOC, float(t_vec[b]), int(b),
+                           int(heads_per_b[b]), _SOLVE_ITERS,
+                           float(probs_per_b[b]))
 
 
 # --------------------------------------------------------------------------- #

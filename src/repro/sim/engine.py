@@ -43,10 +43,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+from time import perf_counter
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.sim.cluster import (ClusterBlock, ClusterState, Job,
                                deadline_allocate_block)
 from repro.sim.event_core import make_batched_event_core, make_event_core
@@ -58,6 +60,12 @@ INF = float("inf")
 NAN = float("nan")
 
 REALLOC_REFRESH = 0.25   # urgency drift: full re-solve at least 4 Hz
+
+# request-class -> small-int codes for the columnar trace / metrics
+# (matches repro.obs.trace.CLS_*)
+_CLS_CODE = {RequestClass.LARGE_AI: _obs.CLS_LARGE_AI,
+             RequestClass.SMALL_AI: _obs.CLS_SMALL_AI,
+             RequestClass.RAN: _obs.CLS_RAN}
 
 
 class PlacementPolicy(Protocol):
@@ -114,8 +122,25 @@ class SimResult:
     # the run hit max_events with work still pending: the remaining
     # requests never ran, so every aggregate below is a partial view
     truncated: bool = False
+    # run metadata (always populated by the drivers): wall-clock seconds
+    # and backend name, so ev/s is derivable from any report row.  For a
+    # batched run, wall_s is the wall clock of the WHOLE block (shared by
+    # its replicas) — per-replica ev/s is not meaningful in lockstep.
+    wall_s: float = 0.0
+    engine: str = ""
+    # observability payloads (None unless enabled for the run):
+    # ``profile`` — Profiler.report() dict (shared across a batch),
+    # ``timeseries`` — this replica's gauge samples,
+    # ``trace`` — the TraceRecorder (shared across a batch; filter by b)
+    profile: Optional[Dict] = None
+    timeseries: Optional[List[Dict]] = None
+    trace: Optional[object] = None
 
     # ------------------------------------------------------------------ #
+    @property
+    def events_per_sec(self) -> float:
+        return self.n_events / self.wall_s if self.wall_s > 0 else 0.0
+
     def fulfillment(self) -> Dict[str, float]:
         stats: Dict[str, List[int]] = {}
         for r in self.requests:
@@ -132,13 +157,32 @@ class SimResult:
                     if a.category == InstanceCategory.LARGE_AI)
         return large, len(self.migrations)
 
+    def violation_counts(self) -> Dict[str, Tuple[int, int]]:
+        """Per-class ``(n, violations)`` — the integer counterpart of the
+        fulfillment means, 0 (not NaN) for classes absent from the
+        scenario, so scalar summaries reconcile exactly with traced SLO
+        time series (mean ≡ 1 - viol/n whenever n > 0)."""
+        keys = ("overall", "ran", "ai", "large_ai", "small_ai")
+        n = dict.fromkeys(keys, 0)
+        viol = dict.fromkeys(keys, 0)
+        for r in self.requests:
+            ok = r.fulfilled() and r.rid not in self.dropped
+            buckets = ["overall", r.cls.value.lower()]
+            if r.cls.is_ai:
+                buckets.append("ai")
+            for k in buckets:
+                n[k] += 1
+                viol[k] += int(not ok)
+        return {k: (n[k], viol[k]) for k in keys}
+
     def summary(self) -> Dict[str, float]:
         """Flat metrics row.  Request classes absent from the scenario are
         NaN (not 0.0) so fleet aggregation can skip them instead of
-        averaging phantom zeros into the class means."""
+        averaging phantom zeros into the class means; the per-class
+        ``n_*`` / ``viol_*`` counts are plain ints (0 when absent)."""
         f = self.fulfillment()
         large, tot = self.migration_counts()
-        return {
+        out = {
             "overall": f.get("overall", NAN),
             "ran": f.get("RAN", NAN),
             "ai": f.get("AI", NAN),
@@ -148,6 +192,10 @@ class SimResult:
             "mig_total": tot,
             "truncated": self.truncated,
         }
+        for k, (cnt, bad) in self.violation_counts().items():
+            out[f"n_{k}"] = cnt
+            out[f"viol_{k}"] = bad
+        return out
 
 
 # annotate MigrationAction with its category for counting
@@ -170,7 +218,8 @@ class _Replica:
                  "service_sids", "ran_packet", "delta", "heap", "seq",
                  "dropped", "migrations", "epochs", "win", "arrivals_win",
                  "current_rec", "t", "n_events", "truncated", "dirty",
-                 "last_full", "epoch_hook", "done", "pending_epoch")
+                 "last_full", "epoch_hook", "done", "pending_epoch",
+                 "trace", "metrics", "b")
 
     def __init__(self, sc: Dict, epoch_interval: float, drop_expired: bool,
                  requests: List[Request], placement: PlacementPolicy,
@@ -230,6 +279,12 @@ class _Replica:
         self.n_events = 0
         self.truncated = False
         self.done = False
+        # observability hooks (attached by the drivers; None = off, and
+        # every instrumentation site below is an ``is not None`` guard
+        # that only READS simulation state — the bit-identity contract)
+        self.trace = None
+        self.metrics = None
+        self.b = 0
         # epoch boundary reached this event: (k, snapshot) awaiting the
         # placement decision (dispatched by the driver, possibly batched)
         self.pending_epoch: Optional[Tuple[int, EpochSnapshot]] = None
@@ -249,14 +304,23 @@ class _Replica:
         w = self.win[req.cls]
         w[0] += int(ok)
         w[1] += 1
+        if self.metrics is not None:
+            self.metrics.record_outcome(self.b, _CLS_CODE[req.cls], ok)
 
     def finish_request(self, req: Request, t: float) -> None:
         req.finish = t
-        self.record_outcome(req, req.fulfilled())
+        ok = req.fulfilled()
+        self.record_outcome(req, ok)
+        if self.trace is not None:
+            self.trace.emit(_obs.COMPLETION, t, self.b, req.rid,
+                            _CLS_CODE[req.cls], float(ok))
 
     def drop_request(self, req: Request) -> None:
         self.dropped.add(req.rid)
         self.record_outcome(req, False)
+        if self.trace is not None:
+            self.trace.emit(_obs.DROP, self.t, self.b, req.rid,
+                            _CLS_CODE[req.cls])
 
     def cleanup_drops(self) -> None:
         if not self.drop_expired:
@@ -326,6 +390,18 @@ class _Replica:
                 for c in (RequestClass.LARGE_AI, RequestClass.SMALL_AI,
                           RequestClass.RAN))
             rec.counts = counts
+            if self.trace is not None:
+                total = sum(counts)
+                ok = sum(w[0] for w in win.values())
+                self.trace.close_decision(self.b, rec.epoch, {
+                    "realized_fulfill": (ok / total) if total else 1.0,
+                    "realized": {"large_ai": rec.fulfill[0],
+                                 "small_ai": rec.fulfill[1],
+                                 "ran": rec.fulfill[2]},
+                    "window_counts": {"large_ai": counts[0],
+                                      "small_ai": counts[1],
+                                      "ran": counts[2]},
+                })
         for w in win.values():
             w[0] = w[1] = 0
         self.arrivals_win.clear()
@@ -344,6 +420,9 @@ class _Replica:
                 abs_deadline=req.arrival + req.deadline))
             self.arrivals_win["ran"] = self.arrivals_win.get("ran", 0) + 1
             self.mark(sid)
+            if self.trace is not None:
+                self.trace.emit(_obs.ARRIVAL, t, self.b, req.rid,
+                                _CLS_CODE[req.cls])
         elif kind == "cuup":
             req = payload
             sid = cluster.cuup_of(req.cell)
@@ -365,6 +444,9 @@ class _Replica:
             self.push(t + hops * self.delta, "ai_enqueue", (req, sid))
             self.arrivals_win[req.service] = \
                 self.arrivals_win.get(req.service, 0) + 1
+            if self.trace is not None:
+                self.trace.emit(_obs.ARRIVAL, t, self.b, req.rid,
+                                _CLS_CODE[req.cls])
         elif kind == "ai_enqueue":
             req, sid = payload
             req.stage_entered = t
@@ -406,6 +488,7 @@ class _Replica:
         """
         cluster, t, sc = self.cluster, self.t, self.sc
         shortlist = getattr(self.placement, "last_shortlist", [])
+        decided = action                       # pre-feasibility-gate choice
         if action is not None:
             ok = (cluster.migration_feasible(action)
                   and cluster.available(action.sid, t))
@@ -424,8 +507,28 @@ class _Replica:
                 cluster.reconfig_until[action.sid] = until
                 self.migrations.append((t, committed))
                 self.push(until, "mig_done", action.sid)
+                if self.trace is not None:
+                    self.trace.emit(_obs.MIGRATION, t, self.b, action.sid,
+                                    action.dst, float(action.src))
             else:
                 action = None
+        if self.trace is not None:
+            self.trace.emit(_obs.EPOCH, t, self.b, k, len(shortlist),
+                            float(action is not None))
+            scores = getattr(self.placement, "last_scores", None)
+            self.trace.decision(self.b, k, {
+                "t": t,
+                "action": (None if decided is None else
+                           {"sid": decided.sid, "src": decided.src,
+                            "dst": decided.dst}),
+                "committed": action is not None,
+                "shortlist": [{"sid": a.sid, "src": a.src, "dst": a.dst}
+                              for a in shortlist],
+                "scores": (None if scores is None else
+                           [float(x) for x in scores]),
+                "predicted_margin": getattr(self.placement, "last_margin",
+                                            None),
+            })
         self.current_rec = EpochRecord(
             epoch=k, t=t, snapshot=snap, action=action,
             shortlist=list(shortlist))
@@ -449,12 +552,21 @@ class _Replica:
             return nodes
         return ()
 
-    def result(self) -> SimResult:
+    def result(self, wall_s: float = 0.0, engine: str = "",
+               observer=None) -> SimResult:
         self.close_epoch_window(self.current_rec)
-        return SimResult(requests=self.requests, dropped=self.dropped,
-                         migrations=self.migrations, epochs=self.epochs,
-                         infeasible_events=self.cluster.infeasible_events,
-                         n_events=self.n_events, truncated=self.truncated)
+        res = SimResult(requests=self.requests, dropped=self.dropped,
+                        migrations=self.migrations, epochs=self.epochs,
+                        infeasible_events=self.cluster.infeasible_events,
+                        n_events=self.n_events, truncated=self.truncated,
+                        wall_s=wall_s, engine=engine)
+        if observer is not None:
+            if observer.profiler is not None:
+                res.profile = observer.profiler.report()
+            if observer.metrics is not None:
+                res.timeseries = observer.metrics.series(self.b)
+            res.trace = observer.trace
+        return res
 
 
 def dispatch_epoch_decisions(reps: Sequence[_Replica]) -> None:
@@ -511,12 +623,16 @@ def _realize_policies(spec, B: int, what: str) -> List:
 class Simulator:
     def __init__(self, scenario: Dict, epoch_interval: float = 5.0,
                  drop_expired: bool = False, seed: int = 0,
-                 engine: str = "numpy"):
+                 engine: str = "numpy", obs=None):
         self.scenario = scenario
         self.epoch_interval = epoch_interval
         self.drop_expired = drop_expired
         self.seed = seed
         self.engine = engine
+        # default observability for this simulator's runs: an ObsConfig /
+        # RunObserver, or None (off — the hot path is then bit-identical
+        # to the uninstrumented engine).  run()/run_batch() can override.
+        self.obs = obs
         # fail fast on unknown names; "pallas" is batch-only, so it
         # validates against the batched registry and run() rejects it
         if engine == "pallas":
@@ -530,11 +646,14 @@ class Simulator:
             allocation: AllocationPolicy,
             rr_dispatch: bool = False,
             max_events: int = 5_000_000,
-            epoch_hook: Optional[Callable] = None) -> SimResult:
+            epoch_hook: Optional[Callable] = None,
+            obs=None) -> SimResult:
         if self.engine == "pallas":
             raise ValueError(
                 "engine='pallas' is the batched [B, S] kernel backend; "
                 "use run_batch, or engine='numpy' for single traces")
+        observer = _obs.make_observer(obs if obs is not None else self.obs,
+                                      B=1, engine=self.engine)
         rep = _Replica(self.scenario, self.epoch_interval, self.drop_expired,
                        requests, placement, allocation, rr_dispatch,
                        epoch_hook)
@@ -544,40 +663,81 @@ class Simulator:
         core = make_event_core(self.engine)
         cluster = rep.cluster
         heap = rep.heap
+        prof = metrics = None
+        if observer is not None:
+            rep.trace = observer.trace
+            rep.metrics = metrics = observer.metrics
+            cluster.trace = observer.trace
+            prof = observer.profiler
+            core.profiler = prof
+            if prof is not None:
+                _obs.push_profiler(prof)
+        wall_t0 = perf_counter()
 
         # single loop over timed events AND queue completions: it must keep
         # draining after the heap empties (a stage completion can push the
         # next stage — e.g. DU -> CU-UP — or work may resume after an
         # outage/reconfiguration ends)
-        while True:
-            t_comp, sid_comp = core.next_completion(cluster, rep.t)
-            t_ev = heap[0][0] if heap else INF
-            t_next = min(t_comp, t_ev)
-            if not math.isfinite(t_next):
-                break
-            if rep.n_events >= max_events:
-                rep.truncated = True
-                break
-            core.advance(cluster, rep.t, t_next - rep.t)
-            rep.t = t_next
-            rep.n_events += 1
+        try:
+            while True:
+                if prof is not None:
+                    _t0 = perf_counter()
+                t_comp, sid_comp = core.next_completion(cluster, rep.t)
+                t_ev = heap[0][0] if heap else INF
+                t_next = min(t_comp, t_ev)
+                if not math.isfinite(t_next):
+                    break
+                if rep.n_events >= max_events:
+                    rep.truncated = True
+                    break
+                core.advance(cluster, rep.t, t_next - rep.t)
+                rep.t = t_next
+                rep.n_events += 1
+                if prof is not None:
+                    prof.add("engine.step", perf_counter() - _t0)
+                    _t0 = perf_counter()
 
-            if t_comp <= t_ev:
-                rep.mark(sid_comp)
-                rep.handle_completion(sid_comp)
-            else:
-                rep.handle_timed()
-                if rep.pending_epoch is not None:
+                if t_comp <= t_ev:
+                    rep.mark(sid_comp)
+                    rep.handle_completion(sid_comp)
+                    pending = False
+                else:
+                    rep.handle_timed()
+                    pending = rep.pending_epoch is not None
+                if prof is not None:
+                    prof.add("engine.events", perf_counter() - _t0)
+                if pending:
+                    if prof is not None:
+                        _t0 = perf_counter()
                     dispatch_epoch_decisions((rep,))
+                    if prof is not None:
+                        prof.add("epoch.decide", perf_counter() - _t0)
 
-            rep.cleanup_drops()
-            nodes = rep.realloc_nodes()
-            if nodes is None:
-                allocation.allocate(cluster, rep.t)
-            elif nodes:
-                allocation.allocate(cluster, rep.t, nodes)
+                rep.cleanup_drops()
+                nodes = rep.realloc_nodes()
+                if nodes is None or nodes:
+                    if prof is not None:
+                        _t0 = perf_counter()
+                    if nodes is None:
+                        allocation.allocate(cluster, rep.t)
+                    else:
+                        allocation.allocate(cluster, rep.t, nodes)
+                    if prof is not None:
+                        prof.add("allocator.solve", perf_counter() - _t0)
+                if metrics is not None:
+                    metrics.maybe_sample(0, rep.t, cluster)
+        finally:
+            if prof is not None:
+                _obs.pop_profiler(prof)
+            core.profiler = None
 
-        return rep.result()
+        wall = perf_counter() - wall_t0
+        if prof is not None:
+            prof.add("run", wall)
+        if metrics is not None:
+            metrics.finalize(0, rep.t, cluster)
+        return rep.result(wall_s=wall, engine=self.engine,
+                          observer=observer)
 
     # ------------------------------------------------------------------ #
     def run_batch(self, workloads: Sequence[List[Request]],
@@ -586,7 +746,8 @@ class Simulator:
                   rr_dispatch: bool = False,
                   max_events: int = 5_000_000,
                   epoch_hooks: Optional[Sequence[Optional[Callable]]] = None,
-                  engine: Optional[str] = None) -> List[SimResult]:
+                  engine: Optional[str] = None,
+                  obs=None) -> List[SimResult]:
         """Advance B independent replicas of this scenario in lockstep.
 
         ``workloads[b]`` / ``placements[b]`` / ``allocations[b]`` belong to
@@ -617,7 +778,23 @@ class Simulator:
                          allocations[b], rr_dispatch, hooks[b])
                 for b in range(B)]
         block = ClusterBlock([rep.cluster for rep in reps])
-        core = make_batched_event_core(engine or self.engine)
+        engine_name = engine or self.engine
+        core = make_batched_event_core(engine_name)
+        observer = _obs.make_observer(obs if obs is not None else self.obs,
+                                      B=B, engine=engine_name)
+        prof = metrics = None
+        if observer is not None:
+            prof = observer.profiler
+            metrics = observer.metrics
+            core.profiler = prof
+            for b, rep in enumerate(reps):
+                rep.trace = observer.trace
+                rep.metrics = metrics
+                rep.b = b
+                rep.cluster.trace = observer.trace
+                rep.cluster.trace_b = b
+            if prof is not None:
+                _obs.push_profiler(prof)
         # the cross-replica allocation gather is exact only for the
         # paper's allocator; other policies re-solve per replica (the
         # same code path a solo run uses)
@@ -644,55 +821,92 @@ class Simulator:
             elif fast_alloc:
                 node_lists[b] = nodes          # None = full re-solve
                 state["any_alloc"] = True
-            elif nodes is None:
-                rep.allocation.allocate(rep.cluster, rep.t)
             else:
-                rep.allocation.allocate(rep.cluster, rep.t, nodes)
+                if prof is not None:
+                    _t0 = perf_counter()
+                if nodes is None:
+                    rep.allocation.allocate(rep.cluster, rep.t)
+                else:
+                    rep.allocation.allocate(rep.cluster, rep.t, nodes)
+                if prof is not None:
+                    prof.add("allocator.solve", perf_counter() - _t0)
             t_ev[b] = rep.heap[0][0] if rep.heap else INF
 
-        while n_live:
-            for b, rep in enumerate(reps):
-                can_step[b] = not rep.done and rep.n_events < max_events
-            t_comp, sids = core.step(block, t_vec, t_ev, can_step)
-            t_next = np.minimum(t_comp, t_ev)
-            finite = np.isfinite(t_next)
-            np.copyto(t_vec, t_next, where=can_step & finite)
+        wall_t0 = perf_counter()
+        try:
+            while n_live:
+                if prof is not None:
+                    _ts = perf_counter()
+                for b, rep in enumerate(reps):
+                    can_step[b] = not rep.done and rep.n_events < max_events
+                t_comp, sids = core.step(block, t_vec, t_ev, can_step)
+                t_next = np.minimum(t_comp, t_ev)
+                finite = np.isfinite(t_next)
+                np.copyto(t_vec, t_next, where=can_step & finite)
+                if prof is not None:
+                    prof.add("engine.step", perf_counter() - _ts)
+                    _ts = perf_counter()
 
-            state["any_alloc"] = False
-            at_epoch: List[int] = []
-            for b, rep in enumerate(reps):
-                node_lists[b] = ()
-                if rep.done:
-                    continue
-                if not finite[b]:
-                    rep.done = True            # drained: clean end
-                    n_live -= 1
-                    continue
-                if not can_step[b]:
-                    rep.truncated = True       # finite work left at budget
-                    rep.done = True
-                    n_live -= 1
-                    continue
-                rep.t = float(t_next[b])
-                rep.n_events += 1
-                if t_comp[b] <= t_ev[b]:
-                    sid = int(sids[b])
-                    rep.mark(sid)
-                    rep.handle_completion(sid)
-                else:
-                    rep.handle_timed()
-                    if rep.pending_epoch is not None:
-                        at_epoch.append(b)     # decide after the sweep
+                state["any_alloc"] = False
+                at_epoch: List[int] = []
+                for b, rep in enumerate(reps):
+                    node_lists[b] = ()
+                    if rep.done:
                         continue
-                settle(b, rep)
+                    if not finite[b]:
+                        rep.done = True        # drained: clean end
+                        n_live -= 1
+                        continue
+                    if not can_step[b]:
+                        rep.truncated = True   # finite work left at budget
+                        rep.done = True
+                        n_live -= 1
+                        continue
+                    rep.t = float(t_next[b])
+                    rep.n_events += 1
+                    if t_comp[b] <= t_ev[b]:
+                        sid = int(sids[b])
+                        rep.mark(sid)
+                        rep.handle_completion(sid)
+                    else:
+                        rep.handle_timed()
+                        if rep.pending_epoch is not None:
+                            at_epoch.append(b)  # decide after the sweep
+                            continue
+                    settle(b, rep)
+                if prof is not None:
+                    prof.add("engine.events", perf_counter() - _ts)
 
-            if at_epoch:
-                # one batched decide for every replica at an epoch
-                # boundary this tick, then their deferred settle
-                dispatch_epoch_decisions([reps[b] for b in at_epoch])
-                for b in at_epoch:
-                    settle(b, reps[b])
-            if state["any_alloc"]:
-                deadline_allocate_block(block, t_vec, node_lists)
+                if at_epoch:
+                    # one batched decide for every replica at an epoch
+                    # boundary this tick, then their deferred settle
+                    if prof is not None:
+                        _ts = perf_counter()
+                    dispatch_epoch_decisions([reps[b] for b in at_epoch])
+                    for b in at_epoch:
+                        settle(b, reps[b])
+                    if prof is not None:
+                        prof.add("epoch.decide", perf_counter() - _ts)
+                if state["any_alloc"]:
+                    if prof is not None:
+                        _ts = perf_counter()
+                    deadline_allocate_block(block, t_vec, node_lists)
+                    if prof is not None:
+                        prof.add("allocator.solve", perf_counter() - _ts)
+                if metrics is not None:
+                    for b, rep in enumerate(reps):
+                        if not rep.done:
+                            metrics.maybe_sample(b, rep.t, rep.cluster)
+        finally:
+            if prof is not None:
+                _obs.pop_profiler(prof)
+            core.profiler = None
 
-        return [rep.result() for rep in reps]
+        wall = perf_counter() - wall_t0
+        if prof is not None:
+            prof.add("run", wall)
+        if metrics is not None:
+            for b, rep in enumerate(reps):
+                metrics.finalize(b, rep.t, rep.cluster)
+        return [rep.result(wall_s=wall, engine=engine_name,
+                           observer=observer) for rep in reps]

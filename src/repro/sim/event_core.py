@@ -38,6 +38,7 @@ per tick), and ``pallas`` (the fused step as a TPU kernel,
 """
 from __future__ import annotations
 
+from time import perf_counter
 from typing import Optional, Tuple
 
 import numpy as np
@@ -46,11 +47,18 @@ from repro.sim.cluster import ClusterState
 
 INF = float("inf")
 
+# Every core exposes ``profiler`` (a repro.obs Profiler or None, attached
+# by the Simulator per run).  The numpy/scalar cores' work is already
+# timed by the driver's "engine.step" phase; the jax/pallas cores use it
+# to split the step into core.h2d / core.kernel / core.d2h — the
+# host↔device transfer accounting ROADMAP item 1 asks for.
+
 
 class ScalarEventCore:
     """Reference implementation: explicit per-instance Python loops."""
 
     name = "scalar"
+    profiler = None
 
     def next_completion(self, cluster: ClusterState,
                         t: float) -> Tuple[float, int]:
@@ -117,6 +125,7 @@ class NumpyEventCore:
     residuals); a standalone ``advance`` at a fresh ``t`` re-prepares."""
 
     name = "numpy"
+    profiler = None
 
     def __init__(self) -> None:
         self._S = -1
@@ -221,22 +230,50 @@ class JaxEventCore:
     """
 
     name = "jax"
+    profiler = None
 
     def __init__(self) -> None:
-        from jax.experimental import enable_x64       # lazy: needs jax
+        import jax                                    # lazy: needs jax
+        from jax.experimental import enable_x64
         from repro.kernels import event_core as kec
+        self._jax = jax
         self._kernel = kec
         self._x64 = enable_x64
 
+    def _put(self, *arrays):
+        """Explicit host→device staging, timed as ``core.h2d`` (when
+        profiling is off the kernel call transfers implicitly and the
+        split is not observable)."""
+        prof = self.profiler
+        if prof is None:
+            return arrays
+        t0 = perf_counter()
+        out = tuple(self._jax.device_put(a) for a in arrays)
+        for o in out:
+            o.block_until_ready()
+        prof.add("core.h2d", perf_counter() - t0)
+        return out
+
     def next_completion(self, cluster: ClusterState,
                         t: float) -> Tuple[float, int]:
+        prof = self.profiler
         avail = cluster.head_mask & (cluster.reconfig_until <= t)
         with self._x64():
-            best, sid = self._kernel.next_completion_jax(
+            rg, rc, g, c, av = self._put(
                 cluster.head_rem_g, cluster.head_rem_c,
-                cluster.alloc_g, cluster.alloc_c, avail, t)
+                cluster.alloc_g, cluster.alloc_c, avail)
+            if prof is not None:
+                t0 = perf_counter()
+            best, sid = self._kernel.next_completion_jax(rg, rc, g, c,
+                                                         av, t)
+            if prof is not None:
+                best.block_until_ready()
+                prof.add("core.kernel", perf_counter() - t0)
+                t0 = perf_counter()
             best = float(best)
             sid = int(sid)
+            if prof is not None:
+                prof.add("core.d2h", perf_counter() - t0)
         if not np.isfinite(best):
             return INF, -1
         return best, sid
@@ -244,14 +281,25 @@ class JaxEventCore:
     def advance(self, cluster: ClusterState, t: float, dt: float) -> None:
         if dt <= 0.0:
             return
+        prof = self.profiler
         act = cluster.head_mask & (cluster.reconfig_until <= t)
         with self._x64():
-            rg, rc, started = self._kernel.advance_jax(
+            a_rg, a_rc, g, c, av = self._put(
                 cluster.head_rem_g, cluster.head_rem_c,
-                cluster.alloc_g, cluster.alloc_c, act, dt)
+                cluster.alloc_g, cluster.alloc_c, act)
+            if prof is not None:
+                t0 = perf_counter()
+            rg, rc, started = self._kernel.advance_jax(a_rg, a_rc, g, c,
+                                                       av, dt)
+            if prof is not None:
+                rg.block_until_ready()
+                prof.add("core.kernel", perf_counter() - t0)
+                t0 = perf_counter()
             cluster.head_rem_g[:] = rg
             cluster.head_rem_c[:] = rc
             cluster.head_started |= np.asarray(started)
+            if prof is not None:
+                prof.add("core.d2h", perf_counter() - t0)
 
 
 ENGINES = ("numpy", "scalar", "jax")
@@ -289,6 +337,7 @@ class NumpyBatchedEventCore:
     """
 
     name = "numpy"
+    profiler = None
 
     def __init__(self) -> None:
         self._shape = None
@@ -379,6 +428,7 @@ class ScalarBatchedEventCore:
     """Reference batched core: the scalar solo pair per replica row."""
 
     name = "scalar"
+    profiler = None
 
     def __init__(self) -> None:
         self._core = ScalarEventCore()
@@ -405,11 +455,14 @@ class JaxBatchedEventCore:
     times may differ by ulps (XLA multiply-add fusion)."""
 
     name = "jax"
+    profiler = None
     _interpret = None            # PallasBatchedEventCore overrides
 
     def __init__(self) -> None:
-        from jax.experimental import enable_x64       # lazy: needs jax
+        import jax                                    # lazy: needs jax
+        from jax.experimental import enable_x64
         from repro.kernels import event_core as kec
+        self._jax = jax
         self._kernel = kec
         self._x64 = enable_x64
 
@@ -418,15 +471,35 @@ class JaxBatchedEventCore:
                                            t_vec, t_ev, can)
 
     def step(self, block, t_vec, t_ev, can):
+        prof = self.profiler
         avail = block.head_mask & (block.reconfig_until <= t_vec[:, None])
         with self._x64():
-            rg, rc, started, t_comp, sid = self._call(
-                block.head_rem_g, block.head_rem_c,
-                block.alloc_g, block.alloc_c, avail, t_vec, t_ev, can)
+            args = (block.head_rem_g, block.head_rem_c,
+                    block.alloc_g, block.alloc_c, avail, t_vec, t_ev, can)
+            if prof is not None:
+                # explicit staging splits the tick into h2d / kernel / d2h
+                # — the per-phase numbers ROADMAP item 1 needs to pin the
+                # host↔device round-trip cost of this backend
+                t0 = perf_counter()
+                args = tuple(self._jax.device_put(a) for a in args)
+                for a in args:
+                    a.block_until_ready()
+                prof.add("core.h2d", perf_counter() - t0)
+                t0 = perf_counter()
+            out = self._call(*args)
+            if prof is not None:
+                for o in out:
+                    o.block_until_ready()
+                prof.add("core.kernel", perf_counter() - t0)
+                t0 = perf_counter()
+            rg, rc, started, t_comp, sid = out
             block.head_rem_g[...] = np.asarray(rg)
             block.head_rem_c[...] = np.asarray(rc)
             block.head_started |= np.asarray(started)
-            return np.asarray(t_comp), np.asarray(sid, np.int64)
+            ret = np.asarray(t_comp), np.asarray(sid, np.int64)
+            if prof is not None:
+                prof.add("core.d2h", perf_counter() - t0)
+            return ret
 
 
 class PallasBatchedEventCore(JaxBatchedEventCore):

@@ -22,6 +22,7 @@ from repro.data.pipeline import DataPipeline
 from repro.distributed import checkpoint as ckpt
 from repro.distributed import compression as comp
 from repro.distributed.failure import FailureInjector, StragglerMonitor
+from repro.obs import diag
 from repro.distributed.sharding import (ShardingRules, batch_sharding,
                                         params_shardings)
 from repro.models.api import Model
@@ -99,7 +100,7 @@ def train(model: Model, pipeline: DataPipeline, cfg: TrainConfig, *,
             pipeline.restore(extra.get("pipeline"))
             start_step = s
             if verbose:
-                print(f"[train] restored checkpoint at step {s}")
+                diag(f"[train] restored checkpoint at step {s}")
 
     def save(step: int) -> None:
         if not cfg.checkpoint_dir:
@@ -128,8 +129,8 @@ def train(model: Model, pipeline: DataPipeline, cfg: TrainConfig, *,
             if verbose and (step % cfg.log_every == 0):
                 flag = " STRAGGLER" if monitor.flagged and \
                     monitor.flagged[-1] == step else ""
-                print(f"[train] step {step:5d} loss {loss:.4f} "
-                      f"({dt*1e3:.0f} ms){flag}")
+                diag(f"[train] step {step:5d} loss {loss:.4f} "
+                     f"({dt*1e3:.0f} ms){flag}")
             step += 1
             if step % cfg.checkpoint_every == 0 or step == cfg.steps:
                 save(step)
@@ -138,7 +139,7 @@ def train(model: Model, pipeline: DataPipeline, cfg: TrainConfig, *,
                 raise
             history["restarts"].append(step)
             if verbose:
-                print(f"[train] step {step} failed ({e}); restoring")
+                diag(f"[train] step {step} failed ({e}); restoring")
             template = {"params": params, "opt_state": opt}
             state, s, extra = ckpt.restore_checkpoint(cfg.checkpoint_dir,
                                                       template)

@@ -1,0 +1,331 @@
+"""repro.obs: the observability layer must never perturb the simulation.
+
+Three contracts pinned here:
+
+  * **invariance** — running with tracing + profiling + metrics enabled is
+    bit-for-bit identical to running with observability off, across
+    scenario families, solo and batched drivers, and engines (the hooks
+    are ``is None`` checks that only *read* sim state);
+  * **reconciliation** — trace counters match ``SimResult`` exactly
+    (arrivals = requests, completions = requests − drops, drops,
+    migrations, epochs), per replica in a batch; the final metrics sample
+    reproduces ``summary()`` violation counts;
+  * **hygiene** — exports are valid (Chrome trace JSON, monotone per
+    replica), the obs fields stay out of the experiment identity hash so
+    traced reruns resume untraced reports, and no library module under
+    ``src/repro`` calls bare ``print()`` (CLIs with a ``__main__`` guard
+    excepted) — diagnostics go through ``repro.obs.diag``.
+"""
+import ast
+import json
+import math
+import pathlib
+
+import pytest
+
+from repro.eval import make_method
+from repro.obs import KIND_NAMES, ObsConfig, TraceRecorder, load_jsonl
+from repro.sim import Simulator, make_scenario, workload_for
+
+FAMILIES = ("paper", "flash-crowd", "node-outage")
+OBS_ON = ObsConfig(trace=True, profile=True, metrics_interval=5.0)
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def _fingerprint(res):
+    summary = {k: None if isinstance(v, float) and math.isnan(v) else v
+               for k, v in res.summary().items()}
+    return (summary, res.n_events, res.infeasible_events,
+            sorted(res.dropped),
+            [(r.rid, r.finish, r.target_sid) for r in res.requests],
+            [(t, a.sid, a.src, a.dst) for t, a in res.migrations])
+
+
+def _solo(family, engine="numpy", obs=None, method="haf", n=100):
+    sc = make_scenario(family, seed=0)
+    reqs, _ = workload_for(sc, seed=1, n_ai_requests=n)
+    placement, allocation, rr = make_method(method)
+    sim = Simulator(sc, engine=engine, drop_expired=True)
+    return sim.run(reqs, placement, allocation, rr_dispatch=rr, obs=obs)
+
+
+def _batched(family, engine="numpy", obs=None, method="haf", n=100, B=3):
+    sc = make_scenario(family, seed=0)
+    workloads = [workload_for(sc, seed=1 + s, n_ai_requests=n)[0]
+                 for s in range(B)]
+    rr = make_method(method)[2]
+    sim = Simulator(sc, drop_expired=True)
+    return sim.run_batch(workloads,
+                         lambda b: make_method(method)[0],
+                         lambda b: make_method(method)[1],
+                         rr_dispatch=rr, engine=engine, obs=obs)
+
+
+# --------------------------------------------------------------------------- #
+# invariance: observability on == observability off, bit for bit
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ("numpy", "jax"))
+@pytest.mark.parametrize("family", FAMILIES)
+def test_obs_invariant_solo(family, engine):
+    if engine == "jax":
+        pytest.importorskip("jax")
+    off = _solo(family, engine)
+    on = _solo(family, engine, obs=OBS_ON)
+    assert _fingerprint(off) == _fingerprint(on)
+    assert on.trace is not None and on.profile is not None \
+        and on.timeseries
+
+
+@pytest.mark.parametrize("engine", ("numpy", "jax"))
+@pytest.mark.parametrize("family", FAMILIES)
+def test_obs_invariant_batched(family, engine):
+    if engine == "jax":
+        pytest.importorskip("jax")
+    off = _batched(family, engine)
+    on = _batched(family, engine, obs=OBS_ON)
+    assert [_fingerprint(r) for r in off] == [_fingerprint(r) for r in on]
+
+
+def test_obs_disabled_config_yields_no_observer():
+    from repro.obs import make_observer
+    assert make_observer(None) is None
+    assert make_observer(ObsConfig()) is None
+    res = _solo("paper", obs=ObsConfig())
+    assert res.trace is None and res.profile is None \
+        and res.timeseries is None
+
+
+# --------------------------------------------------------------------------- #
+# reconciliation: trace counters == SimResult counters, exactly
+# --------------------------------------------------------------------------- #
+def _assert_counts_match(res, counts):
+    assert counts["arrival"] == len(res.requests)
+    assert counts["completion"] == len(res.requests) - len(res.dropped)
+    assert counts["drop"] == len(res.dropped)
+    assert counts["migration"] == len(res.migrations)
+    assert counts["epoch"] == counts["decision"]
+
+
+def test_trace_reconciles_solo_with_migrations():
+    res = _solo("paper", obs=OBS_ON, n=150)
+    assert res.migrations, "paper+haf should migrate; workload too small"
+    _assert_counts_match(res, res.trace.counts(0))
+
+
+def test_trace_reconciles_solo_with_drops():
+    res = _solo("flash-crowd", obs=OBS_ON, n=300)
+    assert res.dropped, "flash-crowd should drop; workload too small"
+    _assert_counts_match(res, res.trace.counts(0))
+
+
+def test_trace_reconciles_batched_per_replica():
+    results = _batched("flash-crowd", obs=OBS_ON, n=250, B=3)
+    trace = results[0].trace
+    assert trace is results[1].trace      # one recorder for the block
+    for b, res in enumerate(results):
+        _assert_counts_match(res, trace.counts(b))
+    # the block totals are the per-replica sums
+    total = trace.counts()
+    for kind in ("arrival", "completion", "drop", "migration"):
+        assert total[kind] == sum(trace.counts(b)[kind]
+                                  for b in range(len(results)))
+
+
+def test_metrics_final_sample_matches_summary():
+    res = _solo("flash-crowd", obs=OBS_ON, n=250)
+    last = res.timeseries[-1]
+    vc = res.violation_counts()
+    for cls in ("large_ai", "small_ai", "ran"):
+        n, viol = vc[cls]
+        assert last["n"][cls] == n
+        assert last["viol"][cls] == viol
+    assert sum(last["n"].values()) == len(res.requests)
+
+
+def test_decision_ledger_predicted_and_realized():
+    res = _solo("paper", obs=OBS_ON, n=150)
+    decisions = res.trace.decisions
+    assert decisions and len(decisions) == res.trace.counts(0)["decision"]
+    committed = [d for d in decisions if d["committed"]]
+    assert len(committed) == len(res.migrations)
+    # every closed epoch window backfills its realized fulfillment
+    closed = [d for d in decisions if d.get("realized_fulfill") is not None]
+    assert closed, "no decision window was closed with realized outcomes"
+    for d in decisions:
+        assert "shortlist" in d and "predicted_margin" in d
+
+
+# --------------------------------------------------------------------------- #
+# exports: JSONL + Chrome trace
+# --------------------------------------------------------------------------- #
+def test_jsonl_roundtrip(tmp_path):
+    res = _batched("paper", obs=OBS_ON, n=120, B=2)
+    path = tmp_path / "trace.jsonl"
+    res[0].trace.to_jsonl(path)
+    loaded = load_jsonl(path)
+    assert loaded["header"]["counts"] == res[0].trace.counts()
+    by_kind = {}
+    for ev in loaded["events"]:
+        by_kind[ev["kind"]] = by_kind.get(ev["kind"], 0) + 1
+    for kind in KIND_NAMES:
+        assert by_kind.get(kind, 0) == res[0].trace.counts()[kind]
+
+
+def test_chrome_export_valid_and_monotone(tmp_path):
+    results = _batched("paper", obs=OBS_ON, n=120, B=3)
+    path = tmp_path / "trace.chrome.json"
+    results[0].trace.to_chrome(path)
+    doc = json.loads(path.read_text())    # strict JSON or this raises
+    events = doc["traceEvents"]
+    assert events
+    last_ts = {}
+    for ev in events:
+        assert ev["ph"] == "i" and isinstance(ev["ts"], (int, float))
+        pid = ev["pid"]
+        assert ev["ts"] >= last_ts.get(pid, -math.inf)
+        last_ts[pid] = ev["ts"]
+    assert set(last_ts) == {0, 1, 2}      # one pid per replica
+
+
+def test_ring_buffer_wrap_keeps_exact_counts():
+    rec = TraceRecorder(capacity=8)
+    for i in range(100):
+        rec.emit(0, float(i), 0, a=i)
+    assert rec.counts(0)["arrival"] == 100
+    assert rec.n_dropped == 92
+    records = rec.records()
+    assert len(records) == 8
+    assert [r["t"] for r in records] == [float(i) for i in range(92, 100)]
+
+
+# --------------------------------------------------------------------------- #
+# experiment plumbing: identity exclusion, resume, CLI flags
+# --------------------------------------------------------------------------- #
+def test_obs_fields_excluded_from_identity_hash():
+    from repro.exp import ExperimentSpec
+    a = ExperimentSpec()
+    b = a.replace(trace=True, profile=True, metrics_interval=5.0)
+    assert a.identity_hash() == b.identity_hash()
+    assert a.spec_hash() != b.spec_hash()
+
+
+def test_resume_across_trace_toggle(tmp_path):
+    from repro.exp import ExperimentSpec, run_experiment
+    spec = ExperimentSpec(methods=("haf-static",), scenarios=("paper",),
+                          seeds=(0,), n_ai_requests=60,
+                          out=str(tmp_path / "rep.json"))
+    run_experiment(spec)
+    rerun = run_experiment(spec.replace(trace=True, profile=True,
+                                        metrics_interval=5.0))
+    assert rerun["provenance"]["resumed_rows"] == 1
+
+
+def test_cli_obs_flags_reach_spec():
+    from repro.eval.cli import _build_parser, build_experiment
+    args = _build_parser().parse_args(
+        ["--trace", "--profile", "--metrics-interval", "2.5"])
+    spec = build_experiment(args)
+    assert spec.trace and spec.profile and spec.metrics_interval == 2.5
+    # absent flags must not override a spec file's values
+    args = _build_parser().parse_args([])
+    assert build_experiment(args).trace is False
+
+
+def test_traced_sweep_rows_and_files(tmp_path):
+    from repro.exp import ExperimentSpec, run_experiment
+    spec = ExperimentSpec(methods=("haf",), scenarios=("paper",),
+                          seeds=(0,), n_ai_requests=80,
+                          trace=True, profile=True, metrics_interval=5.0,
+                          out=str(tmp_path / "rep.json"))
+    report = run_experiment(spec)
+    row = report["runs"][0]
+    assert row["trace_counts"]["arrival"] == row["n_requests"]
+    assert row["profile"]["phases"]
+    assert row["timeseries"]
+    trace_path = pathlib.Path(row["trace_path"])
+    assert trace_path.exists()
+    assert trace_path.with_suffix("").with_suffix(".chrome.json").exists()
+    agg = report["aggregate"][0]
+    assert agg["profile"]["phases"] and agg["events_per_sec"]["mean"] > 0
+
+
+def test_obs_cli_summary(tmp_path, capsys):
+    from repro.obs.cli import main
+    res = _solo("paper", obs=OBS_ON, n=120)
+    path = tmp_path / "t.jsonl"
+    res.trace.to_jsonl(path)
+    assert main(["summary", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "arrival" in out and "decisions" in out
+    assert main(["chrome", str(path), "-o",
+                 str(tmp_path / "t.chrome.json")]) == 0
+    json.loads((tmp_path / "t.chrome.json").read_text())
+
+
+# --------------------------------------------------------------------------- #
+# SimResult satellites: wall clock, engine tag, violation counts
+# --------------------------------------------------------------------------- #
+def test_simresult_wallclock_fields():
+    res = _solo("paper", engine="numpy")
+    assert res.wall_s > 0
+    assert res.engine == "numpy"
+    assert res.events_per_sec == pytest.approx(res.n_events / res.wall_s)
+
+
+def test_summary_violation_counts_nan_safe():
+    res = _solo("paper", n=120)
+    s = res.summary()
+    vc = res.violation_counts()
+    assert vc["overall"][0] == len(res.requests)
+    for key, (n, viol) in vc.items():
+        assert s[f"n_{key}"] == n and s[f"viol_{key}"] == viol
+        assert 0 <= viol <= n
+    # violation counts stay integers even where the rate is NaN
+    for key in ("overall", "ran", "ai", "large_ai", "small_ai"):
+        assert isinstance(s[f"viol_{key}"], int)
+
+
+def test_profile_phases_numpy():
+    res = _solo("paper", obs=ObsConfig(profile=True))
+    phases = res.profile["phases"]
+    for name in ("run", "engine.step", "engine.events", "allocator.solve"):
+        assert name in phases and phases[name]["total_s"] >= 0
+    assert res.profile["wall_s"] > 0
+
+
+def test_profile_separates_host_transfer_on_jax():
+    pytest.importorskip("jax")
+    results = _batched("paper", engine="jax", n=100, B=2,
+                       obs=ObsConfig(profile=True))
+    phases = results[0].profile["phases"]
+    for name in ("core.h2d", "core.kernel", "core.d2h"):
+        assert name in phases, f"jax profile missing {name}"
+
+
+# --------------------------------------------------------------------------- #
+# hygiene: no bare print() in library modules
+# --------------------------------------------------------------------------- #
+def _has_main_guard(tree: ast.Module) -> bool:
+    for node in tree.body:
+        if isinstance(node, ast.If) and isinstance(node.test, ast.Compare) \
+                and isinstance(node.test.left, ast.Name) \
+                and node.test.left.id == "__name__":
+            return True
+    return False
+
+
+def test_no_bare_print_in_library_modules():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        if _has_main_guard(tree):
+            continue                      # __main__-guarded CLI module
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "print":
+                offenders.append(
+                    f"{path.relative_to(SRC)}:{node.lineno}")
+    assert not offenders, (
+        "bare print() in library modules (route diagnostics through "
+        f"repro.obs.diag): {offenders}")
