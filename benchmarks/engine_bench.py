@@ -1,6 +1,6 @@
 """Event-engine benchmark: solo cores + the batched multi-seed engine.
 
-Six sections recorded to ``BENCH_pr6.json``:
+Eight sections recorded to ``BENCH_pr7.json``:
 
   * solo — scalar reference vs vectorized numpy engine on identical
     ``dense-urban`` workloads (the PR-2 comparison, kept so the
@@ -21,7 +21,17 @@ Six sections recorded to ``BENCH_pr6.json``:
     separately from kernel time,
   * pr4_comparison — obs-off batched HAF throughput vs the PR-4 record:
     the instrumentation hooks must not tax the uninstrumented engine
-    (acceptance: within 3%).
+    (acceptance: within 3%),
+  * memory — tracemalloc peaks for the streamed arrival path
+    (``retain_requests=False`` + windowed refill) vs the materialized
+    list at growing trace lengths: the streamed peak must stay flat
+    (O(S + window)) while the materialized peak grows O(n); in
+    ``--smoke`` the streamed 2·10^5-request peak is asserted against a
+    fixed budget,
+  * trace_replay (full mode only) — an uncapped 10^6-request trace
+    replay with ``retain_requests=False`` and obs trace counters on:
+    the run must complete untruncated and the counters must reconcile
+    exactly against the streaming accumulators.
 
   PYTHONPATH=src python -m benchmarks.engine_bench            # full grid
   PYTHONPATH=src python -m benchmarks.engine_bench --smoke    # CI-sized
@@ -42,8 +52,9 @@ from benchmarks import common
 from repro.eval import SweepSpec, run_sweep
 from repro.sim import Simulator, make_scenario, workload_for
 from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+from repro.sim.scenarios.workload import workload_stream_for
 
-BENCH_PATH = common.ROOT / "BENCH_pr6.json"
+BENCH_PATH = common.ROOT / "BENCH_pr7.json"
 PR4_PATH = common.ROOT / "BENCH_pr4.json"
 
 # (n_nodes, n_ai_requests): S = 3 * n_nodes for dense-urban
@@ -375,7 +386,7 @@ def bench_pr4_comparison(haf: Dict) -> Dict:
            "pr4_evps": prior_evps}
     if anchor_pt is None:
         now_evps = max(run_haf() for _ in range(2))
-        out["pr6_evps"] = round(now_evps, 1)
+        out["now_evps"] = round(now_evps, 1)
         out["ratio"] = round(now_evps / prior_evps, 4)
         out["within_3pct"] = bool(out["ratio"] >= 0.97)
         return out
@@ -405,15 +416,127 @@ def bench_pr4_comparison(haf: Dict) -> Dict:
     rel_now = max(h for _, h in pairs) / max(a for a, _ in pairs)
     rel_pr4 = prior_evps / anchor_pt["events_per_sec"]
     now_evps = max(h for _, h in pairs)
-    out["pr6_evps"] = round(now_evps, 1)
+    out["now_evps"] = round(now_evps, 1)
     out["ratio"] = round(now_evps / prior_evps, 4)
     out["anchor_pr4_evps"] = anchor_pt["events_per_sec"]
-    out["anchor_pr6_evps"] = round(max(a for a, _ in pairs), 1)
+    out["anchor_now_evps"] = round(max(a for a, _ in pairs), 1)
     out["haf_over_anchor_pr4"] = round(rel_pr4, 4)
     out["haf_over_anchor_pr6"] = round(rel_now, 4)
     out["normalized_ratio"] = round(rel_now / rel_pr4, 4)
     out["within_3pct"] = bool(rel_now / rel_pr4 >= 0.97)
     return out
+
+
+# --------------------------------------------------------------------------- #
+# memory: streamed O(S + window) vs materialized O(n) arrival path (PR-7)
+# --------------------------------------------------------------------------- #
+MEM_SMOKE_GRID = (20_000, 200_000)
+MEM_FULL_GRID = (20_000, 1_000_000)
+MEM_WINDOW = 4096
+# peak allocation is reached in steady state long before the trace ends, so
+# the tracemalloc points cap the event loop; the stream's unprocessed tail
+# is still drained (chunked) for exact accounting, so the cap never hides
+# trace-length-dependent memory
+MEM_EVENT_CAP = 30_000
+# fixed budget for the --smoke streamed 2e5-request peak: generator chunks
+# + one refill window + accumulators, independent of trace length
+SMOKE_MEM_BUDGET_MB = 64.0
+
+
+def _mem_scenario(n_requests: int) -> Dict:
+    # hold the offered load at the n=2000 synthetic-trace baseline
+    # (speedup scales arrivals): the memory question is about trace
+    # LENGTH, so queue depth — and with it the allocator's working set —
+    # must stay constant across grid points
+    return make_scenario("trace", n_ai_requests=n_requests,
+                         speedup=2000.0 / n_requests)
+
+
+def _traced_peak_mb(fn) -> float:
+    import gc
+    import tracemalloc
+
+    gc.collect()
+    tracemalloc.start()
+    try:
+        fn()
+        return tracemalloc.get_traced_memory()[1] / 1e6
+    finally:
+        tracemalloc.stop()
+
+
+def bench_memory(grid=MEM_SMOKE_GRID) -> Dict:
+    out: Dict = {"family": "trace", "window": MEM_WINDOW,
+                 "event_cap": MEM_EVENT_CAP,
+                 "smoke_budget_mb": SMOKE_MEM_BUDGET_MB, "points": []}
+    for n in grid:
+        sc = _mem_scenario(n)
+
+        def run_streamed():
+            stream = workload_stream_for(sc, seed=0, window=MEM_WINDOW)
+            res = Simulator(sc).run(stream, StaticPlacement(),
+                                    DeadlineAwareAllocation(),
+                                    retain_requests=False,
+                                    max_events=MEM_EVENT_CAP)
+            if res.n_requests != n or res.requests:
+                raise RuntimeError(
+                    f"engine_bench: streamed accounting broken at n={n} "
+                    f"(n_requests={res.n_requests}, "
+                    f"retained={len(res.requests)})")
+
+        def run_materialized():
+            reqs = workload_stream_for(sc, seed=0).to_list()
+            Simulator(sc).run(reqs, StaticPlacement(),
+                              DeadlineAwareAllocation(),
+                              max_events=MEM_EVENT_CAP)
+
+        streamed = _traced_peak_mb(run_streamed)
+        materialized = _traced_peak_mb(run_materialized)
+        out["points"].append({
+            "n_requests": n,
+            "streamed_peak_mb": round(streamed, 1),
+            "materialized_peak_mb": round(materialized, 1),
+            "ratio": round(materialized / max(streamed, 1e-9), 1)})
+    peaks = [p["streamed_peak_mb"] for p in out["points"]]
+    out["streamed_peak_flat"] = bool(max(peaks) < SMOKE_MEM_BUDGET_MB)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# trace_replay: uncapped 10^6-request streamed replay + counter
+# reconciliation (full mode only — ~3e6 events through the event loop)
+# --------------------------------------------------------------------------- #
+def bench_trace_replay(n_requests: int = 1_000_000) -> Dict:
+    from repro.obs import ObsConfig
+
+    sc = _mem_scenario(n_requests)
+    stream = workload_stream_for(sc, seed=0, window=MEM_WINDOW)
+    t0 = time.time()
+    res = Simulator(sc).run(stream, StaticPlacement(),
+                            DeadlineAwareAllocation(),
+                            retain_requests=False,
+                            max_events=20_000_000,
+                            obs=ObsConfig(trace=True))
+    wall = time.time() - t0
+    if res.truncated:
+        raise RuntimeError("engine_bench: 1e6 trace replay truncated")
+    counts = res.trace.counts(0)
+    by_class = res.violation_counts()
+    if counts["arrival"] != res.n_requests or res.n_requests != n_requests:
+        raise RuntimeError(
+            "engine_bench: obs arrival counter does not reconcile with the "
+            f"streaming accumulators ({counts['arrival']} != "
+            f"{res.n_requests} != {n_requests})")
+    if counts["completion"] + counts["drop"] != counts["arrival"]:
+        raise RuntimeError(
+            "engine_bench: completion+drop != arrival in the 1e6 replay")
+    return {"family": "trace", "n_requests": n_requests,
+            "window": MEM_WINDOW, "wall_s": round(wall, 1),
+            "events": res.n_events,
+            "events_per_sec": round(res.n_events / wall, 1),
+            "violations": by_class["overall"][1],
+            "obs_counts": {k: counts[k]
+                           for k in ("arrival", "completion", "drop")}}
 
 
 def main(smoke: bool = False) -> Dict:
@@ -467,13 +590,28 @@ def main(smoke: bool = False) -> Dict:
         norm = pr4_cmp.get("normalized_ratio", pr4_cmp["ratio"])
         print(f"engine-pr4cmp,paper,B={pr4_cmp['B']},"
               f"pr4_evps={pr4_cmp['pr4_evps']},"
-              f"pr6_evps={pr4_cmp['pr6_evps']},"
+              f"now_evps={pr4_cmp['now_evps']},"
               f"ratio={pr4_cmp['ratio']},"
               f"drift_normalized={norm}", flush=True)
 
+    memory = bench_memory(MEM_SMOKE_GRID if smoke else MEM_FULL_GRID)
+    for p in memory["points"]:
+        print(f"engine-memory,trace,n={p['n_requests']},"
+              f"streamed_peak_mb={p['streamed_peak_mb']},"
+              f"materialized_peak_mb={p['materialized_peak_mb']},"
+              f"ratio={p['ratio']}x", flush=True)
+
+    replay = None
+    if not smoke:
+        replay = bench_trace_replay()
+        print(f"engine-replay,trace,n={replay['n_requests']},"
+              f"wall_s={replay['wall_s']},"
+              f"evps={replay['events_per_sec']},"
+              f"arrivals={replay['obs_counts']['arrival']}", flush=True)
+
     record = {
         "kind": "repro.bench.engine",
-        "pr": 6,
+        "pr": 7,
         "smoke": smoke,
         "default_engine": "numpy",
         "solo_points": solo_points,
@@ -483,6 +621,8 @@ def main(smoke: bool = False) -> Dict:
         "sweep": sweep,
         "profile": profile,
         "pr4_comparison": pr4_cmp,
+        "memory": memory,
+        "trace_replay": replay,
     }
     BENCH_PATH.write_text(json.dumps(record, indent=2, sort_keys=True))
     print(f"# record -> {BENCH_PATH}", flush=True)
@@ -501,6 +641,11 @@ def main(smoke: bool = False) -> Dict:
         print(f"# WARNING: obs-off batched HAF throughput is "
               f"{norm:.3f}x the PR-4 record (drift-normalized, < 0.97 — "
               f"instrumentation hooks may be taxing the engine)",
+              flush=True)
+    if not memory["streamed_peak_flat"]:
+        print(f"# WARNING: streamed peak memory exceeds the "
+              f"{SMOKE_MEM_BUDGET_MB:.0f}MB O(S+window) budget: "
+              f"{[p['streamed_peak_mb'] for p in memory['points']]}MB",
               flush=True)
     return record
 

@@ -19,7 +19,7 @@ def main() -> None:
                              "alloc", "fleet", "engine", "critic", "spec"))
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode (tiny request counts, 1 seed; the "
-                         "engine bench still records BENCH_pr6.json and "
+                         "engine bench still records BENCH_pr7.json and "
                          "the critic harvest+holdout path still runs)")
     ap.add_argument("--trace", action="store_true",
                     help="record repro.obs event/decision traces for the "
@@ -48,7 +48,7 @@ def main() -> None:
             bad = [e for e, p in ran.items() if not p.get("phases")]
             if not ran or bad:
                 raise RuntimeError(
-                    "BENCH_pr6.json profile section lacks per-phase "
+                    "BENCH_pr7.json profile section lacks per-phase "
                     f"tables (ran={sorted(ran)}, empty={bad})")
             dev = [e for e in ran if e in ("jax", "pallas")]
             missing = [e for e in dev
@@ -57,6 +57,17 @@ def main() -> None:
                 raise RuntimeError(
                     "device engines missing kernel/transfer phase "
                     f"accounting: {missing}")
+            # CI guard: the streamed arrival path must hold its fixed
+            # O(S + window) peak-memory budget at every grid point
+            # (includes the 2e5-request streamed run)
+            mem = record.get("memory", {})
+            if not mem.get("streamed_peak_flat"):
+                peaks = [p.get("streamed_peak_mb")
+                         for p in mem.get("points", [])]
+                raise RuntimeError(
+                    "streamed peak memory exceeded the "
+                    f"{mem.get('smoke_budget_mb')}MB budget: {peaks}MB "
+                    "(O(S + window) contract broken)")
     if args.only in (None, "alloc"):
         from benchmarks import alloc_microbench
         alloc_microbench.main()
@@ -68,7 +79,8 @@ def main() -> None:
         # in --smoke mode one also runs end-to-end through the CLI
         from benchmarks import common
         from repro.eval import cli as eval_cli
-        for name in ("paper_table3.toml", "load_sweep.toml"):
+        for name in ("paper_table3.toml", "load_sweep.toml",
+                     "trace_sweep.toml"):
             rc = eval_cli.main(["--spec", str(common.EXPERIMENTS / name),
                                 "--validate"])
             if rc:

@@ -34,7 +34,7 @@ from repro.core.controller import RandomPlacement, ScriptedPlacement
 from repro.obs import diag
 from repro.core.critic import epoch_records_to_samples
 from repro.sim.engine import DeadlineAwareAllocation, Simulator
-from repro.sim.scenarios import make_scenario, workload_for
+from repro.sim.scenarios import make_scenario, workload_stream_for
 from repro.sim.types import InstanceCategory
 
 # actions probed at each counterfactual epoch (instance name, dst node) —
@@ -134,8 +134,11 @@ def harvest(scenario: Dict, *, epoch_interval: float = 5.0,
     # ---- 1) bulk exploration (one batched block over load × seed) ------- #
     bulk: List[Tuple[List, Callable]] = []
     for rho, seed in bulk_runs:
-        reqs, _ = workload_for(scenario, seed=seed,
-                               n_ai_requests=bulk_requests, rho=rho)
+        # materialized stream: metadata horizon, one shared request list
+        # lazily cloned per replica at window-load time
+        reqs = workload_stream_for(scenario, seed=seed,
+                                   n_ai_requests=bulk_requests,
+                                   rho=rho).materialize()
         bulk.append((reqs, lambda seed=seed: RandomPlacement(seed=seed,
                                                              cooldown=8)))
     for res in _run_blocks(sim, bulk, batch_size):
@@ -143,8 +146,11 @@ def harvest(scenario: Dict, *, epoch_interval: float = 5.0,
     log(f"bulk x{len(bulk)} (batch={batch_size}): {len(samples)} samples")
 
     # ---- 2) counterfactual probes (batched same-workload replays) -------- #
-    reqs, _ = workload_for(scenario, seed=42, n_ai_requests=probe_requests,
-                           rho=1.0)
+    # probes replay ONE workload many times: materialize once, every
+    # replay clones lazily from the same list
+    reqs = workload_stream_for(scenario, seed=42,
+                               n_ai_requests=probe_requests,
+                               rho=1.0).materialize()
 
     def collect(res, k: int, action) -> None:
         all_s = epoch_records_to_samples(res.epochs, horizon=label_horizon)

@@ -105,6 +105,13 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="sample per-tick gauges (utilization, queue depth, "
                          "slack histogram, SLO) every DT sim-seconds into "
                          "each row's timeseries")
+    ap.add_argument("--stream", action="store_true", default=None,
+                    help="feed the engine chunked arrival streams and drop "
+                         "per-request result lists (O(S+window) memory; "
+                         "rows are identical either way)")
+    ap.add_argument("--window", type=int, default=None, metavar="W",
+                    help="streaming refill granularity in requests "
+                         "(0 = the generator's native chunking)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny request counts, 1 seed")
     return ap
@@ -143,7 +150,8 @@ def build_experiment(args) -> ExperimentSpec:
                         ("max_events", "max_events"), ("out", "out"),
                         ("name", "name"), ("trace", "trace"),
                         ("profile", "profile"),
-                        ("metrics_interval", "metrics_interval")):
+                        ("metrics_interval", "metrics_interval"),
+                        ("stream", "stream"), ("window", "window")):
         val = getattr(args, flag)
         if val is not None:
             changes[field] = val

@@ -55,6 +55,14 @@ class SweepSpec:
     scenario_seed: int = 0                  # topology seed (workload varies)
     engine: str = "numpy"                   # numpy | scalar | jax | pallas
     batch_seeds: int = 1                    # >1: fan seeds into run_batch
+    # streaming arrivals: feed the engine the chunked ArrivalStream and
+    # drop the per-request result list (O(S + window) memory instead of
+    # O(n_requests) per replica).  Discrete outcomes and summary rows are
+    # identical either way — stream/window are memory knobs, excluded
+    # from the experiment identity hash.  window=0 keeps the generator's
+    # native chunking; trace-family scenarios always stream.
+    stream: bool = False
+    window: int = 0
     # observability (repro.obs) — all off by default; the engine then runs
     # the uninstrumented, bit-identical hot path
     trace: bool = False                     # event trace -> row trace_counts
@@ -91,6 +99,8 @@ def expand_jobs(spec: SweepSpec) -> List[Dict]:
             "epoch_interval": spec.epoch_interval,
             "max_events": spec.max_events,
             "engine": spec.engine,
+            "stream": spec.stream,
+            "window": spec.window,
             "trace": spec.trace,
             "profile": spec.profile,
             "metrics_interval": spec.metrics_interval,
@@ -172,30 +182,49 @@ def _export_trace(job: Dict, res, seeds: str) -> Optional[str]:
     return str(path)
 
 
+def _job_stream(job: Dict, sc: Dict):
+    """(workload stream, info, streamed?) for a job.
+
+    Every job realizes its workload as an ArrivalStream; non-streamed
+    jobs feed the engine its ``materialize()`` (same metadata horizon, so
+    the rows are identical — the whole point of the equivalence
+    contract).  Trace-family scenarios always stream: a day-scale trace
+    should never be resident in full.
+    """
+    from repro.sim.scenarios import workload_stream_for
+
+    streamed = bool(job.get("stream")) or \
+        (sc.get("workload") or {}).get("kind") == "trace"
+    stream = workload_stream_for(sc, seed=job["seed"],
+                                 n_ai_requests=job.get("n_ai_requests"),
+                                 rho=job.get("rho"),
+                                 window=job.get("window") or None)
+    if not streamed:
+        stream = stream.materialize()
+    return stream, dict(stream.info), streamed
+
+
 def run_job(job: Dict) -> Dict:
     """One simulator run; returns a flat, JSON-ready result row."""
     from repro.sim import Simulator
-    from repro.sim.scenarios import workload_for
 
     engine = job.get("engine", "numpy")
     if engine == "pallas":
         raise ValueError("engine='pallas' is batch-only; "
                          "set batch_seeds > 1 (CLI: --batch)")
     sc = job.get("scenario") or scenario_for_job(job)
-    requests, info = workload_for(sc, seed=job["seed"],
-                                  n_ai_requests=job.get("n_ai_requests"),
-                                  rho=job.get("rho"))
+    stream, info, streamed = _job_stream(job, sc)
     placement, allocation, rr = make_method(job["method"],
                                             **job["method_params"])
     sim = Simulator(sc, epoch_interval=job["epoch_interval"],
                     engine=engine)
     t0 = time.time()
-    res = sim.run(requests, placement, allocation, rr_dispatch=rr,
-                  max_events=job["max_events"], obs=_obs_config(job))
+    res = sim.run(stream, placement, allocation, rr_dispatch=rr,
+                  max_events=job["max_events"],
+                  retain_requests=not streamed, obs=_obs_config(job))
     wall = time.time() - t0
     trace_path = _export_trace(job, res, str(job["seed"]))
-    return _result_row(job, res, requests, info, wall,
-                       trace_path=trace_path)
+    return _result_row(job, res, wall, info, trace_path=trace_path)
 
 
 def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
@@ -206,16 +235,15 @@ def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
     ``run_job`` per job; ``wall_s`` is the batch wall time divided evenly.
     """
     from repro.sim import Simulator
-    from repro.sim.scenarios import workload_for
 
     base = jobs[0]
     sc = base.get("scenario") or scenario_for_job(base)
     workloads, infos = [], []
+    streamed = False
     for job in jobs:
-        reqs, info = workload_for(sc, seed=job["seed"],
-                                  n_ai_requests=job.get("n_ai_requests"),
-                                  rho=job.get("rho"))
-        workloads.append(reqs)
+        stream, info, job_streamed = _job_stream(job, sc)
+        streamed = streamed or job_streamed
+        workloads.append(stream)
         infos.append(info)
     methods = [make_method(job["method"], **job["method_params"])
                for job in jobs]
@@ -228,20 +256,21 @@ def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
                             [m[1] for m in methods],
                             rr_dispatch=rr,
                             max_events=base["max_events"],
+                            retain_requests=not streamed,
                             obs=_obs_config(base))
     wall = time.time() - t0
     # the recorder is shared by the whole block: export once, reference
     # the file from every row; trace_counts stay per-replica
     trace_path = _export_trace(
         base, results[0], "-".join(str(j["seed"]) for j in jobs))
-    return [dict(_result_row(job, res, reqs, info, wall / len(jobs),
+    return [dict(_result_row(job, res, wall / len(jobs), info,
                              b=b, trace_path=trace_path),
                  batch=len(jobs), b=b)
-            for b, (job, res, reqs, info)
-            in enumerate(zip(jobs, results, workloads, infos))]
+            for b, (job, res, info)
+            in enumerate(zip(jobs, results, infos))]
 
 
-def _result_row(job: Dict, res, requests, info: Dict, wall: float,
+def _result_row(job: Dict, res, wall: float, info: Dict,
                 b: int = 0, trace_path: Optional[str] = None) -> Dict:
     row = dict(res.summary())
     row.update({
@@ -249,7 +278,7 @@ def _result_row(job: Dict, res, requests, info: Dict, wall: float,
         "scenario": job["scenario_label"],
         "family": job["family"],
         "seed": job["seed"],
-        "n_requests": len(requests),
+        "n_requests": res.n_requests,
         "n_events": res.n_events,
         "truncated": res.truncated,
         "engine": job.get("engine", "numpy"),
@@ -280,6 +309,7 @@ def _batch_groups(jobs: List[Dict], batch_seeds: int) -> List[List[int]]:
                job["method_label"], repr(sorted(job["method_params"].items(),
                                                key=lambda kv: kv[0])),
                job["epoch_interval"], job["max_events"], job["engine"],
+               job.get("stream"), job.get("window"),
                job.get("trace"), job.get("profile"),
                job.get("metrics_interval"))
         cells.setdefault(key, []).append(i)

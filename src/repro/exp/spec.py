@@ -93,6 +93,13 @@ class ExperimentSpec:
     trace: bool = False
     profile: bool = False
     metrics_interval: float = 0.0           # 0 = no time-series sampling
+    # streaming arrivals (repro.sim.stream) — memory knobs, provably
+    # non-result-affecting (the streamed ≡ materialized contract), so
+    # both are excluded from identity_hash: a streamed rerun resumes a
+    # materialized report and vice versa.  window=0 keeps the source
+    # stream's native chunking; trace-family scenarios always stream.
+    stream: bool = False
+    window: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "methods",
@@ -127,14 +134,24 @@ class ExperimentSpec:
             "trace": self.trace,
             "profile": self.profile,
             "metrics_interval": self.metrics_interval,
+            "stream": self.stream,
+            "window": self.window,
         }
 
     def identity(self) -> Dict:
         """The result-affecting subset (see module docstring)."""
         c = self.canonical()
-        return {k: c[k] for k in ("methods", "scenarios", "n_ai_requests",
-                                  "rho", "epoch_interval", "max_events",
-                                  "scenario_seed")}
+        out = {k: c[k] for k in ("methods", "scenarios", "n_ai_requests",
+                                 "rho", "epoch_interval", "max_events",
+                                 "scenario_seed")}
+        # a scenario's own window= is the streaming refill granularity
+        # (trace family) — a memory knob like the spec-level one, so it
+        # must not fork the identity either
+        out["scenarios"] = [
+            dict(s, params={k: v for k, v in s["params"].items()
+                            if k != "window"})
+            for s in out["scenarios"]]
+        return out
 
     @staticmethod
     def _hash(obj) -> str:
@@ -174,6 +191,8 @@ class ExperimentSpec:
             profile=self.profile,
             metrics_interval=self.metrics_interval,
             trace_dir=trace_dir,
+            stream=self.stream,
+            window=self.window,
         )
 
     def expand(self) -> List[Dict]:
@@ -225,7 +244,8 @@ class ExperimentSpec:
         defaults = {f.name: f.default for f in dataclasses.fields(self)}
         for key in ("n_ai_requests", "rho", "epoch_interval", "max_events",
                     "scenario_seed", "engine", "batch", "workers", "out",
-                    "trace", "profile", "metrics_interval"):
+                    "trace", "profile", "metrics_interval",
+                    "stream", "window"):
             val = getattr(self, key)
             if val != defaults[key]:
                 d[key] = val
@@ -235,6 +255,7 @@ class ExperimentSpec:
                   "rho", "epoch_interval", "max_events", "scenario_seed",
                   "engine", "batch", "workers", "out",
                   "trace", "profile", "metrics_interval",
+                  "stream", "window",
                   "batch_seeds", "requests"}   # accepted aliases
 
     @classmethod
@@ -353,6 +374,8 @@ class ExperimentSpec:
             problems.append("epoch_interval must be > 0")
         if self.metrics_interval < 0:
             problems.append("metrics_interval must be >= 0")
+        if self.window < 0:
+            problems.append("window must be >= 0 (0 = native chunking)")
         if problems:
             raise SpecError("; ".join(problems))
 

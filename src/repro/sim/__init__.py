@@ -9,15 +9,20 @@ from repro.sim.types import (InstanceCategory, InstanceSpec, NodeSpec,
 from repro.sim.cluster import ClusterState
 from repro.sim.engine import Simulator, SimResult
 from repro.sim.event_core import ENGINES, make_event_core
-from repro.sim.workload import WorkloadConfig, generate_workload
+from repro.sim.stream import ArrivalStream, ListStream, as_arrival_stream
+from repro.sim.workload import (WorkloadConfig, generate_workload,
+                                workload_stream)
 from repro.sim.scenario import paper_scenario
 from repro.sim.scenarios import (family_names, make_scenario,
-                                 scenario_fingerprint, workload_for)
+                                 scenario_fingerprint, workload_for,
+                                 workload_stream_for)
 
 __all__ = [
     "InstanceCategory", "InstanceSpec", "NodeSpec", "Request", "RequestClass",
     "MigrationAction", "ClusterState", "Simulator", "SimResult",
     "ENGINES", "make_event_core",
-    "WorkloadConfig", "generate_workload", "paper_scenario",
-    "family_names", "make_scenario", "scenario_fingerprint", "workload_for",
+    "ArrivalStream", "ListStream", "as_arrival_stream",
+    "WorkloadConfig", "generate_workload", "workload_stream",
+    "paper_scenario", "family_names", "make_scenario",
+    "scenario_fingerprint", "workload_for", "workload_stream_for",
 ]

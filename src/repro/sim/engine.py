@@ -53,6 +53,7 @@ from repro.sim.cluster import (ClusterBlock, ClusterState, Job,
                                deadline_allocate_block)
 from repro.sim.event_core import make_batched_event_core, make_event_core
 from repro.sim.snapshot import EpochSnapshot
+from repro.sim.stream import as_arrival_stream
 from repro.sim.types import (InstanceCategory, MigrationAction, Request,
                              RequestClass)
 
@@ -111,6 +112,12 @@ class EpochRecord:
     counts: Optional[Tuple[int, int, int]] = None
 
 
+# (label in fulfillment()) -> (key in counts_by_class); the two views of
+# the same per-class accumulators
+_CLS_LABELS = (("overall", "overall"), ("RAN", "ran"), ("AI", "ai"),
+               ("LARGE_AI", "large_ai"), ("SMALL_AI", "small_ai"))
+
+
 @dataclasses.dataclass
 class SimResult:
     requests: List[Request]
@@ -135,13 +142,33 @@ class SimResult:
     profile: Optional[Dict] = None
     timeseries: Optional[List[Dict]] = None
     trace: Optional[object] = None
+    # per-class (n, violations) from the replica's streaming accumulators
+    # (every request the stream emitted, whether or not it was retained).
+    # None only for hand-built results — then the legacy request scan is
+    # the fallback.  With this set, fulfillment()/summary() never touch
+    # ``requests``, so ``retain_requests=False`` runs report identically.
+    counts_by_class: Optional[Dict[str, Tuple[int, int]]] = None
 
     # ------------------------------------------------------------------ #
     @property
     def events_per_sec(self) -> float:
         return self.n_events / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def n_requests(self) -> int:
+        """Total requests the run accounted for (stream-emitted or listed)."""
+        if self.counts_by_class is not None:
+            return self.counts_by_class["overall"][0]
+        return len(self.requests)
+
     def fulfillment(self) -> Dict[str, float]:
+        if self.counts_by_class is not None:
+            out: Dict[str, float] = {}
+            for label, key in _CLS_LABELS:
+                n, viol = self.counts_by_class[key]
+                if n:
+                    out[label] = (n - viol) / n
+            return out
         stats: Dict[str, List[int]] = {}
         for r in self.requests:
             ok = r.fulfilled() and r.rid not in self.dropped
@@ -162,6 +189,9 @@ class SimResult:
         fulfillment means, 0 (not NaN) for classes absent from the
         scenario, so scalar summaries reconcile exactly with traced SLO
         time series (mean ≡ 1 - viol/n whenever n > 0)."""
+        if self.counts_by_class is not None:
+            return {key: tuple(self.counts_by_class[key])
+                    for _, key in _CLS_LABELS}
         keys = ("overall", "ran", "ai", "large_ai", "small_ai")
         n = dict.fromkeys(keys, 0)
         viol = dict.fromkeys(keys, 0)
@@ -216,20 +246,40 @@ class _Replica:
     __slots__ = ("sc", "epoch_interval", "drop_expired", "cluster",
                  "requests", "placement", "allocation", "rr_counter",
                  "service_sids", "ran_packet", "delta", "heap", "seq",
+                 "stream", "retain_requests", "_chunks", "_emit_idx",
+                 "loaded_until", "stream_done", "emitted", "totals",
                  "dropped", "migrations", "epochs", "win", "arrivals_win",
                  "current_rec", "t", "n_events", "truncated", "dirty",
                  "last_full", "epoch_hook", "done", "pending_epoch",
                  "trace", "metrics", "b")
 
     def __init__(self, sc: Dict, epoch_interval: float, drop_expired: bool,
-                 requests: List[Request], placement: PlacementPolicy,
+                 requests, placement: PlacementPolicy,
                  allocation: AllocationPolicy, rr_dispatch: bool,
-                 epoch_hook: Optional[Callable]):
+                 epoch_hook: Optional[Callable],
+                 retain_requests: bool = True):
         self.sc = sc
         self.epoch_interval = epoch_interval
         self.drop_expired = drop_expired
-        # clone: requests carry mutable runtime state; runs must not interact
-        self.requests = [dataclasses.replace(r) for r in requests]
+        # the arrival source: a chunked ArrivalStream, or a plain list
+        # coerced to one (single bulk chunk, lazily cloned — requests
+        # carry mutable runtime state; runs must not interact)
+        self.stream = as_arrival_stream(requests)
+        self.retain_requests = retain_requests
+        self.requests = []            # requests loaded so far (if retained)
+        self._chunks = self.stream.chunks()
+        self._emit_idx = 0            # global heap tiebreak across chunks
+        self.loaded_until = -INF      # arrival frontier of loaded chunks
+        self.stream_done = False
+        # streaming per-class accumulators: emitted counts every request
+        # the stream produced; totals = [fulfilled, recorded] outcomes.
+        # unaccounted (emitted - recorded) requests never completed —
+        # violations by definition, however the run ended.
+        self.emitted = {RequestClass.LARGE_AI: 0, RequestClass.SMALL_AI: 0,
+                        RequestClass.RAN: 0}
+        self.totals = {RequestClass.LARGE_AI: [0, 0],
+                       RequestClass.SMALL_AI: [0, 0],
+                       RequestClass.RAN: [0, 0]}
         self.placement = placement
         self.allocation = allocation
         self.epoch_hook = epoch_hook
@@ -242,27 +292,29 @@ class _Replica:
         self.ran_packet = sc["ran_packet_delay"]
         self.delta = sc["transport_delay"]
 
-        # bulk heap construction: heapify is O(n) vs n pushes O(n log n)
-        entries: List[Tuple[float, int, str, object]] = []
-        horizon = max(r.arrival for r in self.requests) if self.requests \
-            else 0.0
+        # bulk heap construction: heapify is O(n) vs n pushes O(n log n).
+        # Static entries keep a deterministic pop order on time ties via
+        # tuple seqs — epochs (0, k) < arrivals (1, emit_idx) < outages
+        # (2, j) < dynamic pushes (3, counter) — exactly the order the
+        # legacy int seq produced, but independent of WHEN an arrival is
+        # heap-pushed (the streamed ≡ materialized invariant).
+        entries: List[Tuple[float, Tuple[int, int], str, object]] = []
+        # horizon from stream metadata (analytic for generated streams;
+        # ListStream falls back to the legacy max-arrival scan)
+        horizon = self.stream.horizon
         n_epochs = int(horizon / epoch_interval) + 3
         for k in range(1, n_epochs):
-            entries.append((k * epoch_interval, len(entries), "epoch", k))
-        for r in self.requests:
-            if r.cls == RequestClass.RAN:
-                entries.append((r.arrival, len(entries), "du", r))
-            else:
-                entries.append((r.arrival + self.ran_packet,
-                                len(entries), "ai_route", r))
+            entries.append((k * epoch_interval, (0, k), "epoch", k))
         # node availability windows (scenario fault injection): everything
         # resident on the node at t0 goes dark until t1
-        for node, t0, t1 in sc.get("outages", ()):
-            entries.append((float(t0), len(entries), "outage",
+        for j, (node, t0, t1) in enumerate(sc.get("outages", ())):
+            entries.append((float(t0), (2, j), "outage",
                             (int(node), float(t1))))
+        self._load_chunk(entries)     # first window rides the O(n) heapify
         heapq.heapify(entries)
         self.heap = entries
-        self.seq = len(entries)
+        self.seq = 0
+        self.refill()                 # top may still be past the frontier
 
         self.dropped: set = set()
         self.migrations: List[Tuple[float, MigrationAction]] = []
@@ -293,8 +345,70 @@ class _Replica:
         self.last_full = 0.0
 
     # ------------------------------------------------------------------ #
+    def _load_chunk(self, into: Optional[List] = None) -> None:
+        """Pull ONE chunk off the stream into the heap (or ``into`` list).
+
+        Advances the arrival frontier ``loaded_until`` to the chunk's last
+        arrival; exhaustion pins it to +inf.  Arrival seqs are the global
+        emit index, so heap tie-breaking is identical no matter how the
+        stream is chunked or when a chunk lands.
+        """
+        chunk = next(self._chunks, None)
+        if chunk is None:
+            self.stream_done = True
+            self.loaded_until = INF
+            return
+        heap = self.heap if into is None else None
+        for r in chunk:
+            if r.cls == RequestClass.RAN:
+                entry = (r.arrival, (1, self._emit_idx), "du", r)
+            else:
+                entry = (r.arrival + self.ran_packet,
+                         (1, self._emit_idx), "ai_route", r)
+            if heap is None:
+                into.append(entry)
+            else:
+                heapq.heappush(heap, entry)
+            self._emit_idx += 1
+            self.emitted[r.cls] += 1
+        if chunk:
+            self.loaded_until = chunk[-1].arrival
+            if self.retain_requests:
+                self.requests.extend(chunk)
+
+    def refill(self) -> None:
+        """Load chunks until the heap's next event precedes the frontier.
+
+        Invariant: any unloaded request arrives at or after
+        ``loaded_until``, and its event time is >= its arrival — so once
+        the heap top is strictly below the frontier, no unloaded entry
+        can pop earlier.  ``>=`` (not ``>``) keeps pulling through exact
+        arrival ties split across a chunk boundary.
+        """
+        heap = self.heap
+        while not self.stream_done and \
+                (heap[0][0] if heap else INF) >= self.loaded_until:
+            self._load_chunk()
+
+    def drain_stream(self) -> None:
+        """Account (and retain, if configured) every unloaded request.
+
+        Called once at ``result()``: a truncated or drained run still
+        reports exact per-class totals — requests the engine never saw
+        are violations, same as the legacy full-list scan counted them.
+        """
+        if self.stream_done:
+            return
+        for chunk in self._chunks:
+            for r in chunk:
+                self.emitted[r.cls] += 1
+            if self.retain_requests:
+                self.requests.extend(chunk)
+        self.stream_done = True
+        self.loaded_until = INF
+
     def push(self, t: float, kind: str, payload) -> None:
-        heapq.heappush(self.heap, (t, self.seq, kind, payload))
+        heapq.heappush(self.heap, (t, (3, self.seq), kind, payload))
         self.seq += 1
 
     def mark(self, sid: int) -> None:
@@ -304,6 +418,9 @@ class _Replica:
         w = self.win[req.cls]
         w[0] += int(ok)
         w[1] += 1
+        tot = self.totals[req.cls]
+        tot[0] += int(ok)
+        tot[1] += 1
         if self.metrics is not None:
             self.metrics.record_outcome(self.b, _CLS_CODE[req.cls], ok)
 
@@ -552,14 +669,32 @@ class _Replica:
             return nodes
         return ()
 
+    def _class_counts(self) -> Dict[str, Tuple[int, int]]:
+        """(n, violations) per class from the streaming accumulators.
+
+        n counts every emitted request; violations = n − fulfilled, which
+        folds in both recorded misses AND requests that never completed
+        (in flight at truncation, stalled, or never loaded) — exactly
+        what the legacy scan over a retained request list computed.
+        """
+        per = {cls: (self.emitted[cls], self.emitted[cls] - tot[0])
+               for cls, tot in self.totals.items()}
+        la, sa = per[RequestClass.LARGE_AI], per[RequestClass.SMALL_AI]
+        ran = per[RequestClass.RAN]
+        ai = (la[0] + sa[0], la[1] + sa[1])
+        return {"overall": (ai[0] + ran[0], ai[1] + ran[1]), "ran": ran,
+                "ai": ai, "large_ai": la, "small_ai": sa}
+
     def result(self, wall_s: float = 0.0, engine: str = "",
                observer=None) -> SimResult:
         self.close_epoch_window(self.current_rec)
+        self.drain_stream()
         res = SimResult(requests=self.requests, dropped=self.dropped,
                         migrations=self.migrations, epochs=self.epochs,
                         infeasible_events=self.cluster.infeasible_events,
                         n_events=self.n_events, truncated=self.truncated,
-                        wall_s=wall_s, engine=engine)
+                        wall_s=wall_s, engine=engine,
+                        counts_by_class=self._class_counts())
         if observer is not None:
             if observer.profiler is not None:
                 res.profile = observer.profiler.report()
@@ -641,13 +776,18 @@ class Simulator:
             make_event_core(engine)
 
     # ------------------------------------------------------------------ #
-    def run(self, requests: List[Request],
+    def run(self, requests,
             placement: PlacementPolicy,
             allocation: AllocationPolicy,
             rr_dispatch: bool = False,
             max_events: int = 5_000_000,
             epoch_hook: Optional[Callable] = None,
+            retain_requests: bool = True,
             obs=None) -> SimResult:
+        """Run one trace.  ``requests`` is a list OR an ArrivalStream;
+        ``retain_requests=False`` drops the per-request list from the
+        result (summaries come from the streaming accumulators) — with a
+        windowed stream the whole run is then O(S + window) memory."""
         if self.engine == "pallas":
             raise ValueError(
                 "engine='pallas' is the batched [B, S] kernel backend; "
@@ -656,7 +796,7 @@ class Simulator:
                                       B=1, engine=self.engine)
         rep = _Replica(self.scenario, self.epoch_interval, self.drop_expired,
                        requests, placement, allocation, rr_dispatch,
-                       epoch_hook)
+                       epoch_hook, retain_requests=retain_requests)
         # per-run core: the numpy backend carries mutable scratch + a
         # prepare cache, so sharing one across overlapping runs (threads,
         # nested runs from an epoch_hook) would cross-contaminate state
@@ -680,6 +820,8 @@ class Simulator:
         # outage/reconfiguration ends)
         try:
             while True:
+                if not rep.stream_done:
+                    rep.refill()    # windowed heap refill (no-op once drained)
                 if prof is not None:
                     _t0 = perf_counter()
                 t_comp, sid_comp = core.next_completion(cluster, rep.t)
@@ -747,6 +889,7 @@ class Simulator:
                   max_events: int = 5_000_000,
                   epoch_hooks: Optional[Sequence[Optional[Callable]]] = None,
                   engine: Optional[str] = None,
+                  retain_requests: bool = True,
                   obs=None) -> List[SimResult]:
         """Advance B independent replicas of this scenario in lockstep.
 
@@ -775,7 +918,8 @@ class Simulator:
         hooks = epoch_hooks if epoch_hooks is not None else [None] * B
         reps = [_Replica(self.scenario, self.epoch_interval,
                          self.drop_expired, workloads[b], placements[b],
-                         allocations[b], rr_dispatch, hooks[b])
+                         allocations[b], rr_dispatch, hooks[b],
+                         retain_requests=retain_requests)
                 for b in range(B)]
         block = ClusterBlock([rep.cluster for rep in reps])
         engine_name = engine or self.engine
@@ -838,6 +982,14 @@ class Simulator:
                 if prof is not None:
                     _ts = perf_counter()
                 for b, rep in enumerate(reps):
+                    # per-replica stream cursor: pull the next window(s)
+                    # before the fused compute+advance step reads t_ev —
+                    # once the frontier passes the heap top, no unloaded
+                    # arrival can precede it (host-scalar check only)
+                    if not rep.stream_done and not rep.done \
+                            and t_ev[b] >= rep.loaded_until:
+                        rep.refill()
+                        t_ev[b] = rep.heap[0][0] if rep.heap else INF
                     can_step[b] = not rep.done and rep.n_events < max_events
                 t_comp, sids = core.step(block, t_vec, t_ev, can_step)
                 t_next = np.minimum(t_comp, t_ev)

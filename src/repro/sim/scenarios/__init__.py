@@ -10,9 +10,12 @@ Usage::
 
 Families (see :mod:`repro.sim.scenarios.families` for parameters):
 ``paper``, ``dense-urban``, ``diurnal``, ``flash-crowd``,
-``diurnal-flash`` (composed profile), ``heavy-tail``, ``node-outage``,
-``skewed-hetero``.  All generators are deterministic in (seed, params);
-:func:`scenario_fingerprint` certifies it.
+``diurnal-flash`` (composed profile), ``heavy-tail``, ``trace``
+(CSV/JSONL cluster-trace replay), ``node-outage``, ``skewed-hetero``.
+All generators are deterministic in (seed, params);
+:func:`scenario_fingerprint` certifies it.  :func:`workload_stream_for`
+is the chunked-stream realization (O(window) memory);
+:func:`workload_for` is its materialized view.
 """
 from repro.sim.scenarios.registry import (REGISTRY, family_names,
                                           make_scenario, register,
@@ -21,12 +24,12 @@ from repro.sim.scenarios.builder import (build_scenario,
                                          effective_ai_capacity,
                                          validate_scenario)
 from repro.sim.scenarios.workload import (estimated_horizon, workload_config,
-                                          workload_for)
+                                          workload_for, workload_stream_for)
 from repro.sim.scenarios import families  # noqa: F401  (populates REGISTRY)
 
 __all__ = [
     "REGISTRY", "family_names", "make_scenario", "register",
     "scenario_fingerprint", "build_scenario", "effective_ai_capacity",
     "validate_scenario", "estimated_horizon", "workload_config",
-    "workload_for", "families",
+    "workload_for", "workload_stream_for", "families",
 ]

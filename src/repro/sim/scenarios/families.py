@@ -183,6 +183,38 @@ def heavy_tail(seed: int = 0, alpha: float = 1.2, cap: float = 8.0,
 
 
 # --------------------------------------------------------------------------- #
+@register("trace")
+def trace(seed: int = 0, file: str = "", window: int = 5000,
+          speedup: float = 1.0, class_map: str = "",
+          n_ai_requests: int = 0) -> Dict:
+    """Cluster-trace replay on the paper topology: arrivals, classes, and
+    token lengths come from a CSV/JSONL trace file (see
+    :mod:`repro.sim.tracefile` for the schema) instead of the synthetic
+    Poisson generator.  ``window`` is the streaming refill granularity
+    (memory knob — never affects results), ``speedup`` divides arrival
+    times, ``class_map`` maps trace labels to large/small
+    (``"chat=small,batch=large"``), and ``n_ai_requests > 0`` caps replay
+    to a prefix of the trace.  ``file=""`` replays the built-in synthetic
+    diurnal trace (deterministic in ``seed``) — the zero-setup default
+    and the cross-engine equivalence fixture.  No RAN requests are
+    synthesized — the RAN summary row is NaN, the AI rows carry the
+    result."""
+    sc = paper_scenario()
+    sc = _finish(sc, "trace", seed,
+                 {"file": str(file), "window": int(window),
+                  "speedup": float(speedup), "class_map": str(class_map),
+                  "n_ai_requests": int(n_ai_requests)},
+                 rho=1.0, n_ai_requests=n_ai_requests)
+    sc["workload"].update(kind="trace", file=str(file), window=int(window),
+                          speedup=float(speedup), class_map=str(class_map))
+    if n_ai_requests <= 0:
+        # 0 = replay the whole trace; the harness's n_ai_requests override
+        # still applies as a row cap when set
+        sc["workload"]["n_ai_requests"] = 0
+    return sc
+
+
+# --------------------------------------------------------------------------- #
 @register("node-outage")
 def node_outage(seed: int = 0, n_outages: int = 2, outage_s: float = 25.0,
                 rho: float = 0.8, n_ai_requests: int = 5000) -> Dict:

@@ -143,101 +143,203 @@ def mean_request_work(models: Dict[str, List[ServiceWorkModel]],
     return cfg.large_fraction * w_l + (1 - cfg.large_fraction) * w_s
 
 
-def generate_workload(cfg: WorkloadConfig,
-                      models: Dict[str, List[ServiceWorkModel]]
-                      ) -> Tuple[List[Request], Dict[str, float]]:
-    """Returns (requests sorted by arrival, info dict with λ, horizon, W̄)."""
-    rng = np.random.default_rng(cfg.seed)
-    w_bar = mean_request_work(models, cfg)
-    lam = cfg.rho * cfg.ai_capacity / w_bar              # ρ = λ W̄ / G
-    horizon = cfg.n_ai_requests / lam
+# --------------------------------------------------------------------------- #
+# chunked generation (streaming core)
+# --------------------------------------------------------------------------- #
+# Internal generation chunk: a fixed constant, deliberately independent of
+# any user-facing window, so the realization is a pure function of (cfg,
+# models) — re-chunking a stream can never change what it emits.
+GEN_CHUNK = 4096
 
-    requests: List[Request] = []
-    rid = 0
+# rng stream tags: AI (Q^e) and RAN (Q^r) substreams draw from separate
+# seeded generators so each can be produced chunk-by-chunk in arrival
+# order without consuming the other's draws
+_AI_STREAM = 0x514545      # "QEE"
+_RAN_STREAM = 0x515252     # "QRR"
 
-    # ---- Q^e: AI service requests (Poisson, lognormal lengths) ---------- #
-    inter = rng.exponential(1.0 / lam, cfg.n_ai_requests)
-    arrivals = np.cumsum(inter)
-    is_large = rng.random(cfg.n_ai_requests) < cfg.large_fraction
-    cells = rng.integers(0, cfg.n_cells, cfg.n_ai_requests)
 
+def _ai_requests(cfg: WorkloadConfig,
+                 models: Dict[str, List[ServiceWorkModel]],
+                 lam: float):
+    """Q^e substream: chunked Poisson arrivals with Azure-like lengths.
+
+    Per chunk the draw phases mirror the classic generator (bulk arrays
+    first, then the per-request loop), all from one seeded substream."""
+    rng = np.random.default_rng([cfg.seed, _AI_STREAM])
     pareto = cfg.ai_length_kind == "pareto"
     if pareto:
-        a, c = cfg.ai_length_alpha, cfg.ai_length_cap
-        lp = _pareto_len(rng, LARGE_PROMPT, a, c, cfg.n_ai_requests)
-        lo = _pareto_len(rng, LARGE_OUTPUT, a, c, cfg.n_ai_requests)
-        sp = _pareto_len(rng, SMALL_PROMPT, a, c, cfg.n_ai_requests)
-        so = _pareto_len(rng, SMALL_OUTPUT, a, c, cfg.n_ai_requests)
         mean_l = mean_tokens(LARGE_PROMPT) + mean_tokens(LARGE_OUTPUT)
         mean_s = mean_tokens(SMALL_PROMPT) + mean_tokens(SMALL_OUTPUT)
-    else:
-        lp = _lognormal_len(rng, *LARGE_PROMPT, cfg.n_ai_requests)
-        lo = _lognormal_len(rng, *LARGE_OUTPUT, cfg.n_ai_requests)
-        sp = _lognormal_len(rng, *SMALL_PROMPT, cfg.n_ai_requests)
-        so = _lognormal_len(rng, *SMALL_OUTPUT, cfg.n_ai_requests)
-
-    for i in range(cfg.n_ai_requests):
-        if is_large[i]:
-            model = models["large"][rng.integers(len(models["large"]))]
-            flops, cpu, kv = model.work(rng, int(lp[i]), int(lo[i]))
-            deadline = rng.uniform(*cfg.large_deadline)
-            cls = RequestClass.LARGE_AI
-            if pareto:        # KV grows sublinearly with context length
-                kv *= min((int(lp[i]) + int(lo[i])) / mean_l, 4.0)
+    t = 0.0
+    rid = 0
+    remaining = cfg.n_ai_requests
+    while remaining > 0:
+        c = min(GEN_CHUNK, remaining)
+        arrivals = t + np.cumsum(rng.exponential(1.0 / lam, c))
+        t = float(arrivals[-1])
+        is_large = rng.random(c) < cfg.large_fraction
+        cells = rng.integers(0, cfg.n_cells, c)
+        if pareto:
+            a, cap = cfg.ai_length_alpha, cfg.ai_length_cap
+            lp = _pareto_len(rng, LARGE_PROMPT, a, cap, c)
+            lo = _pareto_len(rng, LARGE_OUTPUT, a, cap, c)
+            sp = _pareto_len(rng, SMALL_PROMPT, a, cap, c)
+            so = _pareto_len(rng, SMALL_OUTPUT, a, cap, c)
         else:
-            model = models["small"][rng.integers(len(models["small"]))]
-            flops, cpu, kv = model.work(rng, int(sp[i]), int(so[i]))
-            deadline = rng.uniform(*cfg.small_deadline)
-            cls = RequestClass.SMALL_AI
-            if pareto:
-                kv *= min((int(sp[i]) + int(so[i])) / mean_s, 4.0)
-        requests.append(Request(
-            rid=rid, cls=cls, arrival=float(arrivals[i]), deadline=deadline,
-            cell=int(cells[i]), ai_work_g=flops, ai_work_c=cpu, kv_bytes=kv,
-            service=model.arch))
-        rid += 1
+            lp = _lognormal_len(rng, *LARGE_PROMPT, c)
+            lo = _lognormal_len(rng, *LARGE_OUTPUT, c)
+            sp = _lognormal_len(rng, *SMALL_PROMPT, c)
+            so = _lognormal_len(rng, *SMALL_OUTPUT, c)
+        for i in range(c):
+            if is_large[i]:
+                model = models["large"][rng.integers(len(models["large"]))]
+                flops, cpu, kv = model.work(rng, int(lp[i]), int(lo[i]))
+                deadline = rng.uniform(*cfg.large_deadline)
+                cls = RequestClass.LARGE_AI
+                if pareto:    # KV grows sublinearly with context length
+                    kv *= min((int(lp[i]) + int(lo[i])) / mean_l, 4.0)
+            else:
+                model = models["small"][rng.integers(len(models["small"]))]
+                flops, cpu, kv = model.work(rng, int(sp[i]), int(so[i]))
+                deadline = rng.uniform(*cfg.small_deadline)
+                cls = RequestClass.SMALL_AI
+                if pareto:
+                    kv *= min((int(sp[i]) + int(so[i])) / mean_s, 4.0)
+            yield Request(
+                rid=rid, cls=cls, arrival=float(arrivals[i]),
+                deadline=deadline, cell=int(cells[i]), ai_work_g=flops,
+                ai_work_c=cpu, kv_bytes=kv, service=model.arch)
+            rid += 1
+        remaining -= c
 
-    # ---- Q^r: RAN-only requests (URLLC / eMBB) --------------------------- #
-    # TTI-aligned bursts: with prob ran_burst_prob an arrival event carries
-    # 2–4 same-cell requests (scheduling bursts), briefly exceeding a weak
-    # node's DU floor feasibility — the realistic source of RAN misses.
-    n_ran = int(cfg.n_ai_requests * cfg.ran_per_ai)
+
+def _ran_requests(cfg: WorkloadConfig, horizon: float, n_ran: int,
+                  rid0: int):
+    """Q^r substream: chunked URLLC/eMBB arrivals with TTI-aligned bursts.
+
+    With prob ran_burst_prob an arrival event carries 2–4 same-cell
+    requests (scheduling bursts) at ``+ b * 1e-5`` offsets, briefly
+    exceeding a weak node's DU floor feasibility — the realistic source
+    of RAN misses.  Burst offsets can leapfrog a following event when
+    inter-event gaps are tiny, so each chunk is sorted and a small tail
+    (requests past the chunk's final event) is carried into the next
+    chunk — emission stays globally sorted by arrival.
+    """
+    if n_ran <= 0:
+        return
+    rng = np.random.default_rng([cfg.seed, _RAN_STREAM])
     mean_burst = 1 + cfg.ran_burst_prob * 1.5
     n_events_r = max(int(n_ran / mean_burst), 1)
     lam_r_ev = n_events_r / horizon
-    arrivals_r = np.cumsum(rng.exponential(1.0 / lam_r_ev, n_events_r))
+    t = 0.0
+    rid = rid0
     emitted = 0
-    for i in range(n_events_r):
-        if emitted >= n_ran:
-            break
-        burst = int(rng.integers(2, 4)) if rng.random() < cfg.ran_burst_prob \
-            else 1
-        burst = min(burst, n_ran - emitted)
-        cell = int(rng.integers(0, cfg.n_cells))
-        for b in range(burst):
-            if rng.random() < cfg.urllc_fraction:
-                du = rng.uniform(*cfg.urllc_du_flops)
-                cu = rng.uniform(*cfg.urllc_cuup_secs)
-                deadline = URLLC_DEADLINE
-            else:
-                du = rng.uniform(*cfg.embb_du_flops)
-                cu = rng.uniform(*cfg.embb_cuup_secs)
-                deadline = EMBB_DEADLINE
-            requests.append(Request(
-                rid=rid, cls=RequestClass.RAN,
-                arrival=float(arrivals_r[i]) + b * 1e-5,
-                deadline=deadline, cell=cell,
-                du_work_g=du, du_work_c=0.0,         # DU is GPU-bound (§II)
-                cuup_work_c=cu))
-            rid += 1
-            emitted += 1
-    lam_r = emitted / horizon
+    events_left = n_events_r
+    carry: List[Request] = []
+    while events_left > 0 and emitted < n_ran:
+        ce = min(GEN_CHUNK, events_left)
+        base = t + np.cumsum(rng.exponential(1.0 / lam_r_ev, ce))
+        t = float(base[-1])
+        events_left -= ce
+        out = carry
+        carry = []
+        last_base = 0.0
+        for i in range(ce):
+            if emitted >= n_ran:
+                break
+            burst = int(rng.integers(2, 4)) \
+                if rng.random() < cfg.ran_burst_prob else 1
+            burst = min(burst, n_ran - emitted)
+            cell = int(rng.integers(0, cfg.n_cells))
+            last_base = float(base[i])
+            for b in range(burst):
+                if rng.random() < cfg.urllc_fraction:
+                    du = rng.uniform(*cfg.urllc_du_flops)
+                    cu = rng.uniform(*cfg.urllc_cuup_secs)
+                    deadline = URLLC_DEADLINE
+                else:
+                    du = rng.uniform(*cfg.embb_du_flops)
+                    cu = rng.uniform(*cfg.embb_cuup_secs)
+                    deadline = EMBB_DEADLINE
+                out.append(Request(
+                    rid=rid, cls=RequestClass.RAN,
+                    arrival=last_base + b * 1e-5,
+                    deadline=deadline, cell=cell,
+                    du_work_g=du, du_work_c=0.0,   # DU is GPU-bound (§II)
+                    cuup_work_c=cu))
+                rid += 1
+                emitted += 1
+        out.sort(key=lambda r: r.arrival)
+        if events_left > 0 and emitted < n_ran:
+            cut = len(out)
+            while cut > 0 and out[cut - 1].arrival > last_base:
+                cut -= 1
+            carry = out[cut:]
+            out = out[:cut]
+        yield from out
+    yield from carry
 
-    requests.sort(key=lambda r: r.arrival)
-    info = {"lambda_ai": lam, "lambda_ran": lam_r, "horizon": horizon,
-            "mean_work": w_bar,
+
+def _merge_sorted(a, b, chunk: int = GEN_CHUNK):
+    """Merge two arrival-sorted request iterators into sorted chunks.
+
+    Ties emit ``a`` first (AI before RAN — the order the classic global
+    stable sort produced from its [AI block, RAN block] list)."""
+    ra = next(a, None)
+    rb = next(b, None)
+    out: List[Request] = []
+    while ra is not None or rb is not None:
+        if rb is None or (ra is not None and ra.arrival <= rb.arrival):
+            out.append(ra)
+            ra = next(a, None)
+        else:
+            out.append(rb)
+            rb = next(b, None)
+        if len(out) >= chunk:
+            yield out
+            out = []
+    if out:
+        yield out
+
+
+def workload_stream(cfg: WorkloadConfig,
+                    models: Dict[str, List[ServiceWorkModel]]):
+    """The chunked-stream form of the workload (O(GEN_CHUNK) memory).
+
+    Returns an :class:`repro.sim.stream.ArrivalStream` whose metadata
+    carries the analytic horizon (n/λ) and nominal request count, so the
+    engine never needs a full-list ``max(r.arrival)`` scan.  The stream
+    is restartable: every ``chunks()`` pass regenerates the identical
+    realization from the seeded substreams.
+    """
+    from repro.sim.stream import ArrivalStream
+
+    w_bar = mean_request_work(models, cfg)
+    lam = cfg.rho * cfg.ai_capacity / w_bar              # ρ = λ W̄ / G
+    horizon = cfg.n_ai_requests / lam
+    n_ran = int(cfg.n_ai_requests * cfg.ran_per_ai)
+    info = {"lambda_ai": lam, "lambda_ran": n_ran / horizon,
+            "horizon": horizon, "mean_work": w_bar,
             "large_demand_flops":
                 lam * cfg.large_fraction
                 * np.mean([m.flops_per_token for m in models["large"]])
                 * (mean_tokens(LARGE_PROMPT) + mean_tokens(LARGE_OUTPUT))}
-    return requests, info
+
+    def factory():
+        return _merge_sorted(
+            _ai_requests(cfg, models, lam),
+            _ran_requests(cfg, horizon, n_ran, cfg.n_ai_requests))
+    return ArrivalStream(factory, horizon=horizon,
+                         n_requests=cfg.n_ai_requests + n_ran, info=info)
+
+
+def generate_workload(cfg: WorkloadConfig,
+                      models: Dict[str, List[ServiceWorkModel]]
+                      ) -> Tuple[List[Request], Dict[str, float]]:
+    """Returns (requests sorted by arrival, info dict with λ, horizon, W̄).
+
+    The materialized view of :func:`workload_stream` — byte-identical to
+    consuming the stream chunk-by-chunk (the stream IS the generator).
+    """
+    stream = workload_stream(cfg, models)
+    return stream.to_list(), dict(stream.info)

@@ -1,0 +1,396 @@
+"""Streaming arrival-path equivalence + the trace workload family.
+
+The PR-7 contract: a streamed run is *bit-identical* to the materialized
+run — same drops, same migrations, same completion times, same
+``summary()`` — for every window size, with ``retain_requests`` on or
+off.  These tests pin that contract across scenario families, engines,
+and the solo/batched drivers, plus the window-edge cases that only the
+refill path exercises (arrivals exactly at chunk boundaries, RAN burst
+ties, a drained heap mid-gap, truncation mid-window).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim import Simulator, make_scenario
+from repro.sim.engine import DeadlineAwareAllocation, StaticPlacement
+from repro.sim.scenarios.workload import workload_for, workload_stream_for
+from repro.sim.stream import ArrivalStream, ListStream, as_arrival_stream
+from repro.sim.types import RequestClass
+
+STREAM_FAMILIES = ("paper", "flash-crowd", "heavy-tail")
+
+
+def _canon(summary):
+    return {k: None if isinstance(v, float) and math.isnan(v) else v
+            for k, v in summary.items()}
+
+
+def _fingerprint(res):
+    return (_canon(res.summary()), res.n_events, res.infeasible_events,
+            sorted(res.dropped), res.truncated,
+            [(r.rid, r.finish, r.target_sid) for r in res.requests],
+            [(t, a.sid, a.src, a.dst) for t, a in res.migrations])
+
+
+def _run(sc, workload, engine="numpy", retain=True, max_events=5_000_000):
+    sim = Simulator(sc, engine=engine)
+    return sim.run(workload, StaticPlacement(), DeadlineAwareAllocation(),
+                   retain_requests=retain, max_events=max_events)
+
+
+# --------------------------------------------------------------------------- #
+# streamed == materialized: families x engines x {solo, batched}
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("family", STREAM_FAMILIES)
+@pytest.mark.parametrize("engine", ("numpy", "jax"))
+def test_streamed_matches_materialized_solo(family, engine):
+    if engine == "jax":
+        pytest.importorskip("jax")
+    sc = make_scenario(family, seed=0)
+    stream = workload_stream_for(sc, seed=1, n_ai_requests=150)
+    a = _run(sc, stream.materialize(), engine=engine)
+    b = _run(sc, stream.rechunked(48), engine=engine)
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+@pytest.mark.parametrize("family", STREAM_FAMILIES)
+def test_streamed_matches_materialized_batched(family):
+    sc = make_scenario(family, seed=0)
+    seeds = (0, 1, 2)
+    srcs = [workload_stream_for(sc, seed=s, n_ai_requests=120)
+            for s in seeds]
+    sim = Simulator(sc)
+    a = sim.run_batch([s.materialize() for s in srcs],
+                      lambda b: StaticPlacement(),
+                      lambda b: DeadlineAwareAllocation())
+    b = sim.run_batch([s.rechunked(33) for s in srcs],
+                      lambda b: StaticPlacement(),
+                      lambda b: DeadlineAwareAllocation())
+    assert [_fingerprint(r) for r in a] == [_fingerprint(r) for r in b]
+
+
+def test_window_size_never_changes_outcomes():
+    """The window is a memory knob: every size yields the same run."""
+    sc = make_scenario("paper", seed=0)
+    src = workload_stream_for(sc, seed=2, n_ai_requests=120)
+    ref = _fingerprint(_run(sc, src.materialize()))
+    for window in (1, 7, 64, 10_000):
+        assert _fingerprint(_run(sc, src.rechunked(window))) == ref, \
+            f"window={window}"
+
+
+def test_raw_list_keeps_legacy_scan_horizon():
+    """A plain request list (no metadata) keeps the pre-stream behavior:
+    the epoch schedule derives from ``max(r.arrival)`` instead of the
+    analytic horizon, so ``n_events`` may differ from a metadata-carrying
+    stream by trailing empty epochs — every discrete outcome (summary,
+    drops, finishes, migrations) must still be identical."""
+    sc = make_scenario("paper", seed=0)
+    stream = workload_stream_for(sc, seed=2, n_ai_requests=120)
+    a = _fingerprint(_run(sc, stream.to_list()))
+    b = _fingerprint(_run(sc, stream.rechunked(40)))
+    assert a[0] == b[0]            # summary
+    assert a[3:] == b[3:]          # drops, truncation, finishes, migrations
+
+
+# --------------------------------------------------------------------------- #
+# window-boundary semantics only the refill path exercises
+# --------------------------------------------------------------------------- #
+def test_arrivals_exactly_at_window_edges():
+    """Duplicate arrival times straddling a chunk boundary must pop in
+    emit order — the refill's ``>=`` comparison keeps pulling through
+    exact ties split across chunks."""
+    sc = make_scenario("paper", seed=0)
+    reqs, _ = workload_for(sc, seed=3, n_ai_requests=120)
+    # forge exact ties at positions 9/10/11 and 19/20 (window=10 puts the
+    # tie on both sides of the first two refill edges)
+    reqs = [dataclasses.replace(r) for r in reqs]
+    for i in (9, 10, 11):
+        reqs[i] = dataclasses.replace(reqs[i], arrival=reqs[9].arrival)
+    for i in (19, 20):
+        reqs[i] = dataclasses.replace(reqs[i], arrival=reqs[19].arrival)
+    bulk = ListStream([dataclasses.replace(r) for r in reqs])
+    windowed = ListStream(reqs, window=10)
+    assert _fingerprint(_run(sc, bulk)) == _fingerprint(_run(sc, windowed))
+
+
+def test_ran_burst_ties_with_window_one():
+    """RAN bursts arrive at ``base + b * 1e-5`` offsets: window=1 forces a
+    refill between every burst member, the harshest tie-ordering case."""
+    sc = make_scenario("paper", seed=0)
+    stream = workload_stream_for(sc, seed=4, n_ai_requests=100)
+    n_ran = sum(1 for r in stream.to_list()
+                if r.cls is RequestClass.RAN)
+    assert n_ran > 10   # the scenario really has RAN bursts to order
+    assert _fingerprint(_run(sc, stream.materialize())) == \
+        _fingerprint(_run(sc, stream.rechunked(1)))
+
+
+def test_refill_across_drained_heap_gap():
+    """A long arrival gap drains the heap mid-run; the next window must
+    still load (refill triggers on heap-top >= loaded_until, with an
+    empty heap treated as +inf)."""
+    sc = make_scenario("paper", seed=0)
+    reqs, _ = workload_for(sc, seed=5, n_ai_requests=60)
+    reqs = sorted((dataclasses.replace(r) for r in reqs),
+                  key=lambda r: r.arrival)
+    # push the last third of the trace far past the busy period
+    gap = [dataclasses.replace(r, arrival=r.arrival + 500.0)
+           for r in reqs[40:]]
+    trace = reqs[:40] + gap
+    bulk = ListStream([dataclasses.replace(r) for r in trace])
+    windowed = ListStream(trace, window=16)
+    a, b = _run(sc, bulk), _run(sc, windowed)
+    assert _fingerprint(a) == _fingerprint(b)
+    assert all(r.finish >= 500.0 for r in a.requests[40:])  # gap really ran
+
+
+def test_max_events_truncation_mid_window():
+    """Truncation with unloaded windows: the never-loaded tail still
+    counts into ``n_requests`` (drained at result time) and the
+    accumulator books it as violated — identically for both paths."""
+    sc = make_scenario("paper", seed=0)
+    stream = workload_stream_for(sc, seed=6, n_ai_requests=200)
+    n_total = len(stream.to_list())
+    a = _run(sc, stream.materialize(), max_events=300)
+    b = _run(sc, stream.rechunked(25), max_events=300, retain=False)
+    assert a.truncated and b.truncated
+    assert a.n_events == b.n_events
+    assert _canon(a.summary()) == _canon(b.summary())
+    assert a.n_requests == b.n_requests == n_total
+    assert a.violation_counts() == b.violation_counts()
+
+
+# --------------------------------------------------------------------------- #
+# retain_requests=False: summaries from the streaming accumulators
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("family", STREAM_FAMILIES)
+def test_retain_requests_off_identical_summary(family):
+    sc = make_scenario(family, seed=0)
+    stream = workload_stream_for(sc, seed=1, n_ai_requests=150)
+    ref = _run(sc, stream.materialize())
+    res = _run(sc, stream.rechunked(40), retain=False)
+    assert len(res.requests) == 0
+    assert res.n_requests == len(ref.requests)
+    assert _canon(res.summary()) == _canon(ref.summary())
+    assert res.violation_counts() == ref.violation_counts()
+    assert res.fulfillment() == ref.fulfillment()
+
+
+def test_summary_nan_semantics_without_ran():
+    """A trace with no RAN arrivals keeps the NaN (absent-class) summary
+    entries under both the request-scan and accumulator paths."""
+    sc = make_scenario("trace", n_ai_requests=150)
+    stream = workload_stream_for(sc, seed=0)
+    res = _run(sc, stream, retain=False)
+    assert math.isnan(res.summary()["ran"])
+    assert "RAN" not in res.fulfillment()
+    assert res.violation_counts()["ran"] == (0, 0)
+
+
+def test_obs_trace_counters_reconcile_streamed():
+    """obs arrival/completion/drop counters must reconcile exactly against
+    the streaming accumulators when no request list is retained."""
+    from repro.obs import ObsConfig
+
+    sc = make_scenario("flash-crowd", seed=0)
+    stream = workload_stream_for(sc, seed=1, n_ai_requests=300, window=64)
+    sim = Simulator(sc, drop_expired=True)
+    res = sim.run(stream, StaticPlacement(), DeadlineAwareAllocation(),
+                  retain_requests=False, obs=ObsConfig(trace=True))
+    counts = res.trace.counts(0)
+    assert res.dropped, "flash-crowd should drop; workload too small"
+    assert counts["arrival"] == res.n_requests
+    assert counts["drop"] == len(res.dropped)
+    assert counts["completion"] == res.n_requests - len(res.dropped)
+
+
+# --------------------------------------------------------------------------- #
+# the ArrivalStream abstraction itself
+# --------------------------------------------------------------------------- #
+def test_stream_is_restartable_and_deterministic():
+    sc = make_scenario("heavy-tail", seed=0)
+    stream = workload_stream_for(sc, seed=7, n_ai_requests=100)
+    first = [(r.rid, r.arrival, r.kv_bytes) for r in stream.to_list()]
+    second = [(r.rid, r.arrival, r.kv_bytes) for r in stream.to_list()]
+    assert first == second
+
+
+def test_rechunked_preserves_content_and_metadata():
+    sc = make_scenario("paper", seed=0)
+    stream = workload_stream_for(sc, seed=0, n_ai_requests=80)
+    re = stream.rechunked(13)
+    assert re.horizon == stream.horizon
+    assert [r.rid for c in re.chunks() for r in c] == \
+        [r.rid for r in stream.to_list()]
+    assert all(len(c) <= 13 for c in re.chunks())
+
+
+def test_materialize_keeps_analytic_horizon_and_clones_lazily():
+    sc = make_scenario("paper", seed=0)
+    stream = workload_stream_for(sc, seed=0, n_ai_requests=80)
+    mat = stream.materialize()
+    assert mat.horizon == stream.horizon
+    # the engine mutates finish/target on the requests it sees; a cloned
+    # ListStream must leave the backing list untouched across replays
+    a = _run(sc, mat)
+    assert all(r.finish < 0.0 for r in mat.to_list())  # -1.0 = never run
+    b = _run(sc, mat)
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_as_arrival_stream_passthrough_and_wrap():
+    sc = make_scenario("paper", seed=0)
+    stream = workload_stream_for(sc, seed=0, n_ai_requests=50)
+    assert as_arrival_stream(stream) is stream
+    reqs = stream.to_list()
+    wrapped = as_arrival_stream(reqs)
+    assert isinstance(wrapped, ArrivalStream)
+    # legacy list input: horizon falls back to the arrival scan
+    assert wrapped.horizon == max(r.arrival for r in reqs)
+
+
+# --------------------------------------------------------------------------- #
+# the trace workload family (CSV/JSONL replay + built-in synthetic)
+# --------------------------------------------------------------------------- #
+def test_trace_builtin_synthetic_matches_written_csv(tmp_path):
+    """file='' replays the same rows the CSV writer emits, so a written
+    trace at the same (n, seed) must reproduce the built-in run."""
+    from repro.sim.tracefile import write_synthetic_trace
+
+    path = tmp_path / "trace.csv"
+    write_synthetic_trace(str(path), 300, seed=5)
+    sc_file = make_scenario("trace", file=str(path))
+    sc_builtin = make_scenario("trace", n_ai_requests=300)
+    a = _run(sc_file, workload_stream_for(sc_file, seed=5))
+    b = _run(sc_builtin, workload_stream_for(sc_builtin, seed=5))
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_trace_jsonl_matches_csv(tmp_path):
+    from repro.sim.tracefile import write_synthetic_trace
+
+    csv_p, jsonl_p = tmp_path / "t.csv", tmp_path / "t.jsonl"
+    write_synthetic_trace(str(csv_p), 200, seed=1)
+    write_synthetic_trace(str(jsonl_p), 200, seed=1)
+    sc_a = make_scenario("trace", file=str(csv_p))
+    sc_b = make_scenario("trace", file=str(jsonl_p))
+    a = _run(sc_a, workload_stream_for(sc_a, seed=1))
+    b = _run(sc_b, workload_stream_for(sc_b, seed=1))
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_trace_window_and_retain_invariance():
+    sc = make_scenario("trace", n_ai_requests=250)
+    ref = _run(sc, workload_stream_for(sc, seed=3))
+    for window in (1, 17, 4096):
+        res = _run(sc, workload_stream_for(sc, seed=3, window=window),
+                   retain=False)
+        assert _canon(res.summary()) == _canon(ref.summary())
+        assert res.n_requests == ref.n_requests
+        assert res.violation_counts() == ref.violation_counts()
+
+
+def test_trace_seed_changes_realization():
+    sc = make_scenario("trace", n_ai_requests=200)
+    a = workload_stream_for(sc, seed=0).to_list()
+    b = workload_stream_for(sc, seed=1).to_list()
+    assert [r.arrival for r in a] != [r.arrival for r in b]
+
+
+def test_trace_speedup_compresses_arrivals():
+    sc1 = make_scenario("trace", n_ai_requests=200)
+    sc2 = make_scenario("trace", n_ai_requests=200, speedup=2.0)
+    a = workload_stream_for(sc1, seed=0).to_list()
+    b = workload_stream_for(sc2, seed=0).to_list()
+    np.testing.assert_allclose([r.arrival for r in b],
+                               [r.arrival / 2.0 for r in a], rtol=1e-12)
+
+
+def test_trace_class_map_relabels(tmp_path):
+    from repro.sim.tracefile import parse_class_map
+
+    assert parse_class_map("chat=small,batch=large") == \
+        {"chat": "small", "batch": "large"}
+    with pytest.raises(ValueError):
+        parse_class_map("chat=медиум")
+
+    path = tmp_path / "labels.csv"
+    path.write_text("arrival,cls,prompt_tokens,output_tokens\n"
+                    "0.5,chat,120,40\n1.0,batch,900,300\n"
+                    "1.5,chat,80,20\n")
+    sc = make_scenario("trace", file=str(path),
+                       class_map="chat=small,batch=large")
+    reqs = workload_stream_for(sc, seed=0).to_list()
+    assert [r.cls for r in reqs] == [RequestClass.SMALL_AI,
+                                     RequestClass.LARGE_AI,
+                                     RequestClass.SMALL_AI]
+
+
+def test_trace_rejects_unsorted_arrivals(tmp_path):
+    path = tmp_path / "bad.csv"
+    path.write_text("arrival,cls,prompt_tokens,output_tokens\n"
+                    "2.0,small,10,10\n1.0,small,10,10\n")
+    sc = make_scenario("trace", file=str(path))
+    with pytest.raises(ValueError, match="sorted|nondecreasing"):
+        workload_stream_for(sc, seed=0).to_list()
+
+
+def test_trace_bounded_memory_replay():
+    """A windowed trace replay with retain_requests=False keeps no
+    per-request state: the result carries counts, not lists."""
+    sc = make_scenario("trace", n_ai_requests=2000)
+    stream = workload_stream_for(sc, seed=0, window=256)
+    res = _run(sc, stream, retain=False)
+    assert res.requests == [] and res.n_requests == 2000
+    counts = res.violation_counts()
+    assert counts["overall"][0] == 2000
+    assert counts["large_ai"][0] + counts["small_ai"][0] == 2000
+
+
+# --------------------------------------------------------------------------- #
+# spec plumbing: stream/window are memory knobs, not identity
+# --------------------------------------------------------------------------- #
+def test_spec_identity_hash_ignores_stream_and_window():
+    from repro.exp import ExperimentSpec, parse_methods, parse_scenarios
+
+    base = dict(methods=parse_methods("haf-static"),
+                scenarios=parse_scenarios("paper"), seeds=(0,))
+    a = ExperimentSpec(**base)
+    b = ExperimentSpec(**base, stream=True, window=512)
+    assert a.identity_hash() == b.identity_hash()
+    assert a.spec_hash() != b.spec_hash()
+
+
+def test_spec_identity_hash_ignores_trace_window_param():
+    from repro.exp import ExperimentSpec, parse_methods, parse_scenarios
+
+    mk = lambda s: ExperimentSpec(methods=parse_methods("haf-static"),
+                                  scenarios=parse_scenarios(s), seeds=(0,))
+    a = mk("trace(n_ai_requests=200, window=100)")
+    b = mk("trace(n_ai_requests=200, window=9000)")
+    c = mk("trace(n_ai_requests=300, window=100)")
+    assert a.identity_hash() == b.identity_hash()
+    assert a.identity_hash() != c.identity_hash()
+
+
+def test_sweep_rows_identical_streamed():
+    """run_sweep with stream=True must produce the same result rows."""
+    import dataclasses as dc
+
+    from repro.eval import SweepSpec, run_sweep
+
+    spec = SweepSpec(methods=("haf-static",), scenarios=("paper",),
+                     seeds=(0, 1), n_ai_requests=120, workers=1)
+    rows_m = [r for r in run_sweep(spec) if r is not None]
+    rows_s = [r for r in run_sweep(dc.replace(spec, stream=True,
+                                              window=50)) if r is not None]
+    key = lambda r: (r["method"], r["scenario"], r["seed"])  # noqa: E731
+    for m, s in zip(sorted(rows_m, key=key), sorted(rows_s, key=key)):
+        assert key(m) == key(s)
+        assert m["overall"] == s["overall"]
+        assert m["n_events"] == s["n_events"]
+        assert m["n_requests"] == s["n_requests"]
