@@ -16,7 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=(None, "table2", "table3", "fig2", "roofline",
-                             "alloc", "fleet", "engine", "critic", "spec"))
+                             "alloc", "fleet", "engine", "critic", "spec",
+                             "chaos"))
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode (tiny request counts, 1 seed; the "
                          "engine bench still records BENCH_pr7.json and "
@@ -107,6 +108,12 @@ def main() -> None:
     if args.only in (None, "fleet"):
         from benchmarks import fleet_sweep
         fleet_sweep.main(smoke=args.smoke)
+    if args.only in (None, "chaos"):
+        # fault-injection tier: spot churn + a 35%-flaky LLM endpoint;
+        # asserts zero crashed jobs, nonzero degraded decisions, and
+        # exact trace reconciliation
+        from benchmarks import chaos_smoke
+        chaos_smoke.main(smoke=args.smoke)
     if args.only in (None, "roofline"):
         from benchmarks import roofline_report
         roofline_report.main()

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import prompts
 from repro.core.placement import action_id
+from repro.faults.errors import MalformedShortlistError
 from repro.sim.snapshot import EpochSnapshot
 from repro.sim.types import MigrationAction
 
@@ -81,7 +82,16 @@ class ExternalLLMAgent(Agent):
         text = self.complete(prompt)
         self.last_response = text
         out = prompts.parse_response(text, candidates, K)
-        return out or [None]
+        if not out:
+            # nothing in the reply maps to a candidate: a garbage or
+            # truncated completion, NOT a "no migration" choice (that
+            # parses as [None]) — raise the typed taxonomy error so the
+            # controller can degrade instead of silently staying put
+            tail = (text or "").strip()[-200:]
+            raise MalformedShortlistError(
+                "LLM reply contained no recognizable shortlist"
+                + (f": ...{tail!r}" if tail else " (empty reply)"))
+        return out
 
 
 # --------------------------------------------------------------------------- #

@@ -76,8 +76,8 @@ class _FloorsAllocationBase:
             fl[0, :k] = fg
             fl[1, :k] = fc
             alloc = _active_set_rows(
-                w, fl, np.array([float(cluster.gpu_capacity[n]),
-                                 float(cluster.cpu_capacity[n])]))
+                w, fl, np.array([float(cluster.gpu_eff[n]),
+                                 float(cluster.cpu_eff[n])]))
             idx = np.asarray(sids, np.int64)
             cluster.alloc_g[idx] = alloc[0, :k]
             cluster.alloc_c[idx] = alloc[1, :k]
@@ -153,8 +153,8 @@ class AlphaSplitAllocation:
         for n in rows:
             a = self._alpha(n)
             for (res_psi, floors, cap, out) in (
-                    (psi_g[n], fg[n], float(cluster.gpu_capacity[n]), g_ns),
-                    (psi_c[n], fc[n], float(cluster.cpu_capacity[n]), c_ns)):
+                    (psi_g[n], fg[n], float(cluster.gpu_eff[n]), g_ns),
+                    (psi_c[n], fc[n], float(cluster.cpu_eff[n]), c_ns)):
                 ran_w = ((res_psi > 0) & is_ran & mask[n]).astype(float)
                 ai_w = ((res_psi > 0) & ~is_ran & mask[n]).astype(float)
                 has_ran, has_ai = ran_w.any(), ai_w.any()

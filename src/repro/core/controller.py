@@ -20,25 +20,37 @@ from typing import List, Optional, Sequence
 from repro.core.agent import Agent
 from repro.core.critic import Critic
 from repro.core.placement import candidate_actions
+from repro.faults.errors import LLMEndpointError
 from repro.sim.snapshot import EpochSnapshot
 from repro.sim.types import MigrationAction
 
 
 class HAFPlacement:
-    """The paper's placement layer. ``critic=None`` gives HAF-NoCritic."""
+    """The paper's placement layer. ``critic=None`` gives HAF-NoCritic.
+
+    ``fallback_agent`` arms the degradation ladder: when the primary
+    agent's shortlist raises :class:`LLMEndpointError` (its retry budget
+    is already spent inside the completion callable), the epoch decides
+    with the deterministic stand-in instead of propagating — the decision
+    is tagged via ``last_degraded`` so the engine counts and traces it.
+    """
 
     def __init__(self, agent: Agent, critic: Optional[Critic] = None,
-                 K: int = 3, min_score_margin: float = 0.005):
+                 K: int = 3, min_score_margin: float = 0.005,
+                 fallback_agent: Optional[Agent] = None):
         self.agent = agent
         self.critic = critic
         self.K = K
         self.min_score_margin = min_score_margin
+        self.fallback_agent = fallback_agent
         self.name = f"HAF({agent.name}{'+critic' if critic else ''})"
         self.last_shortlist: List[Optional[MigrationAction]] = []
         self.last_scores = None
         # predicted benefit of the decided action over no-migration
         # (critic score delta) — read by the trace recorder's decision log
         self.last_margin = None
+        # degradation reason of the latest decision (None = healthy)
+        self.last_degraded: Optional[str] = None
 
     def batch_key(self) -> tuple:
         """Replicas whose policies share this key decide as one group.
@@ -50,7 +62,10 @@ class HAFPlacement:
         if agent_key is None:
             agent_key = ("agent-inst", id(self.agent))
         critic_fp = self.critic.fingerprint() if self.critic else None
-        return (agent_key, critic_fp, self.K, self.min_score_margin)
+        fb = self.fallback_agent
+        fb_key = None if fb is None \
+            else (fb.batch_key() or ("agent-inst", id(fb)))
+        return (agent_key, critic_fp, self.K, self.min_score_margin, fb_key)
 
     def decide(self, snap: EpochSnapshot) -> Optional[MigrationAction]:
         return HAFPlacement.decide_group([self], [snap])[0]
@@ -83,17 +98,34 @@ class HAFPlacement:
             key = (type(pol.agent), akey, pol.K) if akey is not None \
                 else ("inst", id(pol.agent), pol.K)
             agent_groups.setdefault(key, []).append(i)
+        degraded: List[Optional[str]] = [None] * B
         for idxs in agent_groups.values():
-            rows = policies[idxs[0]].agent.shortlist_batch(
-                [snaps[i] for i in idxs], [m_ks[i] for i in idxs],
-                policies[idxs[0]].K)
+            lead = policies[idxs[0]]
+            try:
+                rows = lead.agent.shortlist_batch(
+                    [snaps[i] for i in idxs], [m_ks[i] for i in idxs],
+                    lead.K)
+                reason = None
+            except LLMEndpointError as err:
+                if lead.fallback_agent is None:
+                    raise
+                # degradation ladder: the retry budget is spent — this
+                # epoch decides with the deterministic stand-in.  A group
+                # only ever shares one agent instance (LLM agents key per
+                # instance), so the lead's fallback covers the group.
+                reason = err.kind
+                rows = lead.fallback_agent.shortlist_batch(
+                    [snaps[i] for i in idxs], [m_ks[i] for i in idxs],
+                    lead.K)
             for i, row in zip(idxs, rows):
                 shortlists[i] = row
+                degraded[i] = reason
         gated = []                     # (index, options) for critic scoring
         for i, (pol, shortlist) in enumerate(zip(policies, shortlists)):
             pol.last_shortlist = [a for a in shortlist if a is not None]
             pol.last_scores = None
             pol.last_margin = None
+            pol.last_degraded = degraded[i]
             if pol.critic is None:
                 # HAF-NoCritic: trust the agent's top-ranked candidate
                 out[i] = shortlist[0] if shortlist else None

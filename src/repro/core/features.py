@@ -31,6 +31,9 @@ ACT = 9            # φ[9:19]  action block (φ[9] = 1[a≠∅])
 SRC = 19           # φ[19:26] source-node block
 DST = 26           # φ[26:33] destination-node block
 DERIVED = 33       # φ[33:37] interaction terms
+CHURN = 37         # φ[37:40] spot-churn block (exactly zero when the
+                   # snapshot carries no churn signal, so critics trained
+                   # before churn existed see unchanged inputs)
 
 
 def _log1p_scale(x: np.ndarray, scale: float) -> np.ndarray:
@@ -120,6 +123,22 @@ def featurize_batch(snap: EpochSnapshot,
             - _log1p_scale(q_s / dst_g, 1.0)
         # outage cost proxy: R_s × service arrival pressure
         f[idx, DERIVED + 3] = _log1p_scale(rcfg * rates, 1.0)
+        # ---- spot-churn block (3): forced-evacuation context ------------- #
+        # src/dst at risk (draining on a preemption notice, or already at
+        # reduced capacity) and the dst's lost capacity fraction
+        scale = snap.node_scale
+        drain = snap.drain_until
+        if scale is not None or drain is not None:
+            if scale is None:
+                scale = np.ones(snap.N)
+            if drain is None:
+                drain = np.zeros(snap.N)
+            draining = drain > snap.t
+            src_risk = draining[srcs] | (scale[srcs] < 1.0)
+            dst_risk = draining[dsts] | (scale[dsts] < 1.0)
+            f[idx, CHURN] = src_risk.astype(np.float64)
+            f[idx, CHURN + 1] = dst_risk.astype(np.float64)
+            f[idx, CHURN + 2] = 1.0 - scale[dsts]
 
     return f.astype(np.float32)
 

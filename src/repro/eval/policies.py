@@ -115,26 +115,66 @@ def _load_critic(critic_path: Optional[str]):
     return load_critic_cached(path, expect_fingerprint=expected)
 
 
+def _load_critic_degradable(critic_path: Optional[str], on_error: str):
+    """(critic, degraded?) — ``on_error="degrade"`` turns a missing or
+    corrupt artifact into agent-only HAF (critic=None) instead of raising;
+    the marker is surfaced as the ``critic_degraded`` report column."""
+    if on_error == "raise":
+        return _load_critic(critic_path), False
+    try:
+        return _load_critic(critic_path), False
+    except Exception as err:  # noqa: BLE001 — the degradation ladder's
+        # whole point: any load failure (absent file, fingerprint
+        # mismatch, corrupt JSON) downgrades to agent-only
+        from repro.obs import diag
+        diag(f"# CRITIC DEGRADED (agent-only): {critic_path!r}: "
+             f"{type(err).__name__}: {err}")
+        return None, True
+
+
 @register_method("haf")
 def _haf(agent: str = "qwen3-32b-sim", seed: int = 0,
-         critic_path: Optional[str] = None, K: int = 3) -> MethodInstance:
+         critic_path: Optional[str] = None, K: int = 3,
+         critic_on_error: str = "raise") -> MethodInstance:
     from repro.core import HAFPlacement, make_agent
-    return (HAFPlacement(make_agent(agent, seed=seed),
-                         critic=_load_critic(critic_path), K=K),
-            DeadlineAwareAllocation(), False)
+    critic, critic_degraded = _load_critic_degradable(critic_path,
+                                                      critic_on_error)
+    pol = HAFPlacement(make_agent(agent, seed=seed), critic=critic, K=K)
+    pol.critic_degraded = critic_degraded
+    return pol, DeadlineAwareAllocation(), False
 
 
 @register_method("haf-llm")
 def _haf_llm(cmd: str, critic_path: Optional[str] = None, K: int = 3,
-             timeout: float = 120.0) -> MethodInstance:
+             timeout: float = 120.0, retries: int = 2,
+             backoff_s: float = 0.25, deadline_s: Optional[float] = None,
+             fallback_agent: Optional[str] = "qwen3-32b-sim",
+             fallback_seed: int = 0,
+             critic_on_error: str = "degrade") -> MethodInstance:
     """HAF with a real LLM agent behind ``cmd`` (stdin prompt -> stdout).
 
     Spec sugar: ``"haf-llm:<cmd>"`` on the CLI.  Batched sweeps run these
     cells too — the epoch pipeline falls back to one completion call per
     replica while the critic still scores the group in one pass.
+
+    This is the hardened external path: endpoint crashes/timeouts retry
+    with exponential backoff under the ``deadline_s`` wall budget; once
+    the budget is spent (or the reply is malformed), the epoch degrades
+    to the ``fallback_agent`` stand-in (``fallback_agent=None`` disables
+    degradation and re-raises).  A missing/corrupt critic artifact
+    degrades to agent-only by default (``critic_on_error="raise"`` to
+    restore strict loading).  Every degraded decision is counted in the
+    run summary and the obs trace.
     """
-    from repro.core import HAFPlacement
+    from repro.core import HAFPlacement, make_agent
     from repro.launch.serve import make_llm_agent
-    return (HAFPlacement(make_llm_agent(cmd, timeout),
-                         critic=_load_critic(critic_path), K=K),
-            DeadlineAwareAllocation(), False)
+    critic, critic_degraded = _load_critic_degradable(critic_path,
+                                                      critic_on_error)
+    fb = None if fallback_agent is None \
+        else make_agent(fallback_agent, seed=fallback_seed)
+    pol = HAFPlacement(
+        make_llm_agent(cmd, timeout, retries=retries, backoff_s=backoff_s,
+                       deadline_s=deadline_s),
+        critic=critic, K=K, fallback_agent=fb)
+    pol.critic_degraded = critic_degraded
+    return pol, DeadlineAwareAllocation(), False

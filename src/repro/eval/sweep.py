@@ -224,15 +224,24 @@ def run_job(job: Dict) -> Dict:
                   retain_requests=not streamed, obs=_obs_config(job))
     wall = time.time() - t0
     trace_path = _export_trace(job, res, str(job["seed"]))
-    return _result_row(job, res, wall, info, trace_path=trace_path)
+    row = _result_row(job, res, wall, info, trace_path=trace_path)
+    if getattr(placement, "critic_degraded", False):
+        row["critic_degraded"] = True
+    return row
 
 
-def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
+def run_batch_jobs(jobs: List[Dict],
+                   fallback_note: Optional[str] = None) -> List[Dict]:
     """One batched simulator run over same-cell jobs differing in seed.
 
     Builds the scenario once, realizes every seed's workload, and fans
     them into ``Simulator.run_batch`` — per-row results are identical to
     ``run_job`` per job; ``wall_s`` is the batch wall time divided evenly.
+
+    ``fallback_note`` marks a single-replica retry of a failed batch
+    group: the note is stamped on every row (``batch_fallback``) and one
+    DEGRADED record per row rides the obs trace, so the retry path is
+    visible in both reports and trace reconciliation.
     """
     from repro.sim import Simulator
 
@@ -259,15 +268,26 @@ def run_batch_jobs(jobs: List[Dict]) -> List[Dict]:
                             retain_requests=not streamed,
                             obs=_obs_config(base))
     wall = time.time() - t0
+    if fallback_note and results[0].trace is not None:
+        from repro.obs import DEGRADED, degraded_code
+        for b in range(len(results)):
+            results[0].trace.emit(DEGRADED, 0.0, b, -1,
+                                  degraded_code("batch-fallback"))
     # the recorder is shared by the whole block: export once, reference
     # the file from every row; trace_counts stay per-replica
     trace_path = _export_trace(
         base, results[0], "-".join(str(j["seed"]) for j in jobs))
-    return [dict(_result_row(job, res, wall / len(jobs), info,
+    rows = [dict(_result_row(job, res, wall / len(jobs), info,
                              b=b, trace_path=trace_path),
                  batch=len(jobs), b=b)
             for b, (job, res, info)
             in enumerate(zip(jobs, results, infos))]
+    for row, (placement, _, _) in zip(rows, methods):
+        if getattr(placement, "critic_degraded", False):
+            row["critic_degraded"] = True
+        if fallback_note:
+            row["batch_fallback"] = fallback_note
+    return rows
 
 
 def _result_row(job: Dict, res, wall: float, info: Dict,
@@ -290,6 +310,8 @@ def _result_row(job: Dict, res, wall: float, info: Dict,
         "engine_wall_s": res.wall_s,
         "events_per_sec": res.events_per_sec,
     })
+    if getattr(res, "degraded", None):
+        row["degraded_by_kind"] = dict(res.degraded)
     if res.profile is not None:
         row["profile"] = res.profile
     if res.timeseries is not None:
@@ -366,9 +388,11 @@ def run_sweep(spec: SweepSpec, verbose: bool = False,
         diag(f"# BATCH GROUP FAILED ({len(idxs)} jobs, "
              f"{job['method_label']} @ {job['scenario_label']}): "
              f"{type(err).__name__}: {err} — retrying per job")
+        note = (f"group of {len(idxs)} fell back to single-replica "
+                f"retries: {type(err).__name__}")
         for i in idxs:
             try:
-                rows[i] = run_batch_jobs([jobs[i]])[0]
+                rows[i] = run_batch_jobs([jobs[i]], fallback_note=note)[0]
             except Exception as err:        # noqa: BLE001
                 failed(i, err)
 

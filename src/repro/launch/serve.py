@@ -15,11 +15,14 @@ import argparse
 import json
 import pathlib
 import subprocess
+import time
 
 from repro.core import HAFPlacement, make_agent
 from repro.core.agent import ExternalLLMAgent
 from repro.core.critic import Critic, train_critic
 from repro.core.datagen import harvest
+from repro.faults.errors import LLMCrashError, LLMTimeoutError
+from repro.faults.retry import RetryPolicy, call_with_retries
 from repro.sim import (Simulator, WorkloadConfig, generate_workload,
                        paper_scenario)
 from repro.sim.engine import DeadlineAwareAllocation
@@ -28,7 +31,9 @@ DEFAULT_CRITIC = pathlib.Path(__file__).resolve().parents[3] / \
     "artifacts" / "critic.json"
 
 
-def make_llm_complete(cmd: str, timeout: float = 120.0):
+def make_llm_complete(cmd: str, timeout: float = 120.0, retries: int = 2,
+                      backoff_s: float = 0.25, deadline_s=None,
+                      sleep=time.sleep):
     """``prompt -> completion`` via a shell command (stdin -> stdout).
 
     The serving adapter for any external LLM endpoint: the command reads
@@ -36,27 +41,50 @@ def make_llm_complete(cmd: str, timeout: float = 120.0):
     to stdout (e.g. a ``curl`` against a served model, or a local runner).
     Shared by this launcher and the ``haf-llm`` method spec of
     :mod:`repro.eval.policies`.
+
+    Failures raise the typed taxonomy of :mod:`repro.faults.errors` — a
+    dead endpoint must fail loudly (empty stdout would otherwise parse as
+    "no migration" at every epoch and the sweep would record a
+    complete-looking row for an LLM that never answered), but it fails
+    *attributably*: :class:`LLMCrashError` carries the stderr tail,
+    timeouts surface as :class:`LLMTimeoutError`.  Crashes and timeouts
+    retry with exponential backoff (``retries`` extra attempts, base
+    ``backoff_s``) under a total wall budget ``deadline_s``; each attempt
+    is additionally bounded by ``timeout``.
     """
-    def complete(prompt: str) -> str:
-        proc = subprocess.run(cmd, shell=True, input=prompt,
-                              capture_output=True, text=True,
-                              timeout=timeout)
-        # a dead endpoint must fail loudly: empty stdout would otherwise
-        # parse as "no migration" at every epoch and the sweep would
-        # record a complete-looking row for an LLM that never answered
+    policy = RetryPolicy(retries=retries, backoff_s=backoff_s,
+                         deadline_s=deadline_s)
+
+    def attempt(prompt: str) -> str:
+        try:
+            proc = subprocess.run(cmd, shell=True, input=prompt,
+                                  capture_output=True, text=True,
+                                  timeout=timeout)
+        except subprocess.TimeoutExpired as err:
+            raise LLMTimeoutError(
+                f"LLM command timed out after {timeout:g}s: {cmd!r}") from err
         if proc.returncode != 0:
             err = (proc.stderr or "").strip()
-            raise RuntimeError(
+            raise LLMCrashError(
                 f"LLM command failed (exit {proc.returncode}): {cmd!r}"
-                + (f" — stderr: {err[:500]}" if err else ""))
+                + (f" — stderr: {err[:500]}" if err else ""),
+                stderr_tail=err[:500])
         return proc.stdout
+
+    def complete(prompt: str) -> str:
+        return call_with_retries(lambda: attempt(prompt), policy,
+                                 sleep=sleep)
     return complete
 
 
-def make_llm_agent(cmd: str, timeout: float = 120.0) -> ExternalLLMAgent:
+def make_llm_agent(cmd: str, timeout: float = 120.0, retries: int = 2,
+                   backoff_s: float = 0.25,
+                   deadline_s=None) -> ExternalLLMAgent:
     """An :class:`ExternalLLMAgent` driving ``cmd`` (see above)."""
-    return ExternalLLMAgent(make_llm_complete(cmd, timeout),
-                            name=f"external({cmd})")
+    return ExternalLLMAgent(
+        make_llm_complete(cmd, timeout, retries=retries,
+                          backoff_s=backoff_s, deadline_s=deadline_s),
+        name=f"external({cmd})")
 
 
 def get_critic(path: str, scenario) -> Critic:
@@ -79,6 +107,12 @@ def main() -> None:
     ap.add_argument("--llm-cmd", default=None,
                     help="external LLM: shell command reading the prompt on "
                          "stdin and writing the JSON shortlist to stdout")
+    ap.add_argument("--llm-timeout", type=float, default=120.0)
+    ap.add_argument("--llm-retries", type=int, default=2)
+    ap.add_argument("--no-fallback", action="store_true",
+                    help="disable degradation to the --agent stand-in when "
+                         "the external LLM's retry budget is exhausted "
+                         "(failures then abort the run, attributably)")
     ap.add_argument("--no-critic", action="store_true")
     ap.add_argument("--critic-path", default=str(DEFAULT_CRITIC))
     ap.add_argument("--epoch-interval", type=float, default=5.0)
@@ -91,13 +125,17 @@ def main() -> None:
     print(f"[serve] λ_ai={info['lambda_ai']:.1f}/s "
           f"horizon={info['horizon']:.0f}s")
 
+    fallback = None
     if args.llm_cmd:
-        agent = make_llm_agent(args.llm_cmd)
+        agent = make_llm_agent(args.llm_cmd, args.llm_timeout,
+                               retries=args.llm_retries)
+        if not args.no_fallback:
+            fallback = make_agent(args.agent, seed=args.seed)
     else:
         agent = make_agent(args.agent, seed=args.seed)
 
     critic = None if args.no_critic else get_critic(args.critic_path, sc)
-    policy = HAFPlacement(agent, critic=critic)
+    policy = HAFPlacement(agent, critic=critic, fallback_agent=fallback)
     sim = Simulator(sc, epoch_interval=args.epoch_interval)
     res = sim.run(requests, policy, DeadlineAwareAllocation())
     s = res.summary()

@@ -31,8 +31,10 @@ from repro.obs.metrics import MetricsSampler
 from repro.obs.profile import (Profiler, active_profiler, format_phases,
                                pop_profiler, push_profiler, timer)
 from repro.obs.trace import (ALLOC, ARRIVAL, CLS_LARGE_AI, CLS_NAMES,
-                             CLS_RAN, CLS_SMALL_AI, COMPLETION, DROP, EPOCH,
-                             KIND_NAMES, MIGRATION, TraceRecorder, load_jsonl)
+                             CLS_RAN, CLS_SMALL_AI, COMPLETION, DEGRADED,
+                             DEGRADED_NAMES, DROP, EPOCH, KIND_NAMES,
+                             MIGRATION, NODE_DOWN, NODE_UP, TraceRecorder,
+                             degraded_code, load_jsonl)
 
 __all__ = [
     "ObsConfig", "RunObserver", "make_observer",
@@ -40,6 +42,7 @@ __all__ = [
     "timer", "active_profiler", "push_profiler", "pop_profiler",
     "format_phases", "load_jsonl", "diag", "set_diag_sink",
     "ARRIVAL", "COMPLETION", "DROP", "MIGRATION", "EPOCH", "ALLOC",
+    "NODE_DOWN", "NODE_UP", "DEGRADED", "DEGRADED_NAMES", "degraded_code",
     "KIND_NAMES", "CLS_LARGE_AI", "CLS_SMALL_AI", "CLS_RAN", "CLS_NAMES",
 ]
 

@@ -73,10 +73,12 @@ class MetricsSampler:
         util_c = np.bincount(cluster.placement, weights=cluster.alloc_c,
                              minlength=cluster.N)
         with np.errstate(divide="ignore", invalid="ignore"):
-            util_g = np.where(cluster.gpu_capacity > 0,
-                              util_g / cluster.gpu_capacity, 0.0)
-            util_c = np.where(cluster.cpu_capacity > 0,
-                              util_c / cluster.cpu_capacity, 0.0)
+            # effective capacity, so churned-down nodes report utilization
+            # against what they can actually serve (0 while fully departed)
+            util_g = np.where(cluster.gpu_eff > 0,
+                              util_g / cluster.gpu_eff, 0.0)
+            util_c = np.where(cluster.cpu_eff > 0,
+                              util_c / cluster.cpu_eff, 0.0)
         depth = int(sum(len(q) for q in cluster.queues))
         busy = cluster.head_mask
         slack = cluster.head_deadline[busy] - t

@@ -40,8 +40,25 @@ DROP = 2
 MIGRATION = 3
 EPOCH = 4
 ALLOC = 5
+NODE_DOWN = 6                       # spot churn: a node departed/flapped
+NODE_UP = 7                         # spot churn: the node rejoined
+DEGRADED = 8                        # a decision fell down the degradation
+                                    # ladder (LLM failure / critic loss /
+                                    # batch-group fallback)
 
-KIND_NAMES = ("arrival", "completion", "drop", "migration", "epoch", "alloc")
+KIND_NAMES = ("arrival", "completion", "drop", "migration", "epoch", "alloc",
+              "node_down", "node_up", "degraded")
+
+# reason codes for DEGRADED records (the ``c`` column)
+DEGRADED_NAMES = ("crash", "timeout", "malformed", "critic", "batch-fallback")
+
+
+def degraded_code(reason: str) -> int:
+    """Reason string -> DEGRADED ``c`` code (-1 for unknown reasons)."""
+    try:
+        return DEGRADED_NAMES.index(reason)
+    except ValueError:
+        return -1
 
 # request-class codes (the ``c`` column of request-level records);
 # mirrors repro.sim.types.RequestClass without importing it
@@ -223,6 +240,14 @@ def _record_dict(kind: int, t: float, b: int, a: int, c: int,
         base.update(epoch=a, n_candidates=c, committed=bool(v))
     elif kind == ALLOC:
         base.update(n_heads=a, iters=c, n_problems=int(v))
+    elif kind == NODE_DOWN:
+        base.update(node=a, scale=v)
+    elif kind == NODE_UP:
+        base.update(node=a)
+    elif kind == DEGRADED:
+        base.update(epoch=a,
+                    reason=(DEGRADED_NAMES[c]
+                            if 0 <= c < len(DEGRADED_NAMES) else c))
     return base
 
 

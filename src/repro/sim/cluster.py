@@ -190,6 +190,18 @@ class ClusterState:
         self.cpu_capacity = np.array([n.cpu_cores for n in nodes])
         self.vram_capacity = np.array([n.vram_bytes for n in nodes])
 
+        # time-varying capacity (spot churn / autoscaler hook): node_scale
+        # is the dynamic per-node mask, updated IN PLACE by
+        # set_node_scale (no rebuild per change); *_eff are the
+        # allocator-facing products.  At scale 1.0, gpu_eff == gpu_capacity
+        # bitwise (x * 1.0 is exact), so churn-free runs cannot drift.
+        self.node_scale = np.ones(self.N)
+        self.gpu_eff = self.gpu_capacity * self.node_scale
+        self.cpu_eff = self.cpu_capacity * self.node_scale
+        # preemption-notice horizon: node n is draining while
+        # t < node_drain_until[n] (migrations off it count as forced)
+        self.node_drain_until = np.zeros(self.N)
+
         self.alloc_g = np.zeros(self.S)              # g_{n(s),s}
         self.alloc_c = np.zeros(self.S)              # c_{n(s),s}
         self.infeasible_events = 0                   # Eq. 15 denominator ≤ 0
@@ -243,6 +255,17 @@ class ClusterState:
         self._alpha_down = np.zeros(self.S)
         for cell, du_sid in self._du_by_cell.items():
             self._alpha_down[du_sid] = self._cuup_time_ema.get(cell, 5e-4)
+
+    def set_node_scale(self, n: int, scale: float) -> None:
+        """Retune one node's effective capacity IN PLACE (no rebuild).
+
+        Writes go through the bound arrays, so in batched runs — where
+        ``node_scale``/``gpu_eff``/``cpu_eff`` are row views into the
+        ClusterBlock's ``[B, N]`` stacks — only this replica's row moves.
+        """
+        self.node_scale[n] = scale
+        self.gpu_eff[n] = self.gpu_capacity[n] * scale
+        self.cpu_eff[n] = self.cpu_capacity[n] * scale
 
     # ------------------------------------------------------------------ #
     # queue mutation (the ONLY writers of the head/Ψ/deadline arrays
@@ -404,7 +427,7 @@ class ClusterState:
             self.tail_psi_g[idx] + self.head_rem_g[idx],
             self.tail_psi_c[idx] + self.head_rem_c[idx],
             self._cat_code[idx], self._alpha_down[idx], self.delta,
-            self.gpu_capacity[n], self.cpu_capacity[n])
+            self.gpu_eff[n], self.cpu_eff[n])
         self.infeasible_events += int(np.count_nonzero(infeas))
         return sids, psi_g, psi_c, omega, fg, fc
 
@@ -486,11 +509,17 @@ class ClusterState:
         c_used = np.zeros(self.N)
         np.add.at(g_used, self.placement, self.alloc_g)
         np.add.at(c_used, self.placement, self.alloc_c)
+        # effective (time-varying) capacity in the denominators; the
+        # max(·, eps) keeps a fully departed node (eff = 0, alloc already
+        # re-solved to 0) at util 0 instead of NaN — bit-identical for any
+        # live capacity, which is far above eps
+        g_den = np.maximum(self.gpu_eff, 1e-9)
+        c_den = np.maximum(self.cpu_eff, 1e-9)
         return {
-            "gpu_util": g_used / self.gpu_capacity,
-            "cpu_util": c_used / self.cpu_capacity,
-            "ran_floor_g": fg.sum(axis=1) / self.gpu_capacity,
-            "ran_floor_c": fc.sum(axis=1) / self.cpu_capacity,
+            "gpu_util": g_used / g_den,
+            "cpu_util": c_used / c_den,
+            "ran_floor_g": fg.sum(axis=1) / g_den,
+            "ran_floor_c": fc.sum(axis=1) / c_den,
             "vram_used": self.vram_used(),
             "vram_headroom": self.vram_headroom(),
             "psi_g": psi_g.sum(axis=0),
@@ -691,8 +720,8 @@ def _deadline_allocate_scalar(cluster: ClusterState, t: float,
     alloc_g, alloc_c = cluster.alloc_g, cluster.alloc_c
     for p, (lo, hi) in enumerate(probs):
         n = node_of[p]
-        gcap = float(cluster.gpu_capacity[n])
-        ccap = float(cluster.cpu_capacity[n])
+        gcap = float(cluster.gpu_eff[n])
+        ccap = float(cluster.cpu_eff[n])
         w_g: List[float] = []
         w_c: List[float] = []
         fg: List[float] = []
@@ -765,7 +794,7 @@ def deadline_allocate_solo(cluster: ClusterState, t: float,
         cat = cluster._cat_code[idx]
         if (cat != _CAT_AI).any():
             nn = np.repeat(node_of, [hi - lo for lo, hi in probs])
-            gcap, ccap = cluster.gpu_capacity[nn], cluster.cpu_capacity[nn]
+            gcap, ccap = cluster.gpu_eff[nn], cluster.cpu_eff[nn]
             alpha = cluster._alpha_down[idx]
         else:                   # pure-AI gather: no floors to build
             gcap = ccap = alpha = None
@@ -778,7 +807,7 @@ def deadline_allocate_solo(cluster: ClusterState, t: float,
             cluster.infeasible_events += int(np.count_nonzero(infeas))
         _solve_and_scatter(
             probs, psi_g, psi_c, omega, fg, fc,
-            cluster.gpu_capacity[node_of], cluster.cpu_capacity[node_of],
+            cluster.gpu_eff[node_of], cluster.cpu_eff[node_of],
             lambda g: cluster.alloc_g.__setitem__(idx, g),
             lambda c: cluster.alloc_c.__setitem__(idx, c))
     if cluster.trace is not None:
@@ -829,11 +858,14 @@ def deadline_allocate_block(block: "ClusterBlock", t_vec: np.ndarray,
         return
     bi = np.asarray(bb, np.int64)
     si = np.asarray(ss, np.int64)
+    # per-problem replica index (churn makes effective capacity per-replica
+    # state, so capacity gathers must go through the [B, N] block rows)
+    prob_b = np.asarray([bb[lo] for lo, hi in probs], np.int64)
     cl0 = clusters[0]
     cat = cl0._cat_code[si]
     if (cat != _CAT_AI).any():
         nn = np.repeat(prob_cap_n, [hi - lo for lo, hi in probs])
-        gcap, ccap = cl0.gpu_capacity[nn], cl0.cpu_capacity[nn]
+        gcap, ccap = block.gpu_eff[bi, nn], block.cpu_eff[bi, nn]
         alpha = block.alpha_down[bi, si]
     else:                       # pure-AI gather: no floors to build
         gcap = ccap = alpha = None
@@ -847,15 +879,14 @@ def deadline_allocate_block(block: "ClusterBlock", t_vec: np.ndarray,
             clusters[b].infeasible_events += 1
     _solve_and_scatter(
         probs, psi_g, psi_c, omega, fg, fc,
-        cl0.gpu_capacity[prob_cap_n], cl0.cpu_capacity[prob_cap_n],
+        block.gpu_eff[prob_b, prob_cap_n], block.cpu_eff[prob_b, prob_cap_n],
         lambda g: block.alloc_g.__setitem__((bi, si), g),
         lambda c: block.alloc_c.__setitem__((bi, si), c))
     if cl0.trace is not None:
         # one ALLOC record per participating replica: its own head count
         # and problem count, the (shared) padded solve's iterations
         heads_per_b = np.bincount(bi, minlength=block.B)
-        probs_per_b = np.bincount([bb[lo] for lo, hi in probs],
-                                  minlength=block.B)
+        probs_per_b = np.bincount(prob_b, minlength=block.B)
         for b in np.nonzero(heads_per_b)[0]:
             cl0.trace.emit(_TRACE_ALLOC, float(t_vec[b]), int(b),
                            int(heads_per_b[b]), _SOLVE_ITERS,
@@ -880,6 +911,9 @@ class ClusterBlock:
     ARRAYS = ("head_rem_g", "head_rem_c", "head_deadline", "head_kv",
               "head_mask", "head_started", "alloc_g", "alloc_c",
               "reconfig_until", "tail_psi_g", "tail_psi_c", "_alpha_down")
+    # per-node dynamic state ([B, N]): spot churn retunes these in place
+    # through the replicas' row views — never rebuilt per change
+    NODE_ARRAYS = ("node_scale", "gpu_eff", "cpu_eff", "node_drain_until")
 
     def __init__(self, clusters: Sequence[ClusterState]):
         assert clusters, "a batch needs at least one replica"
@@ -892,6 +926,11 @@ class ClusterBlock:
         for name in self.ARRAYS:
             blk = np.stack([getattr(cl, name) for cl in clusters])
             setattr(self, name.lstrip("_"), blk)
+            for b, cl in enumerate(clusters):
+                setattr(cl, name, blk[b])
+        for name in self.NODE_ARRAYS:
+            blk = np.stack([getattr(cl, name) for cl in clusters])
+            setattr(self, name, blk)
             for b, cl in enumerate(clusters):
                 setattr(cl, name, blk[b])
         L = max(cl.dl_cols for cl in clusters)

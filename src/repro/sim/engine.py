@@ -142,6 +142,10 @@ class SimResult:
     profile: Optional[Dict] = None
     timeseries: Optional[List[Dict]] = None
     trace: Optional[object] = None
+    # degradation-ladder accounting: per-reason counts of epoch decisions
+    # that fell back (LLM crash/timeout/malformed, critic loss); None when
+    # nothing degraded
+    degraded: Optional[Dict[str, int]] = None
     # per-class (n, violations) from the replica's streaming accumulators
     # (every request the stream emitted, whether or not it was retained).
     # None only for hand-built results — then the legacy request scan is
@@ -212,6 +216,8 @@ class SimResult:
         ``n_*`` / ``viol_*`` counts are plain ints (0 when absent)."""
         f = self.fulfillment()
         large, tot = self.migration_counts()
+        forced = sum(1 for _, a in self.migrations
+                     if getattr(a, "forced", False))
         out = {
             "overall": f.get("overall", NAN),
             "ran": f.get("RAN", NAN),
@@ -220,6 +226,9 @@ class SimResult:
             "small_ai": f.get("SMALL_AI", NAN),
             "mig_large": large,
             "mig_total": tot,
+            "mig_forced": forced,
+            "degraded_decisions": (sum(self.degraded.values())
+                                   if self.degraded else 0),
             "truncated": self.truncated,
         }
         for k, (cnt, bad) in self.violation_counts().items():
@@ -228,10 +237,14 @@ class SimResult:
         return out
 
 
-# annotate MigrationAction with its category for counting
+# annotate MigrationAction with its category for counting; ``forced``
+# marks preemption-driven evacuations (the source node was draining or
+# already degraded), which carry a different interruption cost in the
+# Eq. 12 accounting than elective rebalancing moves
 @dataclasses.dataclass(frozen=True)
 class CommittedMigration(MigrationAction):
     category: InstanceCategory = InstanceCategory.SMALL_AI
+    forced: bool = False
 
 
 class _Replica:
@@ -251,7 +264,8 @@ class _Replica:
                  "dropped", "migrations", "epochs", "win", "arrivals_win",
                  "current_rec", "t", "n_events", "truncated", "dirty",
                  "last_full", "epoch_hook", "done", "pending_epoch",
-                 "trace", "metrics", "b")
+                 "trace", "metrics", "b", "n_down", "boost_nodes",
+                 "degraded")
 
     def __init__(self, sc: Dict, epoch_interval: float, drop_expired: bool,
                  requests, placement: PlacementPolicy,
@@ -310,6 +324,23 @@ class _Replica:
         for j, (node, t0, t1) in enumerate(sc.get("outages", ())):
             entries.append((float(t0), (2, j), "outage",
                             (int(node), float(t1))))
+        # spot churn: preemption notice (varuna-style advance warning) +
+        # departure per event; the rejoin is pushed at depart time so
+        # back-to-back schedules keep a deterministic heap order.  Seqs
+        # continue the outage tier (2, ·).
+        fseq = len(sc.get("outages", ()))
+        for ev in sc.get("churn", ()):
+            node = int(ev["node"])
+            depart = float(ev["depart"])
+            notice = float(ev.get("notice", depart))
+            if notice < depart:
+                entries.append((notice, (2, fseq), "preempt_notice",
+                                (node, depart)))
+                fseq += 1
+            entries.append((depart, (2, fseq), "node_depart",
+                            (node, float(ev["rejoin"]),
+                             float(ev.get("scale", 0.0)))))
+            fseq += 1
         self._load_chunk(entries)     # first window rides the O(n) heapify
         heapq.heapify(entries)
         self.heap = entries
@@ -331,6 +362,11 @@ class _Replica:
         self.n_events = 0
         self.truncated = False
         self.done = False
+        # spot-churn state: nodes currently departed/flapped, the node set
+        # holding an autoscaler boost, per-reason degraded-decision counts
+        self.n_down = 0
+        self.boost_nodes: List[int] = []
+        self.degraded: Dict[str, int] = {}
         # observability hooks (attached by the drivers; None = off, and
         # every instrumentation site below is an ``is not None`` guard
         # that only READS simulation state — the bit-identity contract)
@@ -494,7 +530,9 @@ class _Replica:
             alloc_g=cluster.alloc_g.copy(),
             alloc_c=cluster.alloc_c.copy(),
             kv_held=cluster.kv_active_vec(),
-            recent_fulfill=fl, arrival_rate=rates)
+            recent_fulfill=fl, arrival_rate=rates,
+            node_scale=cluster.node_scale.copy(),
+            drain_until=cluster.node_drain_until.copy())
 
     def close_epoch_window(self, rec: Optional[EpochRecord]) -> None:
         win = self.win
@@ -594,6 +632,74 @@ class _Replica:
             for sid in range(cluster.S):
                 if cluster.placement[sid] == payload:
                     self.mark(sid)   # back online: trigger realloc
+        elif kind == "preempt_notice":
+            # advance preemption warning: the node keeps serving until the
+            # departure, but snapshots see it draining — the agentic layer
+            # can evacuate proactively, and such moves count as forced
+            node, depart = payload
+            cluster.node_drain_until[node] = depart
+        elif kind == "node_depart":
+            node, rejoin, scale = payload
+            cluster.set_node_scale(node, scale)
+            cluster.node_drain_until[node] = 0.0
+            self.n_down += 1
+            if scale <= 0.0:
+                # full preemption: resident instances go dark until the
+                # node rejoins (same mechanism as scenario outages)
+                for sid in range(cluster.S):
+                    if cluster.placement[sid] == node:
+                        cluster.reconfig_until[sid] = max(
+                            cluster.reconfig_until[sid], rejoin)
+                        self.mark(sid)
+            else:
+                self.dirty.add(node)     # capacity flap: just re-solve
+            self.push(rejoin, "node_rejoin", node)
+            asc = sc.get("autoscale")
+            if asc is not None:
+                # autoscaler hook: scale-out reacts after its lag
+                self.push(t + float(asc.get("lag_s", 10.0)),
+                          "scale_out", node)
+            if self.trace is not None:
+                self.trace.emit(_obs.NODE_DOWN, t, self.b, node, 0, scale)
+        elif kind == "node_rejoin":
+            node = payload
+            cluster.set_node_scale(node, 1.0)
+            cluster.node_drain_until[node] = 0.0
+            self.n_down -= 1
+            self.dirty.add(node)
+            for sid in range(cluster.S):
+                if cluster.placement[sid] == node:
+                    self.mark(sid)       # back online: trigger realloc
+            asc = sc.get("autoscale")
+            if asc is not None and self.n_down == 0 and self.boost_nodes:
+                # scale-in: boosted nodes drain for drain_s, then revert
+                drain_s = float(asc.get("drain_s", 5.0))
+                for m in self.boost_nodes:
+                    cluster.node_drain_until[m] = t + drain_s
+                self.push(t + drain_s, "scale_in", tuple(self.boost_nodes))
+                self.boost_nodes = []
+            if self.trace is not None:
+                self.trace.emit(_obs.NODE_UP, t, self.b, node)
+        elif kind == "scale_out":
+            asc = sc.get("autoscale") or {}
+            if self.n_down > 0 and not self.boost_nodes:
+                # the departed node is still gone: surviving full-capacity
+                # nodes take the elastic boost
+                boost = float(asc.get("boost", 1.25))
+                for m in range(cluster.N):
+                    if cluster.node_scale[m] == 1.0:
+                        cluster.set_node_scale(m, boost)
+                        self.boost_nodes.append(m)
+                        self.dirty.add(m)
+        elif kind == "scale_in":
+            asc = sc.get("autoscale") or {}
+            boost = float(asc.get("boost", 1.25))
+            for m in payload:
+                if cluster.node_scale[m] == boost:
+                    cluster.set_node_scale(m, 1.0)
+                    self.dirty.add(m)
+                if cluster.node_drain_until[m] <= t:
+                    cluster.node_drain_until[m] = 0.0
 
     def commit_epoch(self, k: int, snap: EpochSnapshot,
                      action: Optional[MigrationAction]) -> None:
@@ -611,16 +717,30 @@ class _Replica:
                   and cluster.available(action.sid, t))
             if ok:
                 inst = cluster.instances[action.sid]
+                # forced = evacuating a draining or already-degraded node
+                # (preemption-driven); elective = rebalancing a healthy one
+                forced = bool(t < cluster.node_drain_until[action.src]
+                              or cluster.node_scale[action.src] < 1.0)
                 committed = CommittedMigration(
                     sid=action.sid, src=action.src,
-                    dst=action.dst, category=inst.category)
+                    dst=action.dst, category=inst.category, forced=forced)
                 cluster.apply_migration(committed, t)
-                # landing on a node mid-outage: the instance
-                # stays dark until the node itself returns
                 until = t + inst.reconfig_s
+                if forced:
+                    # riding the advance notice makes the interruption
+                    # cheaper than an elective move (Eq. 12 cost split)
+                    until = t + inst.reconfig_s * float(
+                        sc.get("forced_reconfig_factor", 1.0))
+                # landing on a node mid-outage (or mid-preemption): the
+                # instance stays dark until the node itself returns
                 for node, o0, o1 in sc.get("outages", ()):
                     if int(node) == action.dst and o0 <= t < o1:
                         until = max(until, float(o1))
+                for ev in sc.get("churn", ()):
+                    if int(ev["node"]) == action.dst \
+                            and float(ev.get("scale", 0.0)) <= 0.0 \
+                            and float(ev["depart"]) <= t < float(ev["rejoin"]):
+                        until = max(until, float(ev["rejoin"]))
                 cluster.reconfig_until[action.sid] = until
                 self.migrations.append((t, committed))
                 self.push(until, "mig_done", action.sid)
@@ -629,6 +749,14 @@ class _Replica:
                                     action.dst, float(action.src))
             else:
                 action = None
+        # degradation-ladder accounting: the policy marks a decision that
+        # fell back (LLM crash/timeout/malformed shortlist) on itself
+        reason = getattr(self.placement, "last_degraded", None)
+        if reason is not None:
+            self.degraded[reason] = self.degraded.get(reason, 0) + 1
+            if self.trace is not None:
+                self.trace.emit(_obs.DEGRADED, t, self.b, k,
+                                _obs.degraded_code(reason))
         if self.trace is not None:
             self.trace.emit(_obs.EPOCH, t, self.b, k, len(shortlist),
                             float(action is not None))
@@ -645,6 +773,7 @@ class _Replica:
                            [float(x) for x in scores]),
                 "predicted_margin": getattr(self.placement, "last_margin",
                                             None),
+                "degraded": reason,
             })
         self.current_rec = EpochRecord(
             epoch=k, t=t, snapshot=snap, action=action,
@@ -694,7 +823,9 @@ class _Replica:
                         infeasible_events=self.cluster.infeasible_events,
                         n_events=self.n_events, truncated=self.truncated,
                         wall_s=wall_s, engine=engine,
-                        counts_by_class=self._class_counts())
+                        counts_by_class=self._class_counts(),
+                        degraded=dict(self.degraded) if self.degraded
+                        else None)
         if observer is not None:
             if observer.profiler is not None:
                 res.profile = observer.profiler.report()

@@ -7,6 +7,7 @@
   diurnal-flash  composed profile: flash spikes riding the diurnal swing
   heavy-tail     paper topology with Pareto-tailed request sizes
   node-outage    paper topology with node availability windows (fault inject)
+  spot-churn     preemption churn: departures + rejoins with advance notices
   skewed-hetero  one GPU-rich node + many weak nodes (placement stress)
 
 Every family is deterministic in (seed, params) and returns the scenario
@@ -236,6 +237,46 @@ def node_outage(seed: int = 0, n_outages: int = 2, outage_s: float = 25.0,
         outages.append([node, t0, t0 + float(outage_s)])
     sc["outages"] = outages
     sc["meta"]["params"]["outages"] = [list(o) for o in outages]
+    return sc
+
+
+# --------------------------------------------------------------------------- #
+@register("spot-churn")
+def spot_churn(seed: int = 0, n_preemptions: int = 3, down_s: float = 30.0,
+               notice_s: float = 5.0, scale: float = 0.0, flaps: int = 0,
+               flap_scale: float = 0.5, flap_s: float = 15.0,
+               forced_factor: float = 0.5, autoscale: bool = False,
+               boost: float = 1.25, lag_s: float = 8.0, drain_s: float = 5.0,
+               rho: float = 0.8, n_ai_requests: int = 5000) -> Dict:
+    """Spot-instance churn on the paper topology: seeded nodes depart and
+    rejoin mid-trace with advance preemption notices (varuna-style), plus
+    optional capacity flaps (residual ``flap_scale`` capacity instead of a
+    full departure).  Migrations off a draining/degraded node are forced —
+    they ride the notice and pay ``forced_factor`` × the reconfiguration
+    cost of an elective move.  ``autoscale=True`` arms the autoscaler
+    hook: surviving nodes take a ``boost`` after ``lag_s`` of scale-out
+    lag and drain for ``drain_s`` on scale-in."""
+    from repro.faults import churn_schedule
+    sc = paper_scenario()
+    sc = _finish(sc, "spot-churn", seed,
+                 {"n_preemptions": n_preemptions, "down_s": down_s,
+                  "notice_s": notice_s, "scale": scale, "flaps": flaps,
+                  "flap_scale": flap_scale, "flap_s": flap_s,
+                  "forced_factor": forced_factor, "autoscale": autoscale,
+                  "boost": boost, "lag_s": lag_s, "drain_s": drain_s,
+                  "rho": rho},
+                 rho, n_ai_requests)
+    horizon = estimated_horizon(sc)
+    churn = churn_schedule(seed, len(sc["nodes"]), horizon,
+                           n_preemptions=n_preemptions, down_s=down_s,
+                           notice_s=notice_s, scale=scale, flaps=flaps,
+                           flap_scale=flap_scale, flap_s=flap_s)
+    sc["churn"] = churn
+    sc["forced_reconfig_factor"] = float(forced_factor)
+    if autoscale:
+        sc["autoscale"] = {"boost": float(boost), "lag_s": float(lag_s),
+                           "drain_s": float(drain_s)}
+    sc["meta"]["params"]["churn"] = [dict(ev) for ev in churn]
     return sc
 
 

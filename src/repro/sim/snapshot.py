@@ -39,6 +39,12 @@ class EpochSnapshot:
     # recent outcomes over the last interval (class-resolved)
     recent_fulfill: Dict[str, float] = dataclasses.field(default_factory=dict)
     arrival_rate: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # time-varying capacity view (spot churn): per-node effective-capacity
+    # scale (1 = full, 0 = departed) and the preemption-notice horizon
+    # (node n is draining while t < drain_until[n]).  ``None`` on
+    # hand-built snapshots keeps every pre-churn consumer byte-identical.
+    node_scale: Optional[np.ndarray] = None  # [N]
+    drain_until: Optional[np.ndarray] = None  # [N]
 
     @property
     def N(self) -> int:

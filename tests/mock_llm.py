@@ -18,12 +18,31 @@ them):
 The same prompt always yields the same shortlist, so sweeps through this
 endpoint are reproducible run-to-run — which is what the end-to-end
 ``haf-llm`` tests pin.
+
+Chaos flags turn the stand-in into a deterministic *flaky* endpoint for
+fault-injection tests (the draw is a pure hash of ``--seed`` and the
+prompt text — the same scheme as :func:`repro.faults.script.fault_draw` —
+so a given prompt either always fails or always succeeds for a seed):
+
+    --fail-rate P   fraction of prompts that fail (default 0.0)
+    --garbage       failures print an unparseable refusal (exit 0,
+                    malformed) instead of crashing
+    --hang-s S      failures sleep S seconds before answering (the
+                    client's timeout decides whether that is a fault)
+    --seed N        reseeds which prompts fail (default 0)
+
+Without ``--garbage``/``--hang-s``, a drawn failure writes a diagnostic
+to stderr and exits 17 — the crash mode ``make_llm_complete`` maps to
+:class:`repro.faults.errors.LLMCrashError`.
 """
 from __future__ import annotations
 
+import argparse
+import hashlib
 import json
 import re
 import sys
+import time
 
 CANDIDATE_RE = re.compile(r"mig:s\d+:n\d+->n\d+")
 K_RE = re.compile(r"at most (\d+) candidate")
@@ -39,8 +58,35 @@ def shortlist(prompt: str) -> list:
     return ids[:max(k - 1, 0)] + ["no-migration"]
 
 
-def main() -> int:
-    print(json.dumps(shortlist(sys.stdin.read())))
+def failure_draw(prompt: str, seed: int) -> float:
+    """Uniform [0, 1) draw keyed on (seed, prompt) — no RNG state."""
+    digest = hashlib.sha256(f"{seed}:{prompt}".encode()).digest()
+    return int.from_bytes(digest[:8], "big") / 2.0 ** 64
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fail-rate", type=float, default=0.0)
+    ap.add_argument("--garbage", action="store_true")
+    ap.add_argument("--hang-s", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    prompt = sys.stdin.read()
+    if args.fail_rate > 0.0 and failure_draw(prompt, args.seed) \
+            < args.fail_rate:
+        if args.hang_s > 0.0:
+            # stall, then answer normally: only clients whose timeout is
+            # shorter than the hang see a fault (LLMTimeoutError)
+            time.sleep(args.hang_s)
+        elif args.garbage:
+            # parses to an empty shortlist -> LLMMalformedError client-side
+            print("I cannot comply with this request.")
+            return 0
+        else:
+            sys.stderr.write("mock_llm: injected crash\n")
+            return 17
+    print(json.dumps(shortlist(prompt)))
     return 0
 
 

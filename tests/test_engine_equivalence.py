@@ -128,7 +128,7 @@ def _run_batch(family: str, seeds, method: str = "haf-static",
 
 
 @pytest.mark.parametrize("family", ("paper", "dense-urban", "flash-crowd",
-                                    "node-outage"))
+                                    "node-outage", "spot-churn"))
 def test_run_batch_matches_per_seed_numpy(family):
     solos = [_fingerprint(_run("numpy", family, s)) for s in BATCH_SEEDS]
     batch = [_fingerprint(r) for r in _run_batch(family, BATCH_SEEDS)]
