@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=(None, "table2", "table3", "fig2", "roofline",
                              "alloc", "fleet", "engine", "critic", "spec",
-                             "chaos"))
+                             "chaos", "lint"))
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode (tiny request counts, 1 seed; the "
                          "engine bench still records BENCH_pr7.json and "
@@ -38,6 +38,20 @@ def main() -> None:
           f"(REPRO_FULL={'1' if common.FULL else '0'}, "
           f"workers={common.WORKERS})", flush=True)
 
+    if args.only in (None, "lint"):
+        # fastest tier first: the repro.analysis invariant linter must
+        # report a clean tree (determinism / obs zero-overhead /
+        # identity-hash / dtype contracts) — see docs/analysis.md
+        from repro.analysis import analyze, rule_names
+        findings, n_files = analyze()
+        for f in findings:
+            print(f.format())
+        if findings:
+            raise RuntimeError(
+                f"repro.analysis: {len(findings)} invariant finding(s) "
+                "in src/repro (see above)")
+        print(f"# lint: 0 findings over {n_files} files "
+              f"({len(rule_names())} rules)", flush=True)
     if args.only in (None, "engine"):
         from benchmarks import engine_bench
         record = engine_bench.main(smoke=args.smoke)

@@ -1,0 +1,22 @@
+"""``repro.analysis`` — AST-based invariant linter for the repro tree.
+
+The repo's core claims (bit-identical solo ≡ batched runs,
+seed-deterministic generation, zero-overhead-when-off observability,
+resume-safe ``identity_hash``) are enforced here as static rules over a
+shared per-module AST.  See ``docs/analysis.md`` for the rule catalog,
+the ``# repro: allow(...)`` suppression syntax, and how to add a rule.
+
+>>> from repro.analysis import analyze
+>>> findings, n_files = analyze()          # full sweep over src/repro
+>>> findings
+[]
+"""
+from repro.analysis.core import (AnalysisError, Finding, ModuleInfo,
+                                 Rule, analyze, default_root, get_rule,
+                                 iter_modules, load_module, register,
+                                 rule_names, rules)
+from repro.analysis.cli import main
+
+__all__ = ["AnalysisError", "Finding", "ModuleInfo", "Rule", "analyze",
+           "default_root", "get_rule", "iter_modules", "load_module",
+           "main", "register", "rule_names", "rules"]

@@ -1,0 +1,11 @@
+"""The rule battery — importing this package registers every rule.
+
+Adding a rule: drop a module here with a ``@register``-decorated
+:class:`repro.analysis.core.Rule` subclass and import it below (~30
+lines total; see ``docs/analysis.md`` for the walkthrough).
+"""
+from repro.analysis.rules import determinism  # noqa: F401
+from repro.analysis.rules import dtype        # noqa: F401
+from repro.analysis.rules import hygiene      # noqa: F401
+from repro.analysis.rules import identity     # noqa: F401
+from repro.analysis.rules import obs_guard    # noqa: F401

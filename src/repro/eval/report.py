@@ -51,7 +51,11 @@ def aggregate(rows: List[Dict]) -> List[Dict]:
         cell: Dict = {"method": method, "scenario": scenario,
                       "seeds": sorted(r["seed"] for r in g)}
         for m in METRICS:
-            cell[m] = _mean_ci([float(r[m]) for r in g])
+            # A metric can be None when a run has no requests of that
+            # class (e.g. trace replays carry no RAN functions, so
+            # `ran` is undefined rather than 0).
+            cell[m] = _mean_ci([float(r[m]) for r in g
+                                if r.get(m) is not None])
         for c in COUNTS:
             vals = [float(r.get(c, 0)) for r in g]
             cell[c] = {"mean": sum(vals) / len(vals),

@@ -47,6 +47,33 @@ class SpecError(ValueError):
     """An experiment spec that cannot run; the message lists every problem."""
 
 
+# -------------------------------------------------------------------- #
+# field classification registries
+#
+# Every ExperimentSpec field lives in EXACTLY one of these two tuples —
+# _check_field_partition() asserts it at import time and the
+# `identity-hash` rule in repro.analysis re-checks it statically, so a
+# new field cannot silently stay out of identity_hash and poison
+# resume.  identity() is built FROM _IDENTITY_FIELDS.
+# -------------------------------------------------------------------- #
+
+#: result-affecting: changing one of these invalidates every cached row
+_IDENTITY_FIELDS = ("methods", "scenarios", "n_ai_requests", "rho",
+                    "epoch_interval", "max_events", "scenario_seed")
+
+#: provably non-result-affecting, excluded from identity_hash:
+#:   seeds           — rows are keyed (cell, seed) individually, so
+#:                     extending the seed list still resumes
+#:   name, out       — labels/paths, never inputs
+#:   engine/batch/workers — held bit-identical by the equivalence suite
+#:   trace/profile/metrics_interval — obs is zero-overhead-when-off and
+#:                     obs-on ≡ obs-off bit-for-bit (tests/test_obs.py)
+#:   stream/window   — memory knobs; streamed ≡ materialized contract
+_EXCLUDED_FIELDS = ("seeds", "name", "out", "engine", "batch", "workers",
+                    "trace", "profile", "metrics_interval",
+                    "stream", "window")
+
+
 def _canon_method(entry) -> Dict:
     if isinstance(entry, str):
         return grammar.parse_method(entry)
@@ -139,11 +166,9 @@ class ExperimentSpec:
         }
 
     def identity(self) -> Dict:
-        """The result-affecting subset (see module docstring)."""
+        """The result-affecting subset (see ``_IDENTITY_FIELDS``)."""
         c = self.canonical()
-        out = {k: c[k] for k in ("methods", "scenarios", "n_ai_requests",
-                                 "rho", "epoch_interval", "max_events",
-                                 "scenario_seed")}
+        out = {k: c[k] for k in _IDENTITY_FIELDS}
         # a scenario's own window= is the streaming refill granularity
         # (trace family) — a memory knob like the spec-level one, so it
         # must not fork the identity either
@@ -378,6 +403,31 @@ class ExperimentSpec:
             problems.append("window must be >= 0 (0 = native chunking)")
         if problems:
             raise SpecError("; ".join(problems))
+
+
+def _check_field_partition() -> None:
+    """Import-time guard: the two registries partition the dataclass."""
+    names = {f.name for f in dataclasses.fields(ExperimentSpec)}
+    ident, excl = set(_IDENTITY_FIELDS), set(_EXCLUDED_FIELDS)
+    problems = []
+    if ident & excl:
+        problems.append(f"fields in BOTH registries: {sorted(ident & excl)}")
+    if names - ident - excl:
+        problems.append(
+            f"unclassified ExperimentSpec fields: "
+            f"{sorted(names - ident - excl)} — add each to "
+            "_IDENTITY_FIELDS (result-affecting) or _EXCLUDED_FIELDS "
+            "(with a why-comment)")
+    if (ident | excl) - names:
+        problems.append(f"registry entries that are not fields: "
+                        f"{sorted((ident | excl) - names)}")
+    if problems:
+        raise AssertionError(
+            "repro.exp.spec field registries out of sync: "
+            + "; ".join(problems))
+
+
+_check_field_partition()
 
 
 def _check_params(where: str, params: Dict, names, has_var: bool

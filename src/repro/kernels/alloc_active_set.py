@@ -10,6 +10,10 @@ The active-set iteration is a fixed S-step ``fori_loop`` (the pinned set
 grows monotonically, so S steps guarantee convergence); all reductions are
 lane reductions over the padded instance dimension (multiples of 128).
 """
+# repro: allow-file(float-dtype): this kernel is f32 BY DESIGN — it
+# solves the Eq. 17-19 fixed point in TPU VMEM (f32 lanes) and is held
+# to the f64 reference by tolerance-based parity tests, not the
+# bit-for-bit event-schedule contract.
 from __future__ import annotations
 
 import functools

@@ -140,11 +140,11 @@ class NumpyEventCore:
             self._b2 = np.empty(S, bool)      # rem_c > 0
             self._bt = np.empty(S, bool)
             self._bu = np.empty(S, bool)
-            self._dt_g = np.empty(S)          # rem_g / alloc_g (else 0)
-            self._dt_c = np.empty(S)          # rem_c / alloc_c (else 0)
-            self._tx = np.empty(S)
-            self._delta = np.empty(S)
-            self._rem = np.empty(S)
+            self._dt_g = np.empty(S, np.float64)          # rem_g / alloc_g (else 0)
+            self._dt_c = np.empty(S, np.float64)          # rem_c / alloc_c (else 0)
+            self._tx = np.empty(S, np.float64)
+            self._delta = np.empty(S, np.float64)
+            self._rem = np.empty(S, np.float64)
 
     def _prepare(self, cluster: ClusterState, t: float) -> None:
         np.less_equal(cluster.reconfig_until, t, out=self._avail)
@@ -350,12 +350,12 @@ class NumpyBatchedEventCore:
             self._b2 = np.empty((B, S), bool)     # rem_c > 0
             self._bt = np.empty((B, S), bool)
             self._bu = np.empty((B, S), bool)
-            self._dt_g = np.empty((B, S))
-            self._dt_c = np.empty((B, S))
-            self._cand = np.empty((B, S))
-            self._tx = np.empty((B, S))
-            self._delta = np.empty((B, S))
-            self._rem = np.empty((B, S))
+            self._dt_g = np.empty((B, S), np.float64)
+            self._dt_c = np.empty((B, S), np.float64)
+            self._cand = np.empty((B, S), np.float64)
+            self._tx = np.empty((B, S), np.float64)
+            self._delta = np.empty((B, S), np.float64)
+            self._rem = np.empty((B, S), np.float64)
             self._rows = np.arange(B)
 
     def step(self, block, t_vec: np.ndarray, t_ev: np.ndarray,
@@ -435,7 +435,7 @@ class ScalarBatchedEventCore:
 
     def step(self, block, t_vec, t_ev, can):
         B = block.B
-        t_comp = np.full(B, INF)
+        t_comp = np.full(B, INF, np.float64)
         sid = np.full(B, -1, np.int64)
         for b, cl in enumerate(block.clusters):
             t = float(t_vec[b])

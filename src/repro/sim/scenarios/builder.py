@@ -149,7 +149,7 @@ def validate_scenario(sc: Dict) -> None:
     by_cat = {}
     for s in instances:
         by_cat.setdefault((s.category, s.cell), []).append(s)
-    for c in cells:
+    for c in sorted(cells):
         assert (InstanceCategory.DU, c) in by_cat, f"cell {c} has no DU"
         assert (InstanceCategory.CUUP, c) in by_cat, f"cell {c} has no CU-UP"
 

@@ -1,0 +1,19 @@
+# repro: scope(float-dtype)
+"""Fixture: exactly two float-dtype violations."""
+import numpy as np
+
+
+def scratch(n):
+    buf = np.zeros(n)  # VIOLATION: implicit platform-default dtype
+    return buf
+
+
+def cast(x):
+    return np.float32(x)  # VIOLATION: f32 on an f64 path
+
+
+def explicit_ok(n):
+    a = np.zeros(n, np.float64)
+    b = np.empty(n, bool)
+    c = np.full(n, 0.0, np.float64)
+    return a, b, c

@@ -1,0 +1,15 @@
+# repro: scope(identity-hash)
+"""Fixture: exactly two identity-hash violations — one unregistered
+dataclass field and one stale registry entry."""
+import dataclasses
+
+_IDENTITY_FIELDS = ("methods", "scenarios", "ghost")  # 'ghost' is stale
+_EXCLUDED_FIELDS = ("seeds",)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    methods: tuple = ()
+    scenarios: tuple = ()
+    seeds: tuple = (0,)
+    new_knob: int = 0       # VIOLATION: in neither registry

@@ -1,0 +1,16 @@
+"""Fixture: exactly two mutable-default-arg violations."""
+
+
+def collect(x, acc=[]):  # VIOLATION: list literal default
+    acc.append(x)
+    return acc
+
+
+def index(key, *, table=dict()):  # VIOLATION: dict() call default
+    return table.get(key)
+
+
+def fine(x, acc=None, k=(1, 2)):  # ok: None + immutable tuple
+    acc = [] if acc is None else acc
+    acc.append(x)
+    return acc, k

@@ -1,0 +1,6 @@
+"""Fixture: exactly one no-bare-print violation (no __main__ guard)."""
+
+
+def report(rows):
+    print(f"{len(rows)} rows")  # VIOLATION: bare print in a library
+    return rows

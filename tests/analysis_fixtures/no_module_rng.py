@@ -1,0 +1,12 @@
+"""Fixture: exactly two no-module-rng violations (import + np call)."""
+import random  # VIOLATION: stdlib random
+import numpy as np
+
+
+def sample(n):
+    return np.random.rand(n)  # VIOLATION: module-level RNG
+
+
+def seeded_ok(seed, n):
+    rng = np.random.default_rng(seed)  # ok: seeded ctor
+    return rng.random(n), random

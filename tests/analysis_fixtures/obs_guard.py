@@ -1,0 +1,39 @@
+# repro: scope(obs-guard)
+"""Fixture: exactly two obs-guard violations (plus guarded forms that
+must NOT fire)."""
+
+
+class Replica:
+    def __init__(self):
+        self.trace = None
+        self.metrics = None
+
+    def bad_emit(self, t):
+        self.trace.emit("arrival", t)  # VIOLATION: unguarded
+
+    def bad_wrong_guard(self, prof, t):
+        if self.trace is not None:
+            prof.add("step", t)  # VIOLATION: guard covers self.trace
+
+    def good_emit(self, t):
+        if self.trace is not None:
+            self.trace.emit("arrival", t)
+
+    def good_truthy(self, t):
+        if self.metrics:
+            self.metrics.maybe_sample(0, t, None)
+
+    def good_else_branch(self, t):
+        if self.trace is None:
+            pass
+        else:
+            self.trace.emit("arrival", t)
+
+    def good_and(self, prof, t):
+        return prof is not None and prof.add("step", t)
+
+    def good_negated(self, t):
+        if not self.metrics:
+            return
+        if self.metrics is not None:
+            self.metrics.finalize(0, t, None)

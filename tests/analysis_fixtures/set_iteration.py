@@ -1,0 +1,30 @@
+"""Fixture: exactly three set-iteration violations."""
+
+
+def over_literal():
+    return [x for x in {3, 1, 2}]  # VIOLATION: set display
+
+
+def over_call(items):
+    for x in set(items):  # VIOLATION: set(...) call
+        yield x
+
+
+def over_local(items):
+    seen = set()
+    seen.update(items)
+    out = []
+    for x in seen:  # VIOLATION: set-typed local
+        out.append(x)
+    return out
+
+
+def sorted_ok(items):
+    seen = set(items)
+    return [x for x in sorted(seen)]  # ok: sorted() fixes the order
+
+
+def rebound_ok(items):
+    xs = set(items)
+    xs = sorted(xs)          # rebound to a list — name no longer a set
+    return [x for x in xs]

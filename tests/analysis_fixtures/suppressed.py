@@ -1,0 +1,23 @@
+# repro: scope(float-dtype)
+"""Fixture: every violation below is suppressed — the analyzer must
+report ZERO findings here.  Exercises all four suppression forms."""
+import numpy as np
+import time
+
+
+def named_trailing(n):
+    # trailing comment, named rule
+    return np.zeros(n)  # repro: allow(float-dtype): test fixture
+
+
+def bare_trailing():
+    return time.time()  # repro: allow
+
+
+def standalone_comment(x, n):
+    # repro: allow(float-dtype, wall-clock): applies to the next line
+    return np.zeros(n) + time.time()
+
+
+def multi_named(acc=[]):  # repro: allow(mutable-default-arg): fixture
+    return acc

@@ -1,0 +1,10 @@
+"""Fixture: exactly one wall-clock violation."""
+import time
+
+
+def stamp():
+    return time.time()  # VIOLATION: wall-clock read
+
+
+def timing_ok():
+    return time.perf_counter()  # ok: profiling clock, not banned

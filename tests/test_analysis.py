@@ -1,0 +1,303 @@
+"""repro.analysis — the invariant linter.
+
+Covers: the rule registry, per-rule zero-findings sweeps over the real
+tree, one positive-fixture module per rule, all four suppression forms,
+the wall-clock allowlist, JSON schema round-trip, the CLI contract, and
+the ExperimentSpec field-partition guard.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (AnalysisError, Finding, analyze, default_root,
+                            get_rule, load_module, rule_names, rules)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import Rule, register
+from repro.analysis.rules.determinism import WALL_CLOCK_ALLOWLIST
+
+FIXTURES = pathlib.Path(__file__).parent / "analysis_fixtures"
+SRC = pathlib.Path(__file__).parent.parent / "src" / "repro"
+
+#: rule -> (fixture file, expected finding lines)
+EXPECTED = {
+    "no-module-rng": ("no_module_rng.py", [2, 7]),
+    "wall-clock": ("wall_clock.py", [6]),
+    "set-iteration": ("set_iteration.py", [5, 9, 17]),
+    "obs-guard": ("obs_guard.py", [12, 16]),
+    "identity-hash": ("identity_hash.py", [6, 15]),
+    "no-bare-print": ("no_bare_print.py", [5]),
+    "mutable-default-arg": ("mutable_default.py", [4, 9]),
+    "float-dtype": ("float_dtype.py", [7, 12]),
+}
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+def test_registry_has_the_full_battery():
+    names = rule_names()
+    assert set(EXPECTED) <= set(names)
+    assert len(names) >= 7
+    for rule in rules().values():
+        assert rule.name and rule.description and rule.hint
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(AnalysisError, match="duplicate"):
+        @register
+        class Clash(Rule):
+            name = "no-bare-print"
+            description = "clash"
+
+            def check(self, mod):
+                return []
+
+
+def test_unknown_rule_raises():
+    with pytest.raises(AnalysisError, match="unknown rule"):
+        get_rule("no-such-rule")
+
+
+# --------------------------------------------------------------------- #
+# the real tree is clean — one sweep per rule
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_src_repro_is_clean(rule):
+    findings, n_files = analyze(rule_filter=[rule])
+    assert n_files > 90          # the whole package was walked
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_default_root_is_the_installed_package():
+    assert default_root() == SRC.resolve()
+
+
+# --------------------------------------------------------------------- #
+# positive fixtures — each rule catches its planted violation
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_rule_fires_on_fixture(rule):
+    fname, lines = EXPECTED[rule]
+    findings, _ = analyze(root=FIXTURES, rule_filter=[rule],
+                          paths=[FIXTURES / fname])
+    assert [(f.path, f.line) for f in findings] == \
+        [(fname, ln) for ln in lines]
+    for f in findings:
+        assert f.rule == rule and f.message and f.hint
+
+
+def test_fixture_sweep_totals():
+    findings, n_files = analyze(root=FIXTURES)
+    assert n_files == len(list(FIXTURES.glob("*.py")))
+    per_rule = {}
+    for f in findings:
+        per_rule.setdefault(f.rule, []).append((f.path, f.line))
+    assert per_rule == {
+        rule: [(fname, ln) for ln in lines]
+        for rule, (fname, lines) in EXPECTED.items()}
+
+
+def test_suppressed_fixture_reports_nothing():
+    findings, _ = analyze(root=FIXTURES,
+                          paths=[FIXTURES / "suppressed.py"])
+    assert findings == []
+
+
+# --------------------------------------------------------------------- #
+# suppression forms
+# --------------------------------------------------------------------- #
+def _findings_for(tmp_path, source, rule, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(source)
+    findings, _ = analyze(root=tmp_path, rule_filter=[rule], paths=[p])
+    return findings
+
+
+def test_trailing_named_suppression(tmp_path):
+    src = "import time\n\n\ndef f():\n" \
+          "    return time.time()  # repro: allow(wall-clock): why\n"
+    assert _findings_for(tmp_path, src, "wall-clock") == []
+
+
+def test_bare_allow_suppresses_every_rule(tmp_path):
+    src = "import time\n\n\ndef f():\n" \
+          "    return time.time()  # repro: allow\n"
+    assert _findings_for(tmp_path, src, "wall-clock") == []
+
+
+def test_wrong_rule_name_does_not_suppress(tmp_path):
+    src = "import time\n\n\ndef f():\n" \
+          "    return time.time()  # repro: allow(no-bare-print)\n"
+    found = _findings_for(tmp_path, src, "wall-clock")
+    assert [f.line for f in found] == [5]
+
+
+def test_standalone_comment_covers_next_line(tmp_path):
+    src = "import time\n\n\ndef f():\n" \
+          "    # repro: allow(wall-clock): next-line form\n" \
+          "    return time.time()\n"
+    assert _findings_for(tmp_path, src, "wall-clock") == []
+
+
+def test_standalone_comment_does_not_leak_past_next_line(tmp_path):
+    src = "import time\n\n\ndef f():\n" \
+          "    # repro: allow(wall-clock)\n" \
+          "    a = 1\n" \
+          "    return a, time.time()\n"
+    found = _findings_for(tmp_path, src, "wall-clock")
+    assert [f.line for f in found] == [7]
+
+
+def test_allow_file_suppresses_whole_module(tmp_path):
+    src = "# repro: allow-file(wall-clock): fixture\nimport time\n\n\n" \
+          "def f():\n    return time.time()\n\n\n" \
+          "def g():\n    return time.time()\n"
+    assert _findings_for(tmp_path, src, "wall-clock") == []
+
+
+def test_scope_pragma_opts_into_scoped_rule(tmp_path):
+    src = "def f(self, t):\n    self.trace.emit('x', t)\n"
+    # without the pragma the module is out of obs-guard's scope
+    assert _findings_for(tmp_path, src, "obs-guard") == []
+    src = "# repro: scope(obs-guard)\n" + src
+    found = _findings_for(tmp_path, src, "obs-guard")
+    assert [f.line for f in found] == [3]
+
+
+# --------------------------------------------------------------------- #
+# allowlist handling
+# --------------------------------------------------------------------- #
+def test_wall_clock_allowlist_by_rel_path(tmp_path):
+    assert "eval/sweep.py" in WALL_CLOCK_ALLOWLIST
+    d = tmp_path / "eval"
+    d.mkdir()
+    p = d / "sweep.py"
+    p.write_text("import time\n\n\ndef f():\n    return time.time()\n")
+    findings, _ = analyze(root=tmp_path, rule_filter=["wall-clock"],
+                          paths=[p])
+    assert findings == []          # rel path matches the allowlist
+    # the same source elsewhere is a violation
+    q = tmp_path / "other.py"
+    q.write_text(p.read_text())
+    findings, _ = analyze(root=tmp_path, rule_filter=["wall-clock"],
+                          paths=[q])
+    assert [f.line for f in findings] == [5]
+
+
+# --------------------------------------------------------------------- #
+# JSON output schema
+# --------------------------------------------------------------------- #
+def test_json_report_round_trip(capsys):
+    rc = cli_main(["--root", str(FIXTURES), "--format", "json"])
+    assert rc == 1
+    report = json.loads(capsys.readouterr().out)
+    assert report["kind"] == "repro.analysis.report"
+    assert report["version"] == 1
+    assert report["root"] == str(FIXTURES)
+    assert set(report["rules"]) == set(rule_names())
+    assert report["files_scanned"] == len(list(FIXTURES.glob("*.py")))
+    assert report["n_findings"] == len(report["findings"]) > 0
+    for d in report["findings"]:
+        f = Finding.from_dict(d)
+        assert f.to_dict() == d
+        assert f.location == f"{d['path']}:{d['line']}"
+
+
+# --------------------------------------------------------------------- #
+# CLI contract
+# --------------------------------------------------------------------- #
+def test_cli_clean_tree_exits_zero(capsys):
+    rc = cli_main([])              # default root: src/repro
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 findings" in out
+
+
+def test_cli_findings_exit_one(capsys):
+    rc = cli_main(["--root", str(FIXTURES)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "[no-bare-print]" in out
+    assert "hint:" in out
+
+
+def test_cli_rules_filter(capsys):
+    rc = cli_main(["--root", str(FIXTURES), "--rules",
+                   "no-bare-print", "--format", "json"])
+    assert rc == 1
+    report = json.loads(capsys.readouterr().out)
+    assert report["rules"] == ["no-bare-print"]
+    assert {f["rule"] for f in report["findings"]} == {"no-bare-print"}
+
+
+def test_cli_unknown_rule_exits_two(capsys):
+    rc = cli_main(["--rules", "bogus"])
+    assert rc == 2
+    assert "unknown rule" in capsys.readouterr().err
+
+
+def test_cli_missing_path_exits_two(capsys):
+    rc = cli_main(["does/not/exist.py"])
+    assert rc == 2
+
+
+def test_cli_list_rules(capsys):
+    rc = cli_main(["--list-rules"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    for name in rule_names():
+        assert name in out
+
+
+def test_module_entry_point_runs_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis"],
+        capture_output=True, text=True,
+        cwd=str(SRC.parent.parent),
+        env={"PYTHONPATH": str(SRC.parent), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# --------------------------------------------------------------------- #
+# ExperimentSpec field-partition guard (the runtime half of the
+# identity-hash rule)
+# --------------------------------------------------------------------- #
+def test_spec_partition_holds_and_registries_drive_identity():
+    import dataclasses
+
+    from repro.exp import spec as spec_mod
+
+    spec_mod._check_field_partition()   # current tree passes
+    names = {f.name for f in dataclasses.fields(spec_mod.ExperimentSpec)}
+    ident = set(spec_mod._IDENTITY_FIELDS)
+    excl = set(spec_mod._EXCLUDED_FIELDS)
+    assert ident | excl == names and not ident & excl
+    s = spec_mod.ExperimentSpec()
+    assert set(s.identity()) == ident
+
+
+def test_spec_partition_guard_raises_on_drift(monkeypatch):
+    from repro.exp import spec as spec_mod
+
+    monkeypatch.setattr(spec_mod, "_IDENTITY_FIELDS",
+                        spec_mod._IDENTITY_FIELDS[:-1])
+    with pytest.raises(AssertionError, match="unclassified"):
+        spec_mod._check_field_partition()
+    monkeypatch.setattr(spec_mod, "_EXCLUDED_FIELDS",
+                        spec_mod._EXCLUDED_FIELDS + ("bogus",))
+    with pytest.raises(AssertionError, match="not fields"):
+        spec_mod._check_field_partition()
+
+
+def test_identity_hash_stable_across_refactor():
+    # the registry refactor must not move the hash: pin the exact keys
+    # identity() exposes (resume keys in checked-in reports depend on it)
+    from repro.exp.spec import ExperimentSpec
+
+    s = ExperimentSpec()
+    assert set(s.identity()) == {"methods", "scenarios", "n_ai_requests",
+                                 "rho", "epoch_interval", "max_events",
+                                 "scenario_seed"}

@@ -16,7 +16,6 @@ Three contracts pinned here:
     ``src/repro`` calls bare ``print()`` (CLIs with a ``__main__`` guard
     excepted) — diagnostics go through ``repro.obs.diag``.
 """
-import ast
 import json
 import math
 import pathlib
@@ -303,29 +302,15 @@ def test_profile_separates_host_transfer_on_jax():
 
 
 # --------------------------------------------------------------------------- #
-# hygiene: no bare print() in library modules
+# hygiene: no bare print() in library modules — the one-off AST walk
+# that used to live here is now the `no-bare-print` rule in the
+# repro.analysis invariant linter; this thin test just invokes it
 # --------------------------------------------------------------------------- #
-def _has_main_guard(tree: ast.Module) -> bool:
-    for node in tree.body:
-        if isinstance(node, ast.If) and isinstance(node.test, ast.Compare) \
-                and isinstance(node.test.left, ast.Name) \
-                and node.test.left.id == "__name__":
-            return True
-    return False
-
-
 def test_no_bare_print_in_library_modules():
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        tree = ast.parse(path.read_text(), filename=str(path))
-        if _has_main_guard(tree):
-            continue                      # __main__-guarded CLI module
-        for node in ast.walk(tree):
-            if isinstance(node, ast.Call) \
-                    and isinstance(node.func, ast.Name) \
-                    and node.func.id == "print":
-                offenders.append(
-                    f"{path.relative_to(SRC)}:{node.lineno}")
-    assert not offenders, (
+    from repro.analysis import analyze
+
+    findings, n_files = analyze(rule_filter=["no-bare-print"])
+    assert n_files > 0
+    assert not findings, (
         "bare print() in library modules (route diagnostics through "
-        f"repro.obs.diag): {offenders}")
+        f"repro.obs.diag): {[f.location for f in findings]}")
